@@ -1,0 +1,74 @@
+"""TimeFloats matmul micro-benchmarks.
+
+On this CPU container the Pallas kernel runs in interpret mode (Python), so
+its wall time is NOT the TPU figure — we benchmark (a) the XLA separable
+path wall-time vs a plain bf16 matmul (the quantization overhead XLA would
+also pay on TPU hosts), (b) accuracy vs K for all modes, and (c) the
+kernel's structural VMEM footprint per BlockSpec tile (the quantity that
+determines TPU occupancy; see kernels/timefloats_matmul.py header).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import timefloats as tf
+from repro.core.timefloats import TFConfig
+
+
+def timeit(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(report):
+    m, k, n = 256, 1024, 512
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+
+    bf16 = jax.jit(lambda a, b: (a.astype(jnp.bfloat16)
+                                 @ b.astype(jnp.bfloat16)))
+    sep = jax.jit(lambda a, b: tf.matmul_separable(a, b, TFConfig()))
+    t_bf = timeit(bf16, x, w)
+    t_sep = timeit(sep, x, w)
+    report("kernel/bf16_matmul_us", t_bf, f"{m}x{k}x{n} XLA CPU")
+    report("kernel/timefloats_separable_us", t_sep,
+           f"quantize+align+int-mac, overhead {t_sep / t_bf:.1f}x")
+
+    # accuracy vs K (error grows ~sqrt(K) for FP8 operands)
+    for kk in (64, 256, 1024):
+        xx = jax.random.normal(jax.random.PRNGKey(kk), (64, kk))
+        ww = jax.random.normal(jax.random.PRNGKey(kk + 1), (kk, 64))
+        ref = xx @ ww
+        for mode in ("exact", "separable"):
+            y = tf._scaled_matmul(xx, ww, TFConfig(mode=mode))
+            rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+            report(f"kernel/relerr_{mode}_k{kk}", rel * 100, "% rel L2")
+
+    # structural VMEM accounting for the default BlockSpec tile
+    bm, bn, bc, blk = 256, 256, 8, 64
+    vmem = (bc * bm * blk  # qx int8
+            + bc * blk * bn  # qw int8
+            + bm * bn * 4    # out f32
+            + bc * (bm + bn) * 4)  # scales
+    report("kernel/vmem_per_tile_KiB", vmem / 1024,
+           "default tile; v5e VMEM = 16 MiB")
+    assert vmem < 16 * 1024 * 1024 / 4  # 4x headroom for double buffering
+
+    # sparsity the alignment produces on wide-dynamic-range data
+    xw = jax.random.normal(jax.random.PRNGKey(7), (32, 256)) * jnp.exp2(
+        jax.random.randint(jax.random.PRNGKey(8), (32, 256), -6, 7
+                           ).astype(jnp.float32))
+    ws = jax.random.normal(jax.random.PRNGKey(9), (256, 32))
+    report("kernel/shift_sparsity_widerange",
+           float(tf.expected_sparsity(xw, ws, TFConfig())) * 100,
+           "% chunk terms zeroed (paper: 'enhances sparsity')")

@@ -1,0 +1,118 @@
+"""Roofline table generator: reads results/dryrun.json (produced by
+`python -m repro.launch.dryrun --all --both-meshes --out results/dryrun.json`)
+and emits the per-(arch x shape x mesh) three-term roofline table used by
+EXPERIMENTS.md §Roofline.
+
+Terms (per device, TPU v5e-class constants):
+  t_compute    = census FLOPs / 197 TFLOP/s
+  t_memory     = census bytes / 819 GB/s      (fusion-shallow upper bound)
+  t_memory_dot = dot-only bytes / 819 GB/s    (lower bound)
+  t_collective = ring-weighted collective bytes / 50 GB/s
+
+Roofline fraction reported = t_compute / max(all terms) — how close the
+cell is to being compute-bound at the HLO level; MODEL_FLOPS/HLO_FLOPS
+separates "useful" from total compute.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def load(path: str = RESULTS) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fraction(rec: Dict) -> Optional[float]:
+    if rec.get("status") != "ok":
+        return None
+    terms = [rec["t_compute_s"], rec["t_memory_s"], rec["t_collective_s"]]
+    hi = max(terms)
+    return rec["t_compute_s"] / hi if hi > 0 else None
+
+
+def table(records: List[Dict], mesh: str = "16x16",
+          variant: str = "baseline") -> List[Dict]:
+    rows = []
+    for r in records:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("variant", "baseline") != variant:
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r.get("status", "?")})
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute_s": r["t_compute_s"],
+            "t_memory_s": r["t_memory_s"],
+            "t_memory_dot_s": r.get("t_memory_dot_s", 0.0),
+            "t_collective_s": r["t_collective_s"],
+            "dominant": r["dominant"],
+            "roofline_fraction": fraction(r),
+            "useful_flops_ratio": r.get("useful_flops_ratio"),
+            "hbm_temp_gb": (r.get("memory", {}).get("temp_size_in_bytes")
+                            or 0) / 1e9,
+        })
+    return rows
+
+
+def markdown(records: List[Dict], mesh: str = "16x16") -> str:
+    rows = table(records, mesh)
+    out = [f"### Roofline — mesh {mesh}",
+           "| arch | shape | t_comp (s) | t_mem (s) | t_mem_dot (s) | "
+           "t_coll (s) | dominant | roofline frac | useful/HLO | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"{r['status'][:40]} | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_memory_dot_s']:.3g} | "
+            f"{r['t_collective_s']:.3g} | {r['dominant']} | "
+            f"{r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['hbm_temp_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def run(report):
+    recs = load()
+    if not recs:
+        report("roofline/available", 0, "results/dryrun.json missing — run "
+               "python -m repro.launch.dryrun --all --both-meshes first")
+        return
+    ok = [r for r in recs if r.get("status") == "ok"
+          and r.get("variant", "baseline") == "baseline"]
+    report("roofline/cells_ok", len(ok), f"of {len(recs)} recorded")
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in ok if r["mesh"] == mesh]
+        if not sub:
+            continue
+        fracs = [fraction(r) for r in sub]
+        report(f"roofline/{mesh}_mean_fraction",
+               sum(fracs) / len(fracs), "t_comp / max-term, mean over cells")
+        worst = min(sub, key=fraction)
+        report(f"roofline/{mesh}_worst_cell",
+               fraction(worst), f"{worst['arch']}x{worst['shape']}")
+        dom = {}
+        for r in sub:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        for k, v in sorted(dom.items()):
+            report(f"roofline/{mesh}_dominant_{k}", v, "cells")
+
+
+if __name__ == "__main__":
+    recs = load()
+    for mesh in ("16x16", "2x16x16"):
+        print(markdown(recs, mesh))
+        print()

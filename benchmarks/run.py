@@ -1,0 +1,56 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1 fig7
+
+Prints ``name,value,note`` CSV lines (the harness contract) and a summary.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (ablation_formats, fig3_linearity, fig7_variability,
+                        kernel_bench, roofline, table1_energy,
+                        table2_comparison)
+
+MODULES = {
+    "table1": table1_energy,
+    "table2": table2_comparison,
+    "fig3": fig3_linearity,
+    "fig7": fig7_variability,
+    "kernel": kernel_bench,
+    "formats": ablation_formats,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    picks = [a for a in sys.argv[1:] if a in MODULES] or list(MODULES)
+    failures = []
+    print("name,value,note")
+    for name in picks:
+        mod = MODULES[name]
+        t0 = time.time()
+
+        def report(key, value, note=""):
+            if isinstance(value, float):
+                print(f"{key},{value:.6g},{note}")
+            else:
+                print(f"{key},{value},{note}")
+
+        try:
+            mod.run(report)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # keep going; report at the end
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {[n for n, _ in failures]}")
+        raise SystemExit(1)
+    print("# all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

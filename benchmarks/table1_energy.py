@@ -1,0 +1,38 @@
+"""Table I reproduction: per-module energy of a 64-element 8-bit FP scalar
+product, total pJ, and the headline TOPS/W.
+
+Also projects the model onto a real workload: one TimeFloats forward pass
+of the paper-scale MLP and of qwen3-0.6b's projection matmuls, reporting
+effective TOPS/W including K-padding waste.
+"""
+from __future__ import annotations
+
+from repro.core import energy
+
+
+def rows():
+    out = []
+    for name, pj in energy.TABLE1_PJ.items():
+        out.append({"module": name, "energy_pj": pj})
+    out.append({"module": "TOTAL", "energy_pj": energy.chunk_energy_pj()})
+    return out
+
+
+def run(report):
+    for r in rows():
+        report(f"table1/{r['module']}", r["energy_pj"], "pJ")
+    tops = energy.tops_per_watt()
+    report("table1/tops_per_watt", tops, "TOPS/W (paper: 22.1)")
+    assert abs(tops - 22.1) < 0.1, tops
+
+    # workload projections
+    mlp = energy.model_energy([(1, 256, 128), (1, 128, 10)])
+    report("table1/mlp_fwd_energy_nJ", mlp.total_pj / 1e3, "nJ")
+    report("table1/mlp_tops_per_watt", mlp.tops_per_watt, "TOPS/W")
+    # qwen3-0.6b: one token's projection matmuls (d=1024, q/k/v/o + mlp)
+    d, hd, ff, v = 1024, 2048, 3072, 151936
+    shapes = [(1, d, hd), (1, d, 1024), (1, d, 1024), (1, hd, d),
+              (1, d, ff), (1, d, ff), (1, ff, d), (1, d, v)]
+    qwen = energy.model_energy(shapes)
+    report("table1/qwen3_token_energy_uJ", qwen.total_pj / 1e6, "uJ/token")
+    report("table1/qwen3_tops_per_watt", qwen.tops_per_watt, "TOPS/W")

@@ -1,0 +1,97 @@
+"""Edge learning with train-in-memory (the paper's deployment scenario):
+train a small MLP classifier entirely with TimeFloats arithmetic — forward,
+backward, AND weight storage on the E4M4 grid (in-situ updates with
+stochastic rounding) — and compare against an fp32 baseline.
+
+    PYTHONPATH=src python examples/train_edge_mlp.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, float8, timefloats as tf
+from repro.core.timefloats import TFConfig
+from repro.data.synthetic import classification_data
+
+IN_DIM, HIDDEN, CLASSES = 64, 128, 10
+STEPS, LR, BATCH = 200, 0.08, 128
+
+
+def init(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (IN_DIM, HIDDEN)) / np.sqrt(IN_DIM),
+        "w2": jax.random.normal(k2, (HIDDEN, CLASSES)) / np.sqrt(HIDDEN),
+    }
+
+
+def make_step(mode, cfg: TFConfig | None):
+    def fwd(params, x):
+        if cfg is None:
+            h = jax.nn.relu(x @ params["w1"])
+            return h @ params["w2"]
+        h = jax.nn.relu(tf.linear(x, params["w1"], cfg))
+        return tf.linear(h, params["w2"], cfg)
+
+    @jax.jit
+    def step(params, x, y, key):
+        def loss(p):
+            lp = jax.nn.log_softmax(fwd(p, x))
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+
+        l, g = jax.value_and_grad(loss)(params)
+        new = jax.tree.map(lambda p, g_: p - LR * g_, params, g)
+        if mode == "insitu":  # weights live on the E4M4 grid (per-tensor
+            # reference scale = the chip's programmable V_B)
+            keys = jax.random.split(key, len(new))
+            new = {k: float8.quantize_scaled(v, stochastic_key=kk)
+                   for (k, v), kk in zip(sorted(new.items()), keys)}
+        return new, l
+
+    return fwd, step
+
+
+def accuracy(fwd, params, x, y):
+    return float(jnp.mean(jnp.argmax(fwd(params, x), -1) == y) * 100)
+
+
+def main():
+    kd, ki = jax.random.split(jax.random.PRNGKey(0))
+    # one draw, one set of class centers; split train/test
+    x_all, y_all = classification_data(kd, 5120, IN_DIM, CLASSES,
+                                       margin=0.35)  # non-trivial overlap
+    x_tr, y_tr = x_all[:4096], y_all[:4096]
+    x_te, y_te = x_all[4096:], y_all[4096:]
+    runs = {
+        "fp32": (None, "float32 baseline"),
+        "timefloats": (TFConfig(mode="separable"), "FP8 fwd/bwd, fp32 master"),
+        "insitu": (TFConfig(mode="separable"),
+                   "FP8 fwd/bwd + E4M4 weight storage (paper mode)"),
+    }
+    results = {}
+    for name, (cfg, desc) in runs.items():
+        mode = "insitu" if name == "insitu" else "master"
+        fwd, step = make_step(mode, cfg)
+        params = init(ki)
+        for s in range(STEPS):
+            idx = jax.random.randint(jax.random.fold_in(kd, 100 + s),
+                                     (BATCH,), 0, x_tr.shape[0])
+            params, l = step(params, x_tr[idx], y_tr[idx],
+                             jax.random.fold_in(ki, s))
+        acc = accuracy(fwd, params, x_te, y_te)
+        results[name] = acc
+        print(f"{name:12s} ({desc:45s}) test acc = {acc:5.1f}%")
+
+    # projected on-chip energy for one inference batch (Table I model)
+    shapes = [(1024, IN_DIM, HIDDEN), (1024, HIDDEN, CLASSES)]
+    rep = energy.model_energy(shapes)
+    print(f"\nTimeFloats-chip inference energy for the test set: "
+          f"{rep.total_joules * 1e9:.1f} nJ "
+          f"({rep.tops_per_watt:.1f} TOPS/W)")
+    assert results["timefloats"] > results["fp32"] - 5.0
+    assert results["insitu"] > results["fp32"] - 8.0
+    print("train-in-memory matches the fp32 baseline within a few points.")
+
+
+if __name__ == "__main__":
+    main()

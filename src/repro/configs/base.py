@@ -1,0 +1,221 @@
+"""Model / run configuration schema.
+
+One `ModelConfig` describes any architecture in the assigned pool: dense
+GQA transformers, MLA+MoE (deepseek/kimi), SSM (mamba2 SSD), hybrid
+attention+SSM (hymba), audio (musicgen backbone) and VLM (paligemma
+backbone). Frozen dataclasses → hashable → usable as jit static args.
+
+`quant="timefloats"` routes every projection matmul through the paper's
+arithmetic (core.timefloats.linear); `quant="none"` is the bf16 baseline the
+paper compares against implicitly (and our §Perf baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.timefloats import TFConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                      # per-expert FFN width
+    num_shared: int = 0                # shared (always-on) experts
+    first_k_dense: int = 0             # leading dense layers (deepseek: 3)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    router_z_coef: float = 1e-4
+    # Expert-parallel sharding of the dispatch buffers: "auto" lets the SPMD
+    # partitioner place the (E, C, D) buffers (it chooses replicated buffers
+    # + FSDP-style expert compute); "constrained" forces experts->model.
+    # Measured on the deepseek-v3 train_4k dry-run cell: "constrained" makes
+    # XLA reshard the token scatter catastrophically (114 GB temp, 10x the
+    # collective bytes) — kept as a knob because it documents a refuted
+    # hypothesis (EXPERIMENTS.md §Perf) and helps future meshes.
+    ep_mode: str = "auto"
+    # Token-chunked dispatch (§Perf I-5): process the flattened token dim in
+    # scanned chunks of this many tokens so only one (E, C_chunk, D) buffer
+    # is alive at a time. 0 = single-shot. Capacity is enforced per chunk
+    # (slightly *more* uniform than global capacity). Bounds the 32k-prefill
+    # MoE working set that otherwise overflows HBM (267-277 GB/device).
+    dispatch_chunk: int = 0
+    shared_d_ff: int = 0               # width of the shared expert(s)
+    dense_d_ff: int = 0                # FFN width of the first_k_dense layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256                   # SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Hymba-style parallel attention+SSM heads."""
+
+    meta_tokens: int = 128
+    sliding_window: int = 1024
+    # layer indices with full (global) attention; all others sliding-window.
+    global_layers: Tuple[int, ...] = ()
+    # cross-layer KV sharing from the paper is a memory optimization we do
+    # not implement (breaks layer-homogeneous scan); noted in DESIGN.md.
+
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int                        # 0 for attention-free (ssm)
+    n_kv_heads: int
+    d_ff: int                           # dense FFN width (0 if pure MoE/ssm)
+    vocab_size: int
+    head_dim: int = 0                   # 0 -> d_model // n_heads
+    # Computational head padding (beyond-paper perf knob, §Perf I-4): pad
+    # the per-kv-group q-head count so total heads divide the model axis
+    # (56 heads on model=16 -> 16x replicated attention otherwise). Padded
+    # heads are hard-masked at the attention output, so the function and
+    # its gradients are EXACTLY the unpadded model's (pad rows stay zero
+    # through training); cost is the pad fraction of attention FLOPs.
+    head_pad_to: int = 0                # 0 = no padding; else pad H up to it
+    # --- block flavor ---
+    mlp_variant: Literal["swiglu", "gelu", "geglu", "none"] = "swiglu"
+    norm_variant: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    pos_variant: Literal["rope", "sinusoidal", "none"] = "rope"
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    embed_scale: bool = False           # gemma: scale embeddings by sqrt(d)
+    # --- family sub-configs ---
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # --- modality frontends (stubs per assignment) ---
+    num_codebooks: int = 1              # musicgen: 4 (summed embeddings, 4 heads)
+    num_prefix_tokens: int = 0          # paligemma: 256 SigLIP patch embeddings
+    prefix_bidirectional: bool = False  # paligemma prefix-LM mask
+    # --- quantization (the paper's technique) ---
+    quant: Literal["none", "timefloats"] = "timefloats"
+    tf: TFConfig = TFConfig(mode="separable")
+    # --- numerics / memory ---
+    dtype: str = "bfloat16"
+    # Parameter storage dtype. f32 default; the >=600B-param cells set bf16
+    # (with adafactor) so params + optimizer state fit 16 GB/chip HBM. The
+    # paper-faithful in-situ mode additionally requantizes to E4M4 on every
+    # update (optim.insitu) — the container dtype stays as configured here.
+    param_dtype: str = "float32"
+    remat: Literal["none", "full", "dots"] = "full"
+    q_block: int = 1024                 # blockwise-attention tile sizes
+    kv_block: int = 1024
+    # --- misc ---
+    sliding_window: Optional[int] = None  # non-hybrid SWA (unused by pool)
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        assert self.n_heads > 0
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_heads(self) -> int:
+        """Computational head count (kv-group-aligned padding; see
+        head_pad_to). Always a multiple of n_kv_heads."""
+        if not self.head_pad_to or self.head_pad_to <= self.n_heads:
+            return self.n_heads
+        hkv = max(self.n_kv_heads, 1)
+        g = -(-self.head_pad_to // hkv)  # ceil target group size
+        return hkv * g
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer structural kind; consecutive equal kinds share one scan
+        (grouped scan-over-layers — see models/model.py)."""
+        kinds = []
+        for i in range(self.n_layers):
+            if self.family == "ssm":
+                kinds.append("ssm")
+            elif self.family == "hybrid":
+                glob = self.hybrid and i in self.hybrid.global_layers
+                kinds.append("hybrid_global" if glob else "hybrid_swa")
+            elif self.family == "moe":
+                assert self.moe is not None
+                kinds.append("dense" if i < self.moe.first_k_dense else "moe")
+            else:
+                kinds.append("dense")
+        return tuple(kinds)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D roofline bookkeeping)."""
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+
+def reduced_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family variant for CPU smoke tests: few layers, small width,
+    few experts, tiny vocab — structure preserved."""
+    changes: dict = dict(
+        n_layers=min(cfg.n_layers, 2 + (cfg.moe.first_k_dense if cfg.moe else 0)),
+        d_model=128,
+        n_heads=max(min(cfg.n_heads, 4), 0),
+        n_kv_heads=max(min(cfg.n_kv_heads, 2), 0),
+        d_ff=min(cfg.d_ff, 256) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        head_dim=32 if cfg.n_heads else 0,
+        q_block=64,
+        kv_block=64,
+        remat="none",
+    )
+    if cfg.moe:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=8, top_k=2, d_expert=64,
+            shared_d_ff=64 if cfg.moe.shared_d_ff else 0,
+            first_k_dense=min(cfg.moe.first_k_dense, 1))
+    if cfg.mla:
+        changes["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                   qk_nope_head_dim=32, qk_rope_head_dim=16,
+                                   v_head_dim=32)
+    if cfg.ssm:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=16,
+                                             chunk=32)
+    if cfg.hybrid:
+        changes["hybrid"] = dataclasses.replace(
+            cfg.hybrid, meta_tokens=8, sliding_window=32,
+            global_layers=(0,))
+    if cfg.num_prefix_tokens:
+        changes["num_prefix_tokens"] = 8
+    return dataclasses.replace(cfg, **changes)

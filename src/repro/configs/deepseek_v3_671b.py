@@ -1,0 +1,40 @@
+"""DeepSeek-V3 671B — MLA + MoE (1 shared + 256 routed, top-8), per the
+assigned pool row: 61L d_model=7168 128H d_ff=2048 vocab=129280
+[arXiv:2412.19437; hf].
+
+MLA dims from the paper: q_lora 1536, kv_lora 512, nope 128, rope 64,
+v 128. First 3 layers dense (width 18432). The row's "GQA kv=128" is the
+MLA head count (every head reads the shared latent). MTP (multi-token
+prediction) is not implemented — noted in DESIGN.md; the sigmoid
+aux-loss-free router is replaced by softmax+aux (DESIGN.md §Arch).
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=129280,
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        d_expert=2048,
+        num_shared=1,
+        shared_d_ff=2048,
+        first_k_dense=3,
+        dense_d_ff=18432,
+        capacity_factor=1.25,
+    ),
+)

@@ -1,0 +1,36 @@
+"""Hymba-1.5B hybrid (parallel attention + mamba heads), per the assigned
+pool row: 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001
+ssm_state=16 [arXiv:2411.13676; hf].
+
+128 meta tokens prepended (window-exempt global registers); sliding-window
+attention everywhere except 3 global layers (first/middle/last, per the
+paper). Cross-layer KV sharing not implemented (DESIGN.md). long_500k
+applies: SWA + O(1) SSM state bound the decode working set; the 3 global
+layers keep full KV (B=1 × 512k × 5 kv-heads × 64 — fits comfortably).
+"""
+from repro.configs.base import HybridConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm=SSMConfig(
+        d_state=16,
+        d_conv=4,
+        expand=2,
+        head_dim=64,
+        n_groups=1,
+        chunk=256,
+    ),
+    hybrid=HybridConfig(
+        meta_tokens=128,
+        sliding_window=1024,
+        global_layers=(0, 15, 31),
+    ),
+)

@@ -1,0 +1,31 @@
+"""Kimi K2 — trillion-parameter MoE (384 experts, top-8), per the assigned
+pool spec: 61L d_model=7168 64H (GQA kv=8) d_ff=2048 vocab=163840.
+
+Pool row [arXiv:2501.kimi2; unverified]. Where the row is silent we follow
+the public Kimi-K2 card: 1 leading dense layer (width 11264 — not in the
+row; documented source), 1 shared expert (2048). The row pins GQA kv=8 (not
+MLA), so this config uses standard GQA attention.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=2048,
+    vocab_size=163840,
+    moe=MoEConfig(
+        num_experts=384,
+        top_k=8,
+        d_expert=2048,
+        num_shared=1,
+        shared_d_ff=2048,
+        first_k_dense=1,
+        dense_d_ff=11264,
+        capacity_factor=1.25,
+    ),
+)

@@ -1,0 +1,31 @@
+"""Mamba2-1.3B — attention-free SSD state-space model, per the assigned
+pool row: 48L d_model=2048 d_ff=0 vocab=50280 ssm_state=128
+[arXiv:2405.21060; unverified].
+
+Pure mamba blocks (no FFN sub-block): expand=2 → d_inner=4096,
+head_dim=64 → 64 SSD heads, 1 group. Tied embeddings per the public model.
+long_500k applies: decode state is O(1) in context length.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    mlp_variant="none",
+    pos_variant="none",
+    vocab_size=50280,
+    tie_embeddings=True,
+    ssm=SSMConfig(
+        d_state=128,
+        d_conv=4,
+        expand=2,
+        head_dim=64,
+        n_groups=1,
+        chunk=256,
+    ),
+)

@@ -1,0 +1,28 @@
+"""MusicGen-large decoder backbone over EnCodec tokens, per the assigned
+pool row: 48L d_model=2048 32H (MHA) d_ff=8192 vocab=2048
+[arXiv:2306.05284; hf].
+
+Backbone only per the assignment: the EnCodec frontend is a stub —
+input_specs() provides the 4 codebook token streams directly (delay-pattern
+interleaving is a data-pipeline concern). 4 summed codebook embeddings in,
+4 prediction heads out. GELU MLP, LayerNorm, sinusoidal positions (no RoPE),
+matching the public implementation. Text cross-attention conditioning is
+out of backbone scope (stubbed away).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    num_codebooks=4,
+    mlp_variant="gelu",
+    norm_variant="layernorm",
+    pos_variant="sinusoidal",
+)

@@ -1,0 +1,28 @@
+"""PaliGemma-3B backbone (gemma-2b decoder), per the assigned pool row:
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=257216
+[arXiv:2407.07726; hf].
+
+The SigLIP vision tower is a stub per the assignment: input_specs()
+provides 256 precomputed patch embeddings (B, 256, d_model), prepended to
+the text sequence with the PaliGemma prefix-LM mask (bidirectional over the
+image prefix, causal over text). Gemma details: head_dim 256, GeGLU,
+embeddings scaled by sqrt(d), tied LM head.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    mlp_variant="geglu",
+    embed_scale=True,
+    tie_embeddings=True,
+    num_prefix_tokens=256,
+    prefix_bidirectional=True,
+)

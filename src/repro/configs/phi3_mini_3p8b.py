@@ -1,0 +1,17 @@
+"""Phi-3-mini 3.8B dense (RoPE SwiGLU), per the assigned pool row:
+32L d_model=3072 32H (GQA kv=32 — i.e. MHA) d_ff=8192 vocab=32064
+[arXiv:2404.14219; unverified].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+)

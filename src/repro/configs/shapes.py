@@ -1,0 +1,101 @@
+"""The four assigned input-shape cells and their ShapeDtypeStruct stand-ins.
+
+Cells (LM-family; seq_len × global_batch):
+    train_4k     S=4096   B=256   -> lowers train_step
+    prefill_32k  S=32768  B=32    -> lowers serve prefill forward
+    decode_32k   S=32768  B=128   -> lowers serve_step (1 token, KV cache S)
+    long_500k    S=524288 B=1     -> decode; SSM/hybrid only (sub-quadratic)
+
+Sequence convention (DESIGN.md / models/model.py): seq_len counts the TOTAL
+model sequence including modality prefixes — paligemma text = S-256 patches,
+hymba text = S-128 meta tokens — so attention tiles stay aligned.
+
+`input_specs()` returns weak-type-correct ShapeDtypeStructs: the dry-run
+lowers against these without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode" | "long_decode"
+
+
+CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "long_decode"),
+}
+
+
+def applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (SSM/hybrid); see DESIGN.md."""
+    if cell.kind == "long_decode" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("SKIP: pure full-attention arch has no sub-quadratic "
+                       "mechanism for 512k decode (DESIGN.md §Arch)")
+    return True, ""
+
+
+def text_len(cfg: ModelConfig, cell: ShapeCell) -> int:
+    return cell.seq_len - model_lib.prefix_length(cfg)
+
+
+def token_spec(cfg: ModelConfig, b: int, s: int) -> jax.ShapeDtypeStruct:
+    if cfg.family == "audio":
+        return jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell,
+                      micro_batch: int | None = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Per-step GLOBAL batch specs (grad accumulation reshapes inside the
+    train step; see train/step.py)."""
+    b = micro_batch or cell.global_batch
+    s = text_len(cfg, cell)
+    specs = {
+        "tokens": token_spec(cfg, b, s),
+        "labels": token_spec(cfg, b, s),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = cell.global_batch, text_len(cfg, cell)
+    specs = {"tokens": token_spec(cfg, b, s)}
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell):
+    """(cache_specs, token_spec) for serve_step lowering."""
+    b, s = cell.global_batch, cell.seq_len
+    cache = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, b, s))
+    tokens = token_spec(cfg, b, 1)
+    return cache, tokens
+
+
+def synth_batch(cfg: ModelConfig, b: int, s: int, key) -> Dict[str, jax.Array]:
+    """Small concrete batch for smoke tests / examples."""
+    from repro.data.synthetic import lm_batch
+
+    return lm_batch(cfg, b, s, key)

@@ -1,0 +1,12 @@
+"""TimeFloats core: FP8 codec, 5-step scalar products, analog sim, energy."""
+from repro.core.float8 import E4M3, E4M4, E5M2, FloatFormat  # noqa: F401
+from repro.core.timefloats import (  # noqa: F401
+    DEFAULT,
+    NoiseParams,
+    TFConfig,
+    linear,
+    matmul,
+    matmul_exact,
+    matmul_separable,
+    scalar_product_steps,
+)

@@ -1,0 +1,122 @@
+"""Behavioral simulation of TimeFloats' analog circuits (Figs. 3, 5, 6).
+
+The paper's circuit mechanism — RC-path discharge for exponent addition,
+time-pulse crossbar MAC with charge integration — has no TPU analogue
+(DESIGN.md §2); this module reproduces the *circuit-level claims* (Fig 3b
+linearity, Fig 7 variability sensitivity) as a vectorized, vmappable JAX
+simulation, which is what replaces the paper's HSPICE runs in this build.
+
+Electrical constants follow the paper: TiO2 memristors with resistance
+0.1 MΩ – 1 MΩ, 15 ns maximum pulse width for 4-bit input application.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CircuitParams:
+    r_min: float = 0.1e6  # Ohm (paper: 0.1 MΩ)
+    r_max: float = 1.0e6  # Ohm (paper: 1 MΩ)
+    c_line: float = 50e-15  # F — bitline cap; sets the discharge timescale
+    vdd: float = 0.8  # V (15nm-class rail)
+    v_th: float = 0.4  # comparator threshold
+    t_max: float = 15e-9  # s — paper: max pulse width for 4-bit inputs
+    c_int: float = 1e-12  # F — column integrator feedback cap
+    g_unit: float = 1e-6  # S — conductance LSB for mantissa storage
+    code_bits: int = 4
+
+    @property
+    def r_lsb(self) -> float:
+        return (self.r_max - self.r_min) / ((1 << self.code_bits) - 1)
+
+
+DEFAULT_CIRCUIT = CircuitParams()
+
+
+def code_to_resistance(code: Array, p: CircuitParams = DEFAULT_CIRCUIT) -> Array:
+    """4-bit exponent code -> programmed memristor resistance (linear map)."""
+    return p.r_min + code.astype(jnp.float32) * p.r_lsb
+
+
+def discharge_delay(r_total: Array, p: CircuitParams = DEFAULT_CIRCUIT) -> Array:
+    """RC discharge: V(t) = VDD e^{-t/RC}; comparator fires at V_th.
+
+    t = R C ln(VDD / V_th) — linear in R_total, hence in the summed exponent
+    codes when R is linear in code. This is Fig. 3's mechanism.
+    """
+    return r_total * p.c_line * jnp.log(p.vdd / p.v_th)
+
+
+def exponent_adder_delay(
+    input_code: Array,
+    weight_code: Array,
+    p: CircuitParams = DEFAULT_CIRCUIT,
+    *,
+    sigma_r: float = 0.0,
+    key: Array | None = None,
+) -> Array:
+    """Time pulse for e_x + e_w: series resistance R(e_x) + R(e_w) discharges
+    the precharged line (Fig 3a). Optional lognormal-ish resistance
+    variability (multiplicative Gaussian on R), the paper's process model."""
+    r = code_to_resistance(input_code, p) + code_to_resistance(weight_code, p)
+    if sigma_r > 0.0 and key is not None:
+        r = r * (1.0 + sigma_r * jax.random.normal(key, r.shape, jnp.float32))
+    return discharge_delay(r, p)
+
+
+def delay_to_code(t: Array, p: CircuitParams = DEFAULT_CIRCUIT,
+                  max_code: int = 30) -> Array:
+    """Clocked comparator output: quantize pulse width back to an integer
+    exponent-sum code (time-to-digital)."""
+    t0 = discharge_delay(jnp.asarray(2 * p.r_min, jnp.float32), p)
+    lsb = discharge_delay(jnp.asarray(p.r_lsb, jnp.float32), p)
+    return jnp.clip(jnp.round((t - t0) / lsb), 0, max_code).astype(jnp.int32)
+
+
+def linearity_r2(p: CircuitParams = DEFAULT_CIRCUIT) -> float:
+    """R² of delay vs. exponent-sum code over all 16x16 code pairs (Fig 3b)."""
+    ix, wx = jnp.meshgrid(jnp.arange(16), jnp.arange(16), indexing="ij")
+    t = exponent_adder_delay(ix.ravel(), wx.ravel(), p)
+    s = (ix + wx).ravel().astype(jnp.float32)
+    s_c = s - s.mean()
+    t_c = t - t.mean()
+    r = jnp.sum(s_c * t_c) / jnp.sqrt(jnp.sum(s_c**2) * jnp.sum(t_c**2))
+    return float(r**2)
+
+
+def crossbar_mac_analog(
+    pulse_widths: Array,  # (K,) seconds — time-encoded scaled mantissas
+    conductances: Array,  # (K, N) siemens — stored weight mantissas
+    p: CircuitParams = DEFAULT_CIRCUIT,
+    *,
+    sigma_g: float = 0.0,
+    key: Array | None = None,
+) -> Array:
+    """Charge-domain MAC (Fig 6): V_int[j] = (V/C_int) Σ_i T_i g_ij.
+
+    Kirchhoff does the addition over the wire; the integrator converts charge
+    to voltage. Linear in Σ T g by construction.
+    """
+    g = conductances
+    if sigma_g > 0.0 and key is not None:
+        g = g * (1.0 + sigma_g * jax.random.normal(key, g.shape, jnp.float32))
+    q = jnp.einsum("k,kn->n", pulse_widths, g) * p.vdd
+    return q / p.c_int
+
+
+def mantissa_to_pulse(mhat: Array, p: CircuitParams = DEFAULT_CIRCUIT,
+                      max_mhat: int = 31) -> Array:
+    """Scaled-significand integer -> pulse width (T-DAC of Fig 5/6)."""
+    return mhat.astype(jnp.float32) / max_mhat * p.t_max
+
+
+def mantissa_to_conductance(mhat: Array, p: CircuitParams = DEFAULT_CIRCUIT
+                            ) -> Array:
+    """Weight significand -> programmed conductance (linear G coding)."""
+    return mhat.astype(jnp.float32) * p.g_unit

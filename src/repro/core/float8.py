@@ -1,0 +1,230 @@
+"""FP8 (E4M4-style) codec used by TimeFloats.
+
+The paper stores each weight as two 4-bit memristor cells: a 4-bit exponent
+and a 4-bit mantissa, with an implicit leading-one significand bit and a
+separate sign (Sec. III-A). We model the format as:
+
+    value = sign * (1 + mantissa / 2^man_bits) * 2^(exponent - bias)
+
+with `exponent` the stored (biased) code in [0, 2^exp_bits - 1]. Zero is the
+all-zero code (exponent=0, mantissa=0, nonzero=False); subnormals are flushed
+to zero, consistent with the paper's implicit-MSB-always-one statement.
+Overflow saturates to the largest finite code (the analog array has no inf).
+
+Everything here is pure jnp and jit/vmap friendly. Decomposed "fields" are
+the common currency of the TimeFloats pipeline: the exponent adder (step 1)
+consumes stored exponent codes, the crossbar MAC (step 4) consumes integer
+significands m̂ = 2^man_bits + mantissa.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """A generic small-float format with implicit leading one."""
+
+    exp_bits: int = 4
+    man_bits: int = 4
+
+    @property
+    def bias(self) -> int:
+        # Paper: "range from negative to positive (such as -128 to 127)"
+        # i.e. the usual excess bias 2^(e-1) - 1.
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def max_exp_code(self) -> int:
+        return (1 << self.exp_bits) - 1
+
+    @property
+    def max_man_code(self) -> int:
+        return (1 << self.man_bits) - 1
+
+    @property
+    def significand_scale(self) -> int:
+        """Integer significand m̂ = significand * 2^man_bits ∈ [2^m, 2^(m+1))."""
+        return 1 << self.man_bits
+
+    @property
+    def max_value(self) -> float:
+        return (1.0 + self.max_man_code / self.significand_scale) * 2.0 ** (
+            self.max_exp_code - self.bias
+        )
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** (-self.bias)
+
+
+E4M4 = FloatFormat(exp_bits=4, man_bits=4)
+# Standard formats, for comparisons / ablations.
+E4M3 = FloatFormat(exp_bits=4, man_bits=3)
+E5M2 = FloatFormat(exp_bits=5, man_bits=2)
+
+
+class F8Fields(NamedTuple):
+    """Decomposed FP8 tensor. All int8/bool arrays of the source shape.
+
+    sign:    +1 / -1 (int8)
+    exp:     stored (biased) exponent code, 0..2^e-1 (int8; int16 would also
+             do — kept int8 since e<=5 in practice)
+    man:     stored mantissa code, 0..2^m-1 (int8)
+    nonzero: False where the encoded value is exactly zero
+    """
+
+    sign: jax.Array
+    exp: jax.Array
+    man: jax.Array
+    nonzero: jax.Array
+
+    @property
+    def shape(self):
+        return self.sign.shape
+
+    def significand(self, fmt: FloatFormat) -> jax.Array:
+        """Integer significand m̂ = 2^m + man, zeroed where value==0 (int32)."""
+        mhat = (self.man.astype(jnp.int32) + fmt.significand_scale)
+        return jnp.where(self.nonzero, mhat, 0)
+
+
+def _split(x: jax.Array):
+    """|x| = sig * 2^uexp with sig in [1,2). Returns (sig f32, uexp i32)."""
+    ax = jnp.abs(x).astype(jnp.float32)
+    m, e = jnp.frexp(ax)  # ax = m * 2^e, m in [0.5, 1)
+    return m * 2.0, e - 1
+
+
+def decompose(
+    x: jax.Array,
+    fmt: FloatFormat = E4M4,
+    *,
+    stochastic_key: jax.Array | None = None,
+) -> F8Fields:
+    """Quantize `x` to `fmt` and return the decomposed fields.
+
+    Round-to-nearest-even on the mantissa by default; pass `stochastic_key`
+    for stochastic rounding (used by the in-situ weight-update mode, a
+    standard trick for low-precision training the paper's premise [1] leans
+    on).
+    """
+    x = x.astype(jnp.float32)
+    sig, uexp = _split(x)
+    scale = fmt.significand_scale
+    frac = (sig - 1.0) * scale  # in [0, scale)
+    if stochastic_key is not None:
+        noise = jax.random.uniform(stochastic_key, x.shape, jnp.float32)
+        man = jnp.floor(frac + noise)
+    else:
+        # ties-to-even via jnp.round
+        man = jnp.round(frac)
+    # mantissa round-up overflow: sig -> 2.0 means exp += 1, man = 0
+    carry = man >= scale
+    man = jnp.where(carry, 0.0, man)
+    uexp = uexp + carry.astype(uexp.dtype)
+
+    stored = uexp + fmt.bias
+    # Underflow: flush to zero (stored < 0 after rounding).
+    nonzero = (stored >= 0) & jnp.isfinite(x) & (x != 0.0)
+    # Overflow: saturate to max finite code.
+    over = stored > fmt.max_exp_code
+    stored = jnp.clip(stored, 0, fmt.max_exp_code)
+    man = jnp.where(over, fmt.max_man_code, man)
+
+    sign = jnp.where(jnp.signbit(x), -1, 1).astype(jnp.int8)
+    exp = jnp.where(nonzero, stored, 0).astype(jnp.int8)
+    man_i = jnp.where(nonzero, man, 0.0).astype(jnp.int8)
+    return F8Fields(sign=sign, exp=exp, man=man_i, nonzero=nonzero)
+
+
+def exp2i(e: jax.Array) -> jax.Array:
+    """Exact 2^e for integer e (f32). jnp.exp2 lowers to exp(x*ln2) on CPU
+    and is 1 ulp off for some integers — fatal for power-of-two scaling,
+    which must be lossless (tests/test_float8.py e5m2 roundtrip)."""
+    return jnp.ldexp(jnp.ones((), jnp.float32), e.astype(jnp.int32))
+
+
+def compose(fields: F8Fields, fmt: FloatFormat = E4M4) -> jax.Array:
+    """Fields -> f32 values."""
+    sig = 1.0 + fields.man.astype(jnp.float32) / fmt.significand_scale
+    val = sig * exp2i(fields.exp.astype(jnp.int32) - fmt.bias)
+    val = val * fields.sign.astype(jnp.float32)
+    return jnp.where(fields.nonzero, val, 0.0)
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def quantize(x: jax.Array, fmt: FloatFormat = E4M4) -> jax.Array:
+    """Fake-quantize: f32 -> fmt -> f32."""
+    return compose(decompose(x, fmt), fmt)
+
+
+def quantize_stochastic(x: jax.Array, key: jax.Array, fmt: FloatFormat = E4M4):
+    return compose(decompose(x, fmt, stochastic_key=key), fmt)
+
+
+def pow2_amax_scale(x: jax.Array, fmt: FloatFormat = E4M4) -> jax.Array:
+    """Per-tensor power-of-two scale mapping amax near the top of the format
+    range. On the chip this is the programmable reference (bias voltage V_B
+    / conductance LSB): the stored codes are relative to it. Exact (pow2)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    target = fmt.max_exp_code - 1 - fmt.bias
+    log2a = jnp.floor(jnp.log2(jnp.maximum(amax, 1e-30)))
+    return jnp.where(amax > 0,
+                     exp2i((target - log2a).astype(jnp.int32)),
+                     jnp.ones((), jnp.float32))
+
+
+def quantize_scaled(x: jax.Array, fmt: FloatFormat = E4M4,
+                    stochastic_key: jax.Array | None = None) -> jax.Array:
+    """Scale-aware fake-quantization: Q(x·s)/s with the per-tensor pow2 amax
+    scale. This is what the in-situ weight store physically does — codes
+    live on the E4M4 grid *relative to the tensor's reference*. Without the
+    scale, weights below fmt.min_normal (2^-7 for E4M4) flush to zero and
+    training silently freezes (caught by tests/test_optim.py)."""
+    s = pow2_amax_scale(x, fmt)
+    if stochastic_key is not None:
+        return (quantize_stochastic(x.astype(jnp.float32) * s,
+                                    stochastic_key, fmt) / s).astype(x.dtype)
+    return (quantize(x.astype(jnp.float32) * s, fmt) / s).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packing — one uint8 per value, as the two 4-bit memristor cells + sign
+# folded into the mantissa MSB-side storage would be on chip. We keep sign in
+# a separate bitplane (the paper is silent on sign storage; differential
+# columns are typical). Packed form is the at-rest representation for the
+# `insitu_fp8` optimizer mode and for checkpoint size accounting.
+# ---------------------------------------------------------------------------
+
+
+class PackedF8(NamedTuple):
+    code: jax.Array  # uint8: (exp << man_bits) | man ; 0 means value 0
+    signbit: jax.Array  # uint8 {0,1}
+
+
+def pack(fields: F8Fields, fmt: FloatFormat = E4M4) -> PackedF8:
+    exp = fields.exp.astype(jnp.uint8)
+    man = fields.man.astype(jnp.uint8)
+    code = (exp << fmt.man_bits) | man
+    # Reserve code 0 for exact zero: (exp=0, man=0) nonzero values keep code 0
+    # only if they are truly the minimum normal with man 0 — disambiguate via
+    # the nonzero plane folded into signbit's second bit.
+    code = jnp.where(fields.nonzero, code, 0).astype(jnp.uint8)
+    signbit = jnp.where(fields.sign < 0, 1, 0).astype(jnp.uint8)
+    signbit = signbit | (jnp.where(fields.nonzero, 2, 0).astype(jnp.uint8))
+    return PackedF8(code=code, signbit=signbit)
+
+
+def unpack(p: PackedF8, fmt: FloatFormat = E4M4) -> F8Fields:
+    exp = (p.code >> fmt.man_bits).astype(jnp.int8)
+    man = (p.code & fmt.max_man_code).astype(jnp.int8)
+    nonzero = (p.signbit & 2) != 0
+    sign = jnp.where((p.signbit & 1) != 0, -1, 1).astype(jnp.int8)
+    return F8Fields(sign=sign, exp=jnp.where(nonzero, exp, 0),
+                    man=jnp.where(nonzero, man, 0), nonzero=nonzero)

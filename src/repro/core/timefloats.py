@@ -1,0 +1,489 @@
+"""TimeFloats scalar products: the paper's 5-step algorithm in JAX.
+
+Two matmul modes (see DESIGN.md §2):
+
+- ``exact``     — faithful reproduction of the paper's pipeline. The
+  alignment exponent is the *joint* max over the (input row, weight column)
+  pair for each 64-element crossbar chunk, exactly as the time-domain
+  tournament tree computes it. Pure jnp; used as oracle / for variability
+  Monte Carlo / small-scale training.
+- ``separable`` — the TPU-native adaptation: per (row × chunk) and
+  (chunk × column) alignment so the fixed-point MAC is a plain int8
+  dot_general on the MXU, with per-chunk rank-1 scales (microscaling,
+  block=64=crossbar height). Strictly more truncation than ``exact``
+  (quantified in tests), strictly MXU-friendly.
+- ``pallas``    — the Pallas kernel implementation of ``separable``
+  (kernels/timefloats_matmul.py); bit-identical to ``separable``.
+
+The five steps (Fig. 2 of the paper) appear literally in
+:func:`scalar_product_steps`; the batched matmuls are vectorizations of the
+same arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import float8
+from repro.core.float8 import E4M4, F8Fields, FloatFormat
+
+Array = jax.Array
+
+
+class NoiseParams(NamedTuple):
+    """Process-variability model of Sec. III-D: C -> C * (1 + N(0, sigma)),
+    applied separately to the exponent path (time-pulse representation of
+    e_x + e_w) and to the mantissa path (crossbar product-sum)."""
+
+    sigma_exp: float = 0.0
+    sigma_mant: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TFConfig:
+    """TimeFloats arithmetic configuration.
+
+    block      — crossbar height / exponent-alignment block (paper: 64).
+    adc_bits   — optional per-chunk partial-sum requantization modeling the
+                 shared SAR ADC (paper hardware: 4 bits). ``None`` bypasses
+                 (default for training quality; see DESIGN.md §2).
+    adc_mode   — "dynamic": idealized auto-ranged full-scale (per call);
+                 "fixed": worst-case full-scale block*(2^(m+1)-1)^2.
+    mode       — "exact" | "separable" | "pallas".
+    """
+
+    fmt: FloatFormat = E4M4
+    block: int = 64
+    adc_bits: int | None = None
+    adc_mode: str = "dynamic"
+    mode: str = "exact"
+
+    @property
+    def max_significand(self) -> int:
+        return 2 * self.fmt.significand_scale - 1  # e.g. 31 for m=4
+
+    @property
+    def out_scale_bias(self) -> int:
+        """Power-of-two to remove two integer significands + two exp biases."""
+        return 2 * self.fmt.bias + 2 * self.fmt.man_bits
+
+
+DEFAULT = TFConfig()
+
+
+# ---------------------------------------------------------------------------
+# The five steps, literally, for a single (x, w) pair of <=block length.
+# Used by tests and by examples/quickstart.py as the readable reference.
+# ---------------------------------------------------------------------------
+
+
+def step1_exponent_add(fx: F8Fields, fw: F8Fields) -> Array:
+    """Element-wise e_x + e_w on stored codes (the RC-discharge adder)."""
+    return fx.exp.astype(jnp.int32) + fw.exp.astype(jnp.int32)
+
+
+def step2_max_detect(s: Array, valid: Array) -> Array:
+    """Largest summed exponent (the D-FF/MUX tournament tree)."""
+    return jnp.max(jnp.where(valid, s, -(2**30)))
+
+
+def step3_mantissa_scale(fx: F8Fields, s: Array, e_max: Array,
+                         fmt: FloatFormat) -> Array:
+    """Right-shift input significands by (E_max - s_i); shifts that exceed
+    the significand width zero the term (the sparsity the paper notes)."""
+    shift = jnp.clip(e_max - s, 0, 31)
+    mhat = fx.significand(fmt) * fx.sign.astype(jnp.int32)
+    # Hardware shift register: arithmetic shift on magnitude == floor on
+    # non-negative; we shift the magnitude then restore sign.
+    mag = jnp.abs(mhat) >> shift
+    mag = jnp.where(shift > fmt.man_bits, 0, mag)  # all bits shifted out
+    return jnp.sign(mhat) * mag
+
+
+def step4_mac(mx_scaled: Array, fw: F8Fields, fmt: FloatFormat) -> Array:
+    """Fixed-point scalar product against weight significands (crossbar)."""
+    mw = fw.significand(fmt) * fw.sign.astype(jnp.int32)
+    return jnp.sum(mx_scaled * mw)
+
+
+def step5_renormalize(p: Array, e_max: Array, cfg: TFConfig) -> Array:
+    """Digitize and rescale the product-sum back to floating point."""
+    return p.astype(jnp.float32) * float8.exp2i(e_max - cfg.out_scale_bias)
+
+
+def scalar_product_steps(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
+    """Full 5-step scalar product of two 1-D vectors (any length; chunked)."""
+    (k,) = x.shape
+    assert w.shape == (k,)
+    pad = (-k) % cfg.block
+    x = jnp.pad(x, (0, pad))
+    w = jnp.pad(w, (0, pad))
+    fx = float8.decompose(x, cfg.fmt)
+    fw = float8.decompose(w, cfg.fmt)
+
+    def chunk(c):
+        sl = slice(c * cfg.block, (c + 1) * cfg.block)
+        cx = jax.tree.map(lambda a: a[sl], fx)
+        cw = jax.tree.map(lambda a: a[sl], fw)
+        valid = cx.nonzero & cw.nonzero
+        s = step1_exponent_add(cx, cw)
+        e_max = step2_max_detect(s, valid)
+        mx = step3_mantissa_scale(cx, s, e_max, cfg.fmt)
+        mx = jnp.where(valid, mx, 0)
+        p = step4_mac(mx, cw, cfg.fmt)
+        p = _adc(p, cfg)
+        return jnp.where(jnp.any(valid), step5_renormalize(p, e_max, cfg), 0.0)
+
+    n_chunks = (k + pad) // cfg.block
+    return jnp.sum(jnp.stack([chunk(c) for c in range(n_chunks)]))
+
+
+def _adc(p: Array, cfg: TFConfig) -> Array:
+    """Model of the shared SAR ADC quantizing a chunk partial sum.
+
+    The paper fixes a 4-bit ADC but does not specify ranging; we provide an
+    idealized auto-ranging mode (full scale = max |p| in the call) and a
+    worst-case fixed mode. Disabled when adc_bits is None.
+    """
+    if cfg.adc_bits is None:
+        return p
+    levels = (1 << cfg.adc_bits) - 1
+    if cfg.adc_mode == "fixed":
+        fs = cfg.block * cfg.max_significand**2
+        fs = jnp.asarray(fs, jnp.float32)
+    else:
+        fs = jnp.maximum(jnp.max(jnp.abs(p)).astype(jnp.float32), 1.0)
+    q = jnp.round(p.astype(jnp.float32) / fs * levels) * (fs / levels)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Exact-mode matmul: vectorized joint-max alignment, scan over K chunks.
+# ---------------------------------------------------------------------------
+
+
+def _pad_k(a: Array, block: int, axis: int) -> Array:
+    pad = (-a.shape[axis]) % block
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def matmul_exact(
+    x: Array,
+    w: Array,
+    cfg: TFConfig = DEFAULT,
+    *,
+    noise: NoiseParams | None = None,
+    key: Array | None = None,
+) -> Array:
+    """(M, K) @ (K, N) with per-(row, column, chunk) joint max alignment.
+
+    Memory is bounded by scanning over K chunks; each chunk materializes an
+    (M, block, N) exponent-sum tensor — this is the faithful oracle, not the
+    fast path.
+    """
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
+    m_dim, k_dim = x.shape
+    n_dim = w.shape[1]
+    xp = _pad_k(x, cfg.block, 1)
+    wp = _pad_k(w, cfg.block, 0)
+    n_chunks = xp.shape[1] // cfg.block
+
+    fx = float8.decompose(xp, cfg.fmt)
+    fw = float8.decompose(wp, cfg.fmt)
+
+    # (C, M, B) and (C, B, N) layouts for scanning.
+    def to_cx(a):
+        return a.reshape(m_dim, n_chunks, cfg.block).swapaxes(0, 1)
+
+    def to_cw(a):
+        return a.reshape(n_chunks, cfg.block, n_dim)
+
+    cx = F8Fields(*(to_cx(a) for a in fx))
+    cw = F8Fields(*(to_cw(a) for a in fw))
+
+    if noise is not None and key is not None:
+        keys = jax.random.split(key, n_chunks)
+    else:
+        keys = jnp.zeros((n_chunks, 2), jnp.uint32)
+
+    def body(acc, inputs):
+        cxc, cwc, kc = inputs
+        # s[i, k, j] = e_x[i,k] + e_w[k,j]
+        s = (cxc.exp.astype(jnp.int32)[:, :, None]
+             + cwc.exp.astype(jnp.int32)[None, :, :])
+        valid = cxc.nonzero[:, :, None] & cwc.nonzero[None, :, :]
+        s_eff = jnp.where(valid, s, -(2**30))
+        if noise is not None and noise.sigma_exp > 0:
+            ke, _ = jax.random.split(kc)
+            eps = jax.random.normal(ke, s.shape, jnp.float32) * noise.sigma_exp
+            # the time-pulse representation of the sum is perturbed
+            # multiplicatively; downstream max/subtract see the noisy value.
+            s_noisy = jnp.where(valid, s.astype(jnp.float32) * (1.0 + eps),
+                                -(2.0**30))
+            e_max = jnp.max(s_noisy, axis=1)  # (M, N) float
+            shift = jnp.clip(jnp.round(e_max[:, None, :] - s_noisy), 0, 31
+                             ).astype(jnp.int32)
+            e_max_i = jnp.round(e_max).astype(jnp.int32)
+        else:
+            e_max_i = jnp.max(s_eff, axis=1)  # (M, N)
+            shift = jnp.clip(e_max_i[:, None, :] - s_eff, 0, 31)
+
+        mx = cxc.significand(cfg.fmt)[:, :, None]  # (M, B, 1)
+        mx = jnp.broadcast_to(mx, shift.shape)
+        mx = mx >> shift
+        mx = jnp.where(shift > cfg.fmt.man_bits, 0, mx)
+        mx = jnp.where(valid, mx, 0)
+        sx = cxc.sign.astype(jnp.int32)[:, :, None]
+        mw = (cwc.significand(cfg.fmt) * cwc.sign.astype(jnp.int32))[None, :, :]
+        p = jnp.sum(mx * sx * mw, axis=1)  # (M, N) int32
+        p = _adc(p, cfg)
+        if noise is not None and noise.sigma_mant > 0:
+            _, km = jax.random.split(kc)
+            eps = jax.random.normal(km, p.shape, jnp.float32) * noise.sigma_mant
+            p = p.astype(jnp.float32) * (1.0 + eps)
+        any_valid = jnp.any(valid, axis=1)
+        contrib = jnp.where(
+            any_valid,
+            p.astype(jnp.float32)
+            * float8.exp2i(e_max_i - cfg.out_scale_bias),
+            0.0,
+        )
+        return acc + contrib, None
+
+    acc0 = jnp.zeros((m_dim, n_dim), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (cx, cw, keys))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Separable (TPU-native) mode: microscaled int8 operands + MXU dot_generals.
+# ---------------------------------------------------------------------------
+
+
+class QuantizedOperand(NamedTuple):
+    """Block-aligned integer operand.
+
+    q:     int8, (..., C, B) for inputs / (C, B, ...) for weights — signed
+           shifted significands in [-(2^(m+1)-1), 2^(m+1)-1].
+    scale: f32 per-block scale 2^(a - bias - man_bits); zero blocks get
+           scale with a=0 (q is zero there anyway).
+    """
+
+    q: Array
+    scale: Array
+
+
+def quantize_input(x: Array, cfg: TFConfig = DEFAULT) -> QuantizedOperand:
+    """(M, K) -> q:(C, M, B) int8, scale:(C, M) f32."""
+    m_dim = x.shape[0]
+    xp = _pad_k(x, cfg.block, 1)
+    n_chunks = xp.shape[1] // cfg.block
+    f = float8.decompose(xp, cfg.fmt)
+    exp = f.exp.astype(jnp.int32).reshape(m_dim, n_chunks, cfg.block)
+    nz = f.nonzero.reshape(m_dim, n_chunks, cfg.block)
+    a = jnp.max(jnp.where(nz, exp, -(2**30)), axis=-1)  # (M, C)
+    a = jnp.maximum(a, 0)
+    shift = jnp.clip(a[:, :, None] - exp, 0, 31)
+    mhat = f.significand(cfg.fmt).reshape(m_dim, n_chunks, cfg.block)
+    q = mhat >> shift
+    q = jnp.where(shift > cfg.fmt.man_bits, 0, q)
+    q = q * f.sign.astype(jnp.int32).reshape(m_dim, n_chunks, cfg.block)
+    scale = float8.exp2i(a - cfg.fmt.bias - cfg.fmt.man_bits)
+    return QuantizedOperand(
+        q=q.swapaxes(0, 1).astype(jnp.int8),  # (C, M, B)
+        scale=scale.swapaxes(0, 1),  # (C, M)
+    )
+
+
+def quantize_weight(w: Array, cfg: TFConfig = DEFAULT) -> QuantizedOperand:
+    """(K, N) -> q:(C, B, N) int8, scale:(C, N) f32."""
+    n_dim = w.shape[1]
+    wp = _pad_k(w, cfg.block, 0)
+    n_chunks = wp.shape[0] // cfg.block
+    f = float8.decompose(wp, cfg.fmt)
+    exp = f.exp.astype(jnp.int32).reshape(n_chunks, cfg.block, n_dim)
+    nz = f.nonzero.reshape(n_chunks, cfg.block, n_dim)
+    a = jnp.max(jnp.where(nz, exp, -(2**30)), axis=1)  # (C, N)
+    a = jnp.maximum(a, 0)
+    shift = jnp.clip(a[:, None, :] - exp, 0, 31)
+    mhat = f.significand(cfg.fmt).reshape(n_chunks, cfg.block, n_dim)
+    q = mhat >> shift
+    q = jnp.where(shift > cfg.fmt.man_bits, 0, q)
+    q = q * f.sign.astype(jnp.int32).reshape(n_chunks, cfg.block, n_dim)
+    scale = float8.exp2i(a - cfg.fmt.bias - cfg.fmt.man_bits)
+    return QuantizedOperand(q=q.astype(jnp.int8), scale=scale)
+
+
+def matmul_separable_scan(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
+    """(M,K) @ (K,N) via per-chunk int8 MACs with rank-1 scales, scanned
+    over K chunks. Bit-exact spec of the Pallas kernel (kernels/ref.py);
+    also the path that models the per-chunk ADC quantizer.
+    """
+    qx = quantize_input(x, cfg)
+    qw = quantize_weight(w, cfg)
+    return matmul_from_quantized(qx, qw, cfg)
+
+
+def dequantize_input(qx: "QuantizedOperand", k_dim: int, dtype=jnp.bfloat16
+                     ) -> Array:
+    """(C,M,B) int8 + (C,M) scale -> (M,K) block-aligned values. Exact:
+    |q| <= 31 (5 bits) times a power-of-two scale is representable in bf16."""
+    c, m, b = qx.q.shape
+    v = qx.q.astype(jnp.float32) * qx.scale[:, :, None]
+    return v.swapaxes(0, 1).reshape(m, c * b)[:, :k_dim].astype(dtype)
+
+
+def dequantize_weight(qw: "QuantizedOperand", k_dim: int, dtype=jnp.bfloat16
+                      ) -> Array:
+    c, b, n = qw.q.shape
+    v = qw.q.astype(jnp.float32) * qw.scale[:, None, :]
+    return v.reshape(c * b, n)[:k_dim].astype(dtype)
+
+
+def matmul_separable(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
+    """Fast XLA form of the separable mode: block-align-quantize, dequantize
+    (exact — values are 5-bit significands times power-of-two scales), then
+    ONE dense matmul with f32 accumulation.
+
+    Mathematically identical to `matmul_separable_scan` up to f32 summation
+    order (no int overflow: products are <=10-bit significands); asserted
+    close in tests. The int8-MAC execution lives in the Pallas kernel
+    (deployment path); this is the XLA/dry-run path. The per-chunk ADC model
+    requires the scan form (dispatches automatically when adc_bits is set).
+    """
+    if cfg.adc_bits is not None:
+        return matmul_separable_scan(x, w, cfg)
+    k_dim = x.shape[1]
+    xd = dequantize_input(quantize_input(x, cfg), k_dim)
+    wd = dequantize_weight(quantize_weight(w, cfg), k_dim)
+    return jax.lax.dot_general(xd, wd, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def matmul_from_quantized(qx: QuantizedOperand, qw: QuantizedOperand,
+                          cfg: TFConfig = DEFAULT) -> Array:
+    def body(acc, inputs):
+        q_x, s_x, q_w, s_w = inputs
+        p = jax.lax.dot_general(
+            q_x, q_w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        p = _adc(p, cfg)
+        return acc + p.astype(jnp.float32) * s_x[:, None] * s_w[None, :], None
+
+    m_dim = qx.q.shape[1]
+    n_dim = qw.q.shape[2]
+    acc0 = jnp.zeros((m_dim, n_dim), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (qx.q, qx.scale, qw.q, qw.scale))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + the training primitive (custom_vjp: fwd AND bwd in-crossbar).
+# ---------------------------------------------------------------------------
+
+
+def matmul(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
+    """2-D TimeFloats matmul in the configured mode."""
+    if cfg.mode == "exact":
+        return matmul_exact(x, w, cfg)
+    if cfg.mode == "separable":
+        return matmul_separable(x, w, cfg)
+    if cfg.mode == "pallas":
+        from repro.kernels import ops  # local import: kernels dep is optional
+
+        return ops.timefloats_matmul(x, w, cfg)
+    raise ValueError(f"unknown TimeFloats mode: {cfg.mode!r}")
+
+
+def _pow2_prescale(a: Array, cfg: TFConfig) -> tuple[Array, Array]:
+    """Per-tensor power-of-two scale mapping amax near the top of the FP8
+    range. Power-of-two scaling is exact in FP8 (only the exponent reference
+    moves — on the chip this is the programmable bias voltage V_B / reference
+    subtraction; in FP8-training practice it is the standard amax scale).
+    Returns (scaled array, scale) with ``quantizable = a * scale``.
+    """
+    amax = jnp.max(jnp.abs(a))
+    # target the max exponent so the full [0, 2^e-1] code range is usable
+    target = cfg.fmt.max_exp_code - 1 - cfg.fmt.bias
+    log2a = jnp.floor(jnp.log2(jnp.maximum(amax, 1e-30)))
+    scale = float8.exp2i(jnp.where(amax > 0, target - log2a, 0.0).astype(jnp.int32))
+    return a * scale, scale
+
+
+def _scaled_matmul(x: Array, w: Array, cfg: TFConfig) -> Array:
+    xs, sx = _pow2_prescale(x, cfg)
+    ws, sw = _pow2_prescale(w, cfg)
+    return matmul(xs, ws, cfg) / (sx * sw)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def linear(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
+    """Training linear layer: y = x @ w with TimeFloats arithmetic.
+
+    Train-in-memory means the backward pass also runs in the crossbar:
+    dx = g @ W^T is the transposed-read of the same stored FP8 weights, and
+    dW = x^T @ g is the outer-product accumulation the paper's in-situ
+    update consumes. Both therefore go through the same TimeFloats matmul.
+    The quantizer itself uses a straight-through estimator (standard QAT),
+    and operands get per-tensor power-of-two amax prescaling (exact in FP8;
+    required so activations/gradients use the E4 exponent range).
+
+    Accepts arbitrary leading batch dims on x.
+    """
+    lead = x.shape[:-1]
+    y = _scaled_matmul(x.reshape(-1, x.shape[-1]), w, cfg)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def _linear_fwd(x, w, cfg):
+    return linear(x, w, cfg), (x, w)
+
+
+def _linear_bwd(cfg, res, g):
+    x, w = res
+    g2 = g.reshape(-1, g.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dx = _scaled_matmul(g2, w.T, cfg).reshape(x.shape).astype(x.dtype)
+    dw = _scaled_matmul(x2.T, g2, cfg).astype(w.dtype)
+    return dx, dw
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+def dot(x: Array, w: Array, cfg: TFConfig = DEFAULT, *, use_vjp: bool = True):
+    """Convenience: general ...K @ KN contraction with the training vjp."""
+    if use_vjp:
+        return linear(x, w, cfg)
+    lead = x.shape[:-1]
+    y = matmul(x.reshape(-1, x.shape[-1]), w, cfg)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def expected_sparsity(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
+    """Fraction of chunk terms zeroed by shift-truncation (paper: 'enhancing
+    sparsity'). Reported by benchmarks; exact-mode bookkeeping."""
+    xp = _pad_k(x, cfg.block, 1)
+    wp = _pad_k(w, cfg.block, 0)
+    fx = float8.decompose(xp, cfg.fmt)
+    fw = float8.decompose(wp, cfg.fmt)
+    m_dim, k_pad = xp.shape
+    n_dim = wp.shape[1]
+    c = k_pad // cfg.block
+    ex = fx.exp.astype(jnp.int32).reshape(m_dim, c, cfg.block)
+    ew = fw.exp.astype(jnp.int32).reshape(c, cfg.block, n_dim)
+    s = ex[:, :, :, None] + ew[None, :, :, :]  # (M, C, B, N)
+    valid = (fx.nonzero.reshape(m_dim, c, cfg.block)[:, :, :, None]
+             & fw.nonzero.reshape(c, cfg.block, n_dim)[None])
+    e_max = jnp.max(jnp.where(valid, s, -(2**30)), axis=2, keepdims=True)
+    dropped = valid & ((e_max - s) > cfg.fmt.man_bits)
+    return jnp.sum(dropped) / jnp.maximum(jnp.sum(valid), 1)

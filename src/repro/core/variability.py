@@ -1,0 +1,95 @@
+"""Process-variability Monte Carlo (Sec. III-D / Fig. 7 of the paper).
+
+The paper perturbs an ideal computation output C as C -> C * (1 + N(0, σ)),
+separately for the exponent path and the mantissa path, and runs 100 Monte
+Carlo trials per σ. Finding: exponent computations are far more sensitive
+(an exponent error is a power-of-two output error), so calibration budget
+should go there. We reproduce this at two levels:
+
+1. scalar-product SQNR vs. σ (direct, no model needed);
+2. classification accuracy of a small trained MLP evaluated with noisy
+   TimeFloats inference (mirrors the paper's accuracy plot).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import timefloats
+from repro.core.timefloats import NoiseParams, TFConfig
+
+Array = jax.Array
+
+
+def perturb(x: Array, sigma: float, key: Array) -> Array:
+    """C -> C * (1 + N(0, sigma)) — the paper's parametric variability."""
+    return x * (1.0 + sigma * jax.random.normal(key, x.shape, jnp.float32))
+
+
+@dataclasses.dataclass
+class MonteCarloResult:
+    sigmas: list[float]
+    mean: list[float]
+    std: list[float]
+
+
+def run_monte_carlo(
+    metric_fn: Callable[[NoiseParams, Array], Array],
+    sigmas: list[float],
+    *,
+    path: str,  # "exp" | "mant"
+    trials: int = 100,
+    key: Array | None = None,
+) -> MonteCarloResult:
+    """Evaluate `metric_fn(noise, key)` over `trials` seeds per sigma.
+
+    `path` selects which computation the variability hits, matching the
+    paper's separate exponent-vs-mantissa sweeps.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    means, stds = [], []
+    for sigma in sigmas:
+        noise = (NoiseParams(sigma_exp=sigma) if path == "exp"
+                 else NoiseParams(sigma_mant=sigma))
+        keys = jax.random.split(jax.random.fold_in(key, hash(sigma) % (2**31)),
+                                trials)
+        vals = jnp.stack([metric_fn(noise, k) for k in keys])
+        means.append(float(vals.mean()))
+        stds.append(float(vals.std()))
+    return MonteCarloResult(sigmas=list(sigmas), mean=means, std=stds)
+
+
+def dot_product_error_metric(x: Array, w: Array, cfg: TFConfig):
+    """Relative L2 error of noisy TimeFloats matmul vs. clean TimeFloats."""
+    clean = timefloats.matmul_exact(x, w, cfg)
+    denom = jnp.linalg.norm(clean) + 1e-9
+
+    def metric(noise: NoiseParams, key: Array) -> Array:
+        noisy = timefloats.matmul_exact(x, w, cfg, noise=noise, key=key)
+        return jnp.linalg.norm(noisy - clean) / denom * 100.0  # percent
+
+    # noise is branch-selecting (sigma>0 checks) -> must be jit-static
+    return jax.jit(metric, static_argnums=0)
+
+
+def mlp_accuracy_metric(params, batch_x: Array, batch_y: Array, cfg: TFConfig):
+    """Accuracy of a 2-layer MLP classifier under noisy TimeFloats matmuls.
+
+    `params` = [(w1,), (w2,)] trained elsewhere (examples/train_edge_mlp.py
+    or the fig7 benchmark trains it inline).
+    """
+    w1, w2 = params
+
+    def metric(noise: NoiseParams, key: Array) -> Array:
+        k1, k2 = jax.random.split(key)
+        h = timefloats.matmul_exact(batch_x, w1, cfg, noise=noise, key=k1)
+        h = jax.nn.relu(h)
+        logits = timefloats.matmul_exact(h, w2, cfg, noise=noise, key=k2)
+        return jnp.mean((jnp.argmax(logits, -1) == batch_y).astype(jnp.float32)) * 100
+
+    # noise is branch-selecting (sigma>0 checks) -> must be jit-static
+    return jax.jit(metric, static_argnums=0)

@@ -1,0 +1,100 @@
+"""Jit'd public wrappers for the TimeFloats matmul kernel.
+
+`timefloats_matmul(x, w, cfg)` is the drop-in used by
+core.timefloats.matmul(mode="pallas"): it quantizes operands (XLA ops — the
+elementwise field extraction fuses well and is not the hot spot), pads to
+tile multiples, and invokes the Pallas kernel. On this CPU container the
+kernel always runs in interpret mode; on TPU set ``interpret=False`` via
+``PALLAS_INTERPRET=0`` or the `interpret` argument.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.timefloats import (
+    DEFAULT,
+    QuantizedOperand,
+    TFConfig,
+    quantize_input,
+    quantize_weight,
+)
+from repro.kernels import timefloats_matmul as kernel_mod
+
+Array = jax.Array
+
+
+def _interpret_default() -> bool:
+    # CPU container: interpret unless explicitly disabled (real TPU).
+    return os.environ.get("PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_to(a: Array, mults: tuple[int, ...], pad_value=0) -> Array:
+    widths = [(0, (-s) % m) for s, m in zip(a.shape, mults)]
+    if all(w == (0, 0) for w in widths):
+        return a
+    return jnp.pad(a, widths, constant_values=pad_value)
+
+
+def _tile_sizes(m: int, n: int, c: int, bm: int, bn: int, bc: int):
+    """Shrink default tiles for small problems (tests sweep tiny shapes)
+    but keep M/N tiles multiples of 8: sub-8 tiles are below any TPU
+    register tile, and jax 0.8.2's CPU interpreter miscompiles some
+    degenerate (m<=3, odd-n) tile shapes when the pallas_call is jitted
+    with traced operands (bisected in tests/test_kernels.py — shapes like
+    (2,1,9) returned a zero row)."""
+
+    def rnd8(v: int) -> int:
+        return -(-v // 8) * 8
+
+    return (min(bm, rnd8(m)), min(bn, rnd8(n)), min(bc, max(c, 1)))
+
+
+@partial(jax.jit, static_argnames=("cfg", "bm", "bn", "bc", "interpret"))
+def timefloats_matmul(
+    x: Array,
+    w: Array,
+    cfg: TFConfig = DEFAULT,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bc: int = 8,
+    interpret: bool | None = None,
+) -> Array:
+    """f32/bf16 (M,K) @ (K,N) through the TimeFloats Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m_dim, n_dim = x.shape[0], w.shape[1]
+    qx = quantize_input(x, cfg)
+    qw = quantize_weight(w, cfg)
+    y = quantized_matmul(qx, qw, cfg=cfg, bm=bm, bn=bn, bc=bc,
+                         interpret=interpret)
+    return y[:m_dim, :n_dim]
+
+
+def quantized_matmul(
+    qx: QuantizedOperand,
+    qw: QuantizedOperand,
+    *,
+    cfg: TFConfig = DEFAULT,
+    bm: int = 256,
+    bn: int = 256,
+    bc: int = 8,
+    interpret: bool | None = None,
+) -> Array:
+    """Kernel invocation on pre-quantized operands; returns padded (M',N')."""
+    if interpret is None:
+        interpret = _interpret_default()
+    c, m_dim, blk = qx.q.shape
+    n_dim = qw.q.shape[2]
+    bm, bn, bc = _tile_sizes(m_dim, n_dim, c, bm, bn, bc)
+    # Pad: zero q-blocks contribute nothing regardless of scale (scale=1 pad).
+    qxq = _pad_to(qx.q, (bc, bm, blk))
+    qxs = _pad_to(qx.scale, (bc, bm), pad_value=1.0)
+    qwq = _pad_to(qw.q, (bc, blk, bn))
+    qws = _pad_to(qw.scale, (bc, bn), pad_value=1.0)
+    return kernel_mod.timefloats_matmul_quantized(
+        qxq, qxs, qwq, qws, cfg=cfg, bm=bm, bn=bn, bc=bc, interpret=interpret)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the TimeFloats matmul kernel.
+
+The kernel implements the *separable* (TPU-native) TimeFloats mode — see
+DESIGN.md §2 and core/timefloats.py. The oracle is exactly
+``core.timefloats.matmul_separable`` (and its quantized-operand form), so the
+kernel is validated against the same function the rest of the framework uses
+on the XLA path. ``tests/test_kernels.py`` sweeps shapes/dtypes and asserts
+allclose between kernel (interpret=True) and this oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.timefloats import (  # noqa: F401  (re-exported as the oracle)
+    DEFAULT,
+    QuantizedOperand,
+    TFConfig,
+    matmul_from_quantized,
+    matmul_separable_scan,
+    quantize_input,
+    quantize_weight,
+)
+
+Array = jax.Array
+
+
+def timefloats_matmul_ref(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
+    """f32 (M,K) @ (K,N) through quantize + block-aligned int MAC (scanned
+    int8 form — the kernel's bit-exact spec)."""
+    return matmul_separable_scan(x, w, cfg)
+
+
+def quantized_matmul_ref(qx: QuantizedOperand, qw: QuantizedOperand,
+                         cfg: TFConfig = DEFAULT) -> Array:
+    """Oracle on pre-quantized operands (the kernel's exact input contract)."""
+    return matmul_from_quantized(qx, qw, cfg)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the TimeFloats separable block-aligned int8 matmul.
+
+Hardware mapping (DESIGN.md §2): one 64-element crossbar chunk = one int8
+dot_general of contraction depth 64 on the MXU, with the per-chunk exponent
+alignment folded into rank-1 f32 scales. The kernel consumes pre-quantized
+operands (sign-folded shifted significands in [-31, 31] for E4M4):
+
+    qx: (C, M, B) int8    sx: (C, M) f32      # per (row, chunk) scale
+    qw: (C, B, N) int8    sw: (C, N) f32      # per (chunk, col) scale
+    out: (M, N) f32 = Σ_c (qx[c] @ qw[c]) * sx[c,:,None] * sw[c,None,:]
+
+Tiling: grid (M/bm, N/bn, C/bc), the chunk dim innermost so the output tile
+stays resident in VMEM across the reduction (standard accumulate pattern,
+initialized at c==0). VMEM working set per step:
+
+    qx tile  bc*bm*64  int8   (e.g. 8*256*64   = 128 KiB)
+    qw tile  bc*64*bn  int8   (e.g. 8*64*256   = 128 KiB)
+    out tile bm*bn     f32    (e.g. 256*256*4  = 256 KiB)
+    scales   bc*(bm+bn) f32   (    8*512*4     =  16 KiB)
+    total ≈ 528 KiB « 16 MiB v5e VMEM — leaves headroom for double buffering.
+
+MXU alignment: bm, bn default 256 (multiples of 128); the contraction depth
+is the crossbar height B=64 — half an MXU pass. `TFConfig(block=128)`
+("ganged crossbars", a beyond-paper knob evaluated in §Perf) fills the MXU
+fully; accuracy delta is measured in tests/benchmarks.
+
+ADC modeling: the kernel supports `adc_bits` with `adc_mode="fixed"` (static
+full-scale — bit-exact with the oracle). Dynamic auto-ranging needs a global
+max and is served by the XLA path (ops.py dispatches).
+
+Validated in interpret mode on CPU (tests/test_kernels.py) — the container
+has no TPU; see the harness contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.timefloats import TFConfig
+
+Array = jax.Array
+
+
+def _kernel(qx_ref, sx_ref, qw_ref, sw_ref, out_ref, *, bc: int,
+            adc_bits: int | None, adc_fs: float):
+    """One (bm, bn) output tile; accumulates bc chunks per grid step."""
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = out_ref[...]
+    for k in range(bc):  # static unroll over chunks in this K-tile
+        p = jax.lax.dot_general(
+            qx_ref[k], qw_ref[k],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        pf = p.astype(jnp.float32)
+        if adc_bits is not None:
+            levels = float((1 << adc_bits) - 1)
+            pf = jnp.round(pf / adc_fs * levels) * (adc_fs / levels)
+        acc = acc + pf * sx_ref[k][:, None] * sw_ref[k][None, :]
+    out_ref[...] = acc
+
+
+def timefloats_matmul_quantized(
+    qx: Array, sx: Array, qw: Array, sw: Array,
+    *,
+    cfg: TFConfig,
+    bm: int = 256,
+    bn: int = 256,
+    bc: int = 8,
+    interpret: bool = True,
+) -> Array:
+    """pallas_call wrapper on pre-quantized/padded operands.
+
+    Expects M % bm == N % bn == C % bc == 0 (ops.py pads). interpret=True is
+    the validated CPU path; on real TPU pass interpret=False.
+    """
+    n_chunks, m_dim, blk = qx.shape
+    n_dim = qw.shape[2]
+    assert qw.shape == (n_chunks, blk, n_dim), (qx.shape, qw.shape)
+    assert m_dim % bm == 0 and n_dim % bn == 0 and n_chunks % bc == 0
+
+    if cfg.adc_bits is not None and cfg.adc_mode != "fixed":
+        raise ValueError("pallas kernel supports adc_mode='fixed' only; "
+                         "dynamic ranging needs a global max (XLA path)")
+    adc_fs = float(cfg.block * cfg.max_significand**2)
+
+    grid = (m_dim // bm, n_dim // bn, n_chunks // bc)
+    kernel = functools.partial(_kernel, bc=bc, adc_bits=cfg.adc_bits,
+                               adc_fs=adc_fs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, bm, blk), lambda i, j, c: (c, i, 0)),
+            pl.BlockSpec((bc, bm), lambda i, j, c: (c, i)),
+            pl.BlockSpec((bc, blk, bn), lambda i, j, c: (c, 0, j)),
+            pl.BlockSpec((bc, bn), lambda i, j, c: (c, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
+        interpret=interpret,
+    )(qx, sx, qw, sw)

@@ -1,0 +1,368 @@
+"""Trip-count-aware static census of an optimized (post-SPMD) HLO module.
+
+Why this exists: `compiled.cost_analysis()` visits every computation ONCE —
+a `while` loop body (every `lax.scan`: the layer scan, the grad-accumulation
+scan, blockwise-attention KV scans) is counted a single time regardless of
+its trip count. For a 61-layer model with 16 accumulation microbatches that
+undercounts FLOPs by >100x and made MODEL_FLOPS/HLO_FLOPS land above 1.0 in
+early dry-runs (EXPERIMENTS.md §Roofline, methodology note). The same
+undercount applies to bytes and, worse, to collectives inside the scans.
+
+This module re-derives the three roofline numerators from the HLO text:
+
+  flops       — 2*prod(out)*K for every `dot` (+ the same for any
+                `convolution`), loop bodies multiplied by their static trip
+                counts (parsed from each while's condition computation).
+                Elementwise FLOPs are excluded by design: the roofline
+                compute term is MXU work, and MODEL_FLOPS/flops then measures
+                matmul redundancy (remat / quantize-dequantize waste).
+  bytes       — Σ (output + operand bytes) over ops, fusion-shallow: ops
+                inside fusion computations are internal (VMEM-resident on
+                TPU) and skipped; the fusion op's own operands/outputs are
+                HBM traffic. No-copy ops (parameter/constant/tuple/gte/
+                bitcast) are skipped. Loop-scaled like flops.
+  collectives — result bytes × ring wire factor (all-reduce 2x, others 1x)
+                per kind, loop-scaled. `-start` async forms counted at the
+                start (the done is free).
+
+Everything is computed from `compiled.as_text()`; no re-execution. Static
+trip counts come from the canonical scan condition `compare(iv, constant(N),
+direction=LT)`; loops whose trip count cannot be parsed default to 1 and are
+reported in `warnings` (none on the current dry-run sweep).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|"
+    r"pred|c64|c128|token)\[([0-9,]*)\]")
+
+# op definition prefix: `  [ROOT] %name = ` (type parsed by paren balancing —
+# tuple types contain `/*index=N*/` comments that defeat any char-class regex)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_KIND_RE = re.compile(r"\s*([a-z][a-z0-9\-]*(?:-start|-done)?)\(")
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+_COLL_KINDS = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_NOCOPY = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "custom-call",
+}
+
+
+def _shape_elems(txt: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(txt):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _shape_elems(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    out_type: str
+    kind: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+@dataclasses.dataclass
+class Census:
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_dot: float = 0.0   # dot operand/output traffic only (lower bound)
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_KINDS})
+    dots: int = 0
+
+    def scaled(self, m: float) -> "Census":
+        return Census(self.flops * m, self.bytes * m, self.bytes_dot * m,
+                      {k: v * m for k, v in self.coll.items()}, self.dots)
+
+    def add(self, other: "Census") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.bytes_dot += other.bytes_dot
+        self.dots += other.dots
+        for k in self.coll:
+            self.coll[k] += other.coll[k]
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{"):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    cur = Computation(m.group(1), {}, [])
+                    if line.strip().startswith("ENTRY"):
+                        entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        op = _parse_op_line(line)
+        if op is not None:
+            cur.ops[op.name] = op
+            cur.order.append(op.name)
+    return comps, entry
+
+
+def _balanced(line: str, i: int) -> int:
+    """Index just past the ')' matching the '(' at line[i]."""
+    depth = 0
+    while i < len(line):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return i
+
+
+def _parse_op_line(line: str) -> Optional[Op]:
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i >= len(line):
+        return None
+    # output type: balanced parens for tuples, else up to the next space
+    if line[i] == "(":
+        j = _balanced(line, i)
+        out_type = line[i:j]
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        out_type = line[i:j]
+    mk = _KIND_RE.match(line, j)
+    if not mk:
+        return None
+    kind = mk.group(1)
+    start = mk.end() - 1  # at '('
+    end = _balanced(line, start)
+    inner = line[start + 1:end - 1]
+    attrs = line[end:]
+    operands = re.findall(r"%([\w.\-]+)", inner)
+    return Op(name, out_type, kind, operands, attrs, line)
+
+
+def _dims(txt: str) -> List[int]:
+    """{0,2} -> [0, 2]"""
+    return [int(d) for d in re.findall(r"\d+", txt)]
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    lhs_name = op.operands[0]
+    lhs = comp.ops.get(lhs_name)
+    out_shapes = _shape_elems(op.out_type)
+    out_elems = 1
+    for _, dims in out_shapes:
+        for d in dims:
+            out_elems *= d
+    k = 1
+    if lhs is not None:
+        lshape = _shape_elems(lhs.out_type)
+        if lshape:
+            ldims = lshape[0][1]
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+            cdims = _dims(m.group(1)) if m else []
+            for c in cdims:
+                if c < len(ldims):
+                    k *= ldims[c]
+    return 2.0 * out_elems * k
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Parse the canonical scan condition: compare(iv, constant(N)) LT."""
+    for name in cond.order:
+        op = cond.ops[name]
+        if op.kind != "compare":
+            continue
+        m = re.search(r"direction=(\w+)", op.attrs + op.line)
+        direction = m.group(1) if m else "LT"
+        const_val = None
+        for o in op.operands:
+            ref = cond.ops.get(o)
+            if ref is not None and ref.kind == "constant":
+                mc = re.search(r"constant\((-?\d+)\)", ref.line)
+                if mc:
+                    const_val = int(mc.group(1))
+        if const_val is None:
+            continue
+        if direction == "LT":
+            return max(const_val, 0)
+        if direction == "LE":
+            return max(const_val + 1, 0)
+        if direction in ("GT", "GE"):
+            return max(const_val + (1 if direction == "GE" else 0), 0)
+    return None
+
+
+def _attr_ref(op: Op, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", op.attrs)
+    return m.group(1) if m else None
+
+
+class ModuleCensus:
+    def __init__(self, hlo: str):
+        self.comps, self.entry = parse_module(hlo)
+        self.warnings: List[str] = []
+        self._memo: Dict[Tuple[str, bool], Census] = {}
+
+    def run(self) -> Census:
+        if self.entry is None:
+            self.warnings.append("no ENTRY computation found")
+            return Census()
+        return self._comp(self.entry, fused=False)
+
+    # ------------------------------------------------------------------
+    def _comp(self, name: str, fused: bool) -> Census:
+        key = (name, fused)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Census()  # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            self.warnings.append(f"missing computation {name}")
+            return Census()
+        total = Census()
+        for op_name in comp.order:
+            total.add(self._op(comp, comp.ops[op_name], fused))
+        self._memo[key] = total
+        return total
+
+    def _op(self, comp: Computation, op: Op, fused: bool) -> Census:
+        c = Census()
+        kind = op.kind
+        base_kind = kind[:-6] if kind.endswith("-start") else kind
+        if base_kind in ("dot", "convolution"):
+            c.flops += _dot_flops(op, comp)
+            c.dots += 1
+            c.bytes_dot += self._io_bytes(comp, op)
+            if not fused:
+                c.bytes += self._io_bytes(comp, op)
+            return c
+        if base_kind in _COLL_KINDS:
+            wire = _shape_bytes(op.out_type) * _COLL_KINDS[base_kind]
+            c.coll[base_kind] += wire
+            if not fused:
+                c.bytes += self._io_bytes(comp, op)
+            return c
+        if kind.endswith("-done"):
+            return c
+        if kind == "while":
+            body = _attr_ref(op, "body")
+            cond = _attr_ref(op, "condition")
+            # Preferred: XLA's own loop analysis annotates the trip count.
+            trip = None
+            mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+            if mt:
+                trip = int(mt.group(1))
+            if trip is None and cond and cond in self.comps:
+                trip = _trip_count(self.comps[cond])
+            if trip is None:
+                self.warnings.append(f"unknown trip count for {op.name}")
+                trip = 1
+            inner = Census()
+            if body:
+                inner.add(self._comp(body, fused=False))
+            if cond:
+                inner.add(self._comp(cond, fused=False))
+            c.add(inner.scaled(trip))
+            return c
+        if kind == "conditional":
+            for branch in re.findall(r"%([\w.\-]+)",
+                                     op.attrs.split("branch_computations")[-1]
+                                     if "branch_computations" in op.attrs
+                                     else ""):
+                c.add(self._comp(branch, fused=False))
+            return c
+        if kind == "call":
+            tgt = _attr_ref(op, "to_apply")
+            if tgt:
+                c.add(self._comp(tgt, fused=False))
+            return c
+        if kind == "fusion":
+            tgt = _attr_ref(op, "calls")
+            if tgt:
+                # fused interior: flops counted, bytes are VMEM-internal
+                inner = self._comp(tgt, fused=True)
+                c.flops += inner.flops
+                c.dots += inner.dots
+                for k in c.coll:
+                    c.coll[k] += inner.coll[k]
+            if not fused:
+                c.bytes += self._io_bytes(comp, op)
+            return c
+        if kind in _NOCOPY:
+            return c
+        if not fused:
+            c.bytes += self._io_bytes(comp, op)
+        return c
+
+    def _io_bytes(self, comp: Computation, op: Op) -> float:
+        total = float(_shape_bytes(op.out_type))
+        for o in op.operands:
+            ref = comp.ops.get(o)
+            if ref is not None and ref.kind not in ("constant",):
+                total += _shape_bytes(ref.out_type)
+        return total
+
+
+def census(hlo: str) -> Dict[str, float]:
+    mc = ModuleCensus(hlo)
+    c = mc.run()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "bytes_dot": c.bytes_dot,
+        "collective": dict(c.coll, total=c.coll_total),
+        "n_dots": c.dots,
+        "warnings": mc.warnings,
+    }

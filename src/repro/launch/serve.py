@@ -1,0 +1,62 @@
+"""Serving launcher: bring up the batched engine on a model config and
+drain a synthetic request stream.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+        --slots 4 --requests 16
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--quant", default="timefloats",
+                    choices=["timefloats", "none"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs import get_config, reduced_for_smoke
+    from repro.models import model as M
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_for_smoke(cfg)
+    cfg = dataclasses.replace(cfg, quant=args.quant)
+    print(f"arch={args.arch} reduced={args.reduced} "
+          f"params={cfg.param_count() / 1e6:.1f}M slots={args.slots}")
+
+    params = M.init(cfg, jax.random.PRNGKey(args.seed))
+    eng = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
+                 seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, min(64, args.max_len // 2)))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        eng.submit(Request(uid=uid, prompt=prompt,
+                           max_new_tokens=args.max_new,
+                           temperature=args.temperature))
+    t0 = time.time()
+    done = eng.run_until_drained()
+    dt = time.time() - t0
+    new_tokens = sum(len(f.tokens) for f in done)
+    print(f"served {len(done)}/{args.requests} requests, {new_tokens} tokens "
+          f"in {dt:.1f}s ({new_tokens / max(dt, 1e-9):.1f} tok/s)")
+    return 0 if len(done) == args.requests else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

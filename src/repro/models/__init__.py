@@ -1,0 +1,3 @@
+"""Model zoo: config-driven transformer/SSM/hybrid stacks with grouped
+scan-over-layers and TimeFloats-quantized projections."""
+from repro.models import model  # noqa: F401

@@ -1,0 +1,264 @@
+"""GQA/MQA attention with blockwise (flash-style) softmax, mask zoo, and
+KV-cache decode.
+
+Blockwise attention matters even for the compile-only dry-run: a 32k prefill
+with materialized (S×S) scores would dominate memory_analysis and misstate
+the roofline. The q-block loop is a static Python loop (HLO-unrolled), the
+kv-block loop a lax.scan whose *static* trip count per q-block implements
+causal/sliding-window block skipping (triangular work, no 2× waste).
+
+Masks: causal, prefix-LM bidirectional (paligemma), sliding window + global
+prefix exemption (hymba meta tokens).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, dense, dense_in, rms_norm, rope
+
+Array = jax.Array
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    causal: bool = True
+    prefix_len: int = 0          # bidirectional / window-exempt prefix
+    window: Optional[int] = None  # kv_pos > q_pos - window
+
+
+def mask_allowed(q_pos: Array, kv_pos: Array, mask: MaskSpec) -> Array:
+    """Boolean visibility; q_pos, kv_pos broadcastable int arrays."""
+    if mask.causal:
+        allowed = kv_pos <= q_pos
+    else:
+        allowed = jnp.ones(jnp.broadcast_shapes(q_pos.shape, kv_pos.shape),
+                           bool)
+    if mask.prefix_len:
+        allowed = allowed | ((q_pos < mask.prefix_len)
+                             & (kv_pos < mask.prefix_len))
+    if mask.window is not None:
+        in_window = kv_pos > (q_pos - mask.window)
+        if mask.prefix_len:
+            in_window = in_window | (kv_pos < mask.prefix_len)
+        allowed = allowed & in_window
+    return allowed
+
+
+class KVCache(NamedTuple):
+    """Per-layer KV cache. k/v: (B, S_max, Hkv, D)."""
+
+    k: Array
+    v: Array
+
+
+def _pad_seq(a: Array, mult: int) -> Array:
+    pad = (-a.shape[1]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _scores(q: Array, k: Array, scale: float) -> Array:
+    """q (B, Hkv, G, Sq, D), k (B, Skv, Hkv, D) -> (B, Hkv, G, Sq, Skv) f32."""
+    return jnp.einsum("bkgqd,bjkd->bkgqj", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _pv(p: Array, v: Array) -> Array:
+    """p (B, Hkv, G, Sq, Skv) f32, v (B, Skv, Hkv, D) -> (B, Hkv, G, Sq, D)."""
+    return jnp.einsum("bkgqj,bjkd->bkgqd", p, v.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def blockwise_attention(
+    q: Array,            # (B, Sq, H, D)
+    k: Array,            # (B, Skv, Hkv, D)
+    v: Array,
+    mask: MaskSpec,
+    *,
+    q_block: int,
+    kv_block: int,
+    q_offset: int = 0,
+) -> Array:
+    """Online-softmax attention; positions are q_offset+arange / arange."""
+    b, sq_in, h, d = q.shape
+    dv = v.shape[-1]  # value dim may differ (MLA: dqk=192, dv=128)
+    qb = min(q_block, sq_in)
+    kvb = min(kv_block, k.shape[1])
+    # Pad to tile multiples: padded kv sits at positions >= every real q
+    # position, so the causal mask excludes it; padded q rows are sliced off.
+    q = _pad_seq(q, qb)
+    k = _pad_seq(k, kvb)
+    v = _pad_seq(v, kvb)
+    sq, skv, hkv = q.shape[1], k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qr = q.reshape(b, sq // qb, qb, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    outs = []
+    for i in range(sq // qb):
+        qi = qr[i]  # (B, Hkv, G, qb, D)
+        q_pos = q_offset + i * qb + jnp.arange(qb)
+        # static kv block range for this q block
+        hi = min(skv, q_offset + (i + 1) * qb) if mask.causal else skv
+        j_max = -(-hi // kvb)  # ceil
+        j_min = 0
+        if mask.window is not None:
+            lo = max(0, q_offset + i * qb - mask.window + 1)
+            j_min = lo // kvb
+        blocks = list(range(j_min, j_max))
+        if mask.prefix_len and j_min > 0:
+            # prefix kv blocks are window-exempt (meta tokens / image prefix)
+            n_prefix_blocks = -(-mask.prefix_len // kvb)
+            blocks = [jb for jb in range(0, min(n_prefix_blocks, j_min))] + blocks
+
+        def step(carry, j):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, j * kvb, kvb, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * kvb, kvb, axis=1)
+            kv_pos = j * kvb + jnp.arange(kvb)
+            s = _scores(qi, kb, scale)
+            ok = mask_allowed(q_pos[:, None], kv_pos[None, :], mask)
+            s = jnp.where(ok[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(ok[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + _pv(p, vb)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qb), NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qb, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                      jnp.asarray(blocks, jnp.int32))
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out_i)
+    out = jnp.stack(outs, axis=0)  # (nq, B, Hkv, G, qb, Dv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
+    return out[:, :sq_in]
+
+
+def decode_attention(
+    q: Array,            # (B, Sq(=1), H, D)
+    k: Array,            # (B, S_max, Hkv, D) — cache
+    v: Array,
+    q_positions: Array,  # (B, Sq) absolute positions of the queries
+    lengths: Array,      # (B,) valid cache length (inclusive of new token)
+    mask: MaskSpec,
+) -> Array:
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qi = q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    s = _scores(qi, k, scale)  # (B, Hkv, G, Sq, S_max)
+    kv_pos = jnp.arange(k.shape[1])
+    ok = mask_allowed(q_positions[:, :, None], kv_pos[None, None, :], mask)
+    ok = ok & (kv_pos[None, None, :] < lengths[:, None, None])
+    s = jnp.where(ok[:, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(ok[:, None, None], p, 0.0)
+    out = _pv(p, v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+
+
+def cache_update(cache: KVCache, k_new: Array, v_new: Array,
+                 positions: Array) -> KVCache:
+    """Write (B, Sq, Hkv, D) at per-batch positions (B,) into the cache."""
+
+    def write(buf, new, pos):
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=0)
+
+    k = jax.vmap(write)(cache.k, k_new, positions)
+    v = jax.vmap(write)(cache.v, v_new, positions)
+    return KVCache(k=k, v=v)
+
+
+# ---------------------------------------------------------------------------
+# The attention module (params + apply)
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, hkv, hd = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    h = cfg.padded_heads  # == n_heads unless head_pad_to is set (§Perf I-4)
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"),
+                        scale=1.0 / math.sqrt(h * hd / d)),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return specs
+
+
+def head_mask(cfg: ModelConfig) -> Optional[Array]:
+    """(padded_heads,) 1/0 mask: heads are laid out kv-major (head = kv*g+j);
+    within each kv group the real heads occupy j < n_heads/n_kv_heads and
+    pads sit at the tail. Masking the attention OUTPUT keeps the padded
+    model exactly equal to the unpadded one (pad wo rows see zero
+    activations, so their gradients are zero too)."""
+    h_pad = cfg.padded_heads
+    if h_pad == cfg.n_heads:
+        return None
+    hkv = max(cfg.n_kv_heads, 1)
+    g_pad = h_pad // hkv
+    g_real = cfg.n_heads // hkv
+    mask = (jnp.arange(g_pad) < g_real).astype(jnp.float32)
+    return jnp.tile(mask, hkv)  # (hkv*g_pad,)
+
+
+def attention_apply(
+    params: Dict[str, Array],
+    x: Array,                       # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    mask: MaskSpec,
+    positions: Array,               # (B, S) absolute positions
+    cache: Optional[KVCache] = None,
+    lengths: Optional[Array] = None,  # (B,) post-update cache lengths
+    q_offset: int = 0,
+) -> tuple[Array, Optional[KVCache]]:
+    """Self-attention; cache!=None selects the decode path."""
+    q = dense(x, params["wq"], cfg)   # (B, S, H, hd)
+    k = dense(x, params["wk"], cfg)
+    v = dense(x, params["wv"], cfg)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.pos_variant == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        assert lengths is not None
+        write_pos = positions[:, 0]
+        cache = cache_update(cache, k, v, write_pos)
+        out = decode_attention(q, cache.k, cache.v, positions, lengths, mask)
+    else:
+        out = blockwise_attention(q, k, v, mask, q_block=cfg.q_block,
+                                  kv_block=cfg.kv_block, q_offset=q_offset)
+    hm = head_mask(cfg)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    y = dense_in(out.astype(cfg.activation_dtype), params["wo"], cfg)
+    return y, cache

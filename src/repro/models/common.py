@@ -1,0 +1,211 @@
+"""Shared model machinery: param specs (shape+logical axes+init), norms,
+positional encodings, and the quantization-dispatched dense layer.
+
+Every parameter is declared as a `ParamSpec`, so a module is a pair of
+functions: `*_specs(cfg) -> {name: ParamSpec}` and `*_apply(params, ...)`.
+The spec tree yields (a) initialized arrays, (b) the logical-axis tree that
+parallel/sharding.py resolves into PartitionSpecs, without duplicating
+shapes anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import timefloats
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple              # logical axis names, len == len(shape)
+    init: str = "fan_in"     # fan_in | zeros | ones | embed | normal(scale)
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def initialize(self, key: Array) -> Array:
+        if callable(self.init):
+            return self.init(key, self.shape, self.dtype)
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            return (jax.random.normal(key, self.shape, self.dtype)
+                    * self.scale)
+        if self.init == "fan_in":
+            fan_in = math.prod(self.shape[:-1]) if len(self.shape) > 1 else self.shape[0]
+            # treat all-but-last as input dims except explicit head layouts
+            std = self.scale / math.sqrt(max(self.shape[0] if len(self.shape) == 2
+                                             else fan_in, 1))
+            return jax.random.normal(key, self.shape, self.dtype) * std
+        if self.init == "normal":
+            return jax.random.normal(key, self.shape, self.dtype) * self.scale
+        raise ValueError(self.init)
+
+
+def init_params(specs: PyTree, key: Array) -> PyTree:
+    """Initialize a (nested dict) tree of ParamSpec with split keys."""
+    leaves, treedef = jax.tree.flatten(specs,
+                                       is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    arrs = [s.initialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def spec_axes(specs: PyTree) -> PyTree:
+    """ParamSpec tree -> logical-axes tree (same structure)."""
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_shapes(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_bytes(specs: PyTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def param_count(specs: PyTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# The dense layer — the paper's integration point. Every projection matmul
+# in every architecture goes through here; cfg.quant selects bf16 vs
+# TimeFloats arithmetic (exact / separable / pallas via cfg.tf.mode).
+# ---------------------------------------------------------------------------
+
+
+def dense(x: Array, w: Array, cfg: ModelConfig) -> Array:
+    """y[..., n] = x[..., k] @ w[k, n] with optional TimeFloats arithmetic.
+
+    `w` may have >2 dims; trailing dims are flattened into the output
+    (e.g. (d, H, hd)); callers reshape the output back.
+    """
+    k = w.shape[0]
+    w2 = w.reshape(k, -1)
+    out_shape = x.shape[:-1] + w.shape[1:]
+    if cfg.quant == "timefloats":
+        y = timefloats.linear(x, w2, cfg.tf)
+    else:
+        y = x.astype(cfg.activation_dtype) @ w2.astype(cfg.activation_dtype)
+    return y.reshape(out_shape).astype(cfg.activation_dtype)
+
+
+def dense_in(x: Array, w: Array, cfg: ModelConfig) -> Array:
+    """Contraction over multiple leading dims of w (e.g. wo: (H, hd, d)).
+    x (..., H, hd) @ w (H, hd, d) -> (..., d)."""
+    n_in = w.ndim - 1
+    k = math.prod(w.shape[:n_in])
+    x2 = x.reshape(*x.shape[: x.ndim - n_in], k)
+    return dense(x2, w.reshape(k, w.shape[-1]), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg: ModelConfig, d: int | None = None) -> Dict[str, ParamSpec]:
+    d = d or cfg.d_model
+    specs = {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    if cfg.norm_variant == "layernorm":
+        specs["bias"] = ParamSpec((d,), ("embed",), init="zeros")
+    return specs
+
+
+def norm_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_variant == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * params["scale"]
+    return y.astype(cfg.activation_dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, D) with D even; positions: (B, S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: Array, d: int) -> Array:
+    """(B, S) -> (B, S, d) classic transformer sin/cos table (musicgen)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, f), ("embed", "ffw")),
+            "w_up": ParamSpec((d, f), ("embed", "ffw")),
+            "w_down": ParamSpec((f, d), ("ffw", "embed")),
+        }
+    if cfg.mlp_variant == "gelu":
+        return {
+            "w_up": ParamSpec((d, f), ("embed", "ffw")),
+            "w_down": ParamSpec((f, d), ("ffw", "embed")),
+        }
+    raise ValueError(cfg.mlp_variant)
+
+
+def mlp_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig) -> Array:
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_variant == "swiglu" else jax.nn.gelu
+        g = act(dense(x, params["w_gate"], cfg))
+        u = dense(x, params["w_up"], cfg)
+        return dense(g * u, params["w_down"], cfg)
+    u = jax.nn.gelu(dense(x, params["w_up"], cfg))
+    return dense(u, params["w_down"], cfg)
+
+
+def expert_mlp_apply(wg: Array, wu: Array, wd: Array, x: Array,
+                     cfg: ModelConfig) -> Array:
+    """SwiGLU on explicit weights (used vmapped over experts)."""
+    g = jax.nn.silu(dense(x, wg, cfg))
+    u = dense(x, wu, cfg)
+    return dense(g * u, wd, cfg)

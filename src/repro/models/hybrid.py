@@ -1,0 +1,67 @@
+"""Hymba-style hybrid block: attention heads and SSM heads in parallel on
+the same input, outputs normalized, scaled and averaged (arXiv:2411.13676).
+
+Meta tokens (128 learned embeddings) are prepended at the model level and
+are window-exempt in the attention mask (MaskSpec.prefix_len). Most layers
+use sliding-window attention; cfg.hybrid.global_layers use full attention.
+Cross-layer KV sharing from the paper is not implemented (breaks
+layer-homogeneous scan; memory-only optimization) — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache, MaskSpec
+from repro.models.common import ParamSpec, rms_norm
+from repro.models.ssm import SSMCache
+
+Array = jax.Array
+
+
+class HybridCache(NamedTuple):
+    kv: KVCache
+    ssm: SSMCache
+
+
+def hybrid_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    specs = {
+        "attn": attn_mod.attention_specs(cfg),
+        "ssm": ssm_mod.ssm_specs(cfg),
+        "attn_out_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "ssm_out_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    return specs
+
+
+def hybrid_apply(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    is_global: bool,
+    positions: Array,
+    cache: Optional[HybridCache] = None,
+    lengths: Optional[Array] = None,
+    q_offset: int = 0,
+) -> Tuple[Array, Optional[HybridCache]]:
+    hy = cfg.hybrid
+    mask = MaskSpec(causal=True,
+                    prefix_len=hy.meta_tokens,
+                    window=None if is_global else hy.sliding_window)
+    a_out, kv = attn_mod.attention_apply(
+        params["attn"], x, cfg, mask=mask, positions=positions,
+        cache=cache.kv if cache else None, lengths=lengths,
+        q_offset=q_offset)
+    s_out, sc = ssm_mod.ssm_apply(params["ssm"], x, cfg,
+                                  cache=cache.ssm if cache else None)
+    y = 0.5 * (rms_norm(a_out, params["attn_out_norm"])
+               + rms_norm(s_out, params["ssm_out_norm"]))
+    new_cache = HybridCache(kv=kv, ssm=sc) if cache is not None else None
+    return y, new_cache

@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (deepseek-v3 / kimi-k2 family).
+
+Prefill/train: latent projections expanded to full per-head K/V and run
+through the shared blockwise attention. Decode: the *absorbed* form — the
+up-projection W_kv_b is folded into the query/output projections so the KV
+cache stores only (c_kv, k_rope) = (512+64) floats/token instead of
+H*(d_nope+d_v); attention runs in the latent space. This is the production
+MLA serving trick and is what makes deepseek-class 32k decode cells
+memory-sane.
+
+All projections go through `dense` → TimeFloats arithmetic when enabled.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import MaskSpec, NEG, blockwise_attention, mask_allowed
+from repro.models.common import ParamSpec, dense, dense_in, rms_norm, rope
+
+Array = jax.Array
+
+
+class MLACache(NamedTuple):
+    c_kv: Array    # (B, S_max, kv_lora_rank) — normalized latent
+    k_rope: Array  # (B, S_max, qk_rope_head_dim)
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    m = cfg.mla
+    assert m is not None
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": ParamSpec((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_a_norm": ParamSpec((m.q_lora_rank,), ("q_lora",), init="ones"),
+        "wq_b": ParamSpec((m.q_lora_rank, h, qk), ("q_lora", "heads", "head_dim")),
+        "wkv_a": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("embed", "kv_lora")),
+        "kv_a_norm": ParamSpec((m.kv_lora_rank,), ("kv_lora",), init="ones"),
+        "wkv_b": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim),
+                           ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", "head_dim", "embed"),
+                        scale=1.0 / math.sqrt(h * m.v_head_dim / d)),
+    }
+
+
+def _project_q(params, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    q_lat = rms_norm(dense(x, params["wq_a"], cfg), params["q_a_norm"])
+    q = dense(q_lat, params["wq_b"], cfg)  # (B, S, H, nope+rope)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    kv_a = dense(x, params["wkv_a"], cfg)  # (B, S, kv_lora+rope)
+    c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], params["kv_a_norm"])
+    k_rope = kv_a[..., m.kv_lora_rank:][:, :, None, :]  # 1 shared head
+    k_rope = rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    mask: MaskSpec,
+    positions: Array,
+    cache: Optional[MLACache] = None,
+    lengths: Optional[Array] = None,
+    q_offset: int = 0,
+) -> tuple[Array, Optional[MLACache]]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+
+    if cache is None:
+        # Expanded path: materialize per-head K/V, shared blockwise attention.
+        kv = dense(c_kv, params["wkv_b"], cfg)  # (B, S, H, nope+v)
+        k_nope = kv[..., : m.qk_nope_head_dim]
+        v = kv[..., m.qk_nope_head_dim:]
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, m.qk_rope_head_dim))], axis=-1)
+        out = blockwise_attention(q, k, v, mask, q_block=cfg.q_block,
+                                  kv_block=cfg.kv_block, q_offset=q_offset)
+        y = dense_in(out.astype(cfg.activation_dtype), params["wo"], cfg)
+        return y, None
+
+    # Absorbed decode path.
+    assert lengths is not None
+    write_pos = positions[:, 0]
+
+    def write(buf, new, pos):
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=0)
+
+    cache = MLACache(
+        c_kv=jax.vmap(write)(cache.c_kv, c_kv, write_pos),
+        k_rope=jax.vmap(write)(cache.k_rope, k_rope, write_pos),
+    )
+    wkv_b = params["wkv_b"]  # (kv_lora, H, nope+v)
+    wk_b = wkv_b[..., : m.qk_nope_head_dim]       # (kv_lora, H, nope)
+    wv_b = wkv_b[..., m.qk_nope_head_dim:]        # (kv_lora, H, v)
+    # Absorb: q_lat[b,s,h,c] = Σ_n q_nope[b,s,h,n] wk_b[c,h,n]
+    q_lat = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_lat = jnp.einsum("bshc,bjc->bhsj", q_lat,
+                       cache.c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bshr,bjr->bhsj", q_rope.astype(jnp.float32),
+                        cache.k_rope.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale  # (B, H, Sq, S_max)
+    kv_pos = jnp.arange(cache.c_kv.shape[1])
+    ok = mask_allowed(positions[:, :, None], kv_pos[None, None, :], mask)
+    ok = ok & (kv_pos[None, None, :] < lengths[:, None, None])
+    scores = jnp.where(ok[:, None], scores, NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(ok[:, None], p, 0.0)
+    o_lat = jnp.einsum("bhsj,bjc->bshc", p, cache.c_kv.astype(jnp.float32))
+    out = jnp.einsum("bshc,chv->bshv", o_lat, wv_b.astype(jnp.float32))
+    y = dense_in(out.astype(cfg.activation_dtype), params["wo"], cfg)
+    return y, cache

@@ -1,0 +1,461 @@
+"""LMModel: config-driven assembly of all pool architectures.
+
+Layers are stacked and scanned (`lax.scan`) so HLO size is O(1) in depth —
+essential for compiling 61–88-layer models on the CPU dry-run and the
+standard production trick on TPU. Architectures with heterogeneous layers
+(deepseek's first-k-dense, hymba's global/SWA mix) use *grouped* scans:
+consecutive layers of identical structural kind share one scan
+(`ModelConfig.layer_kinds`).
+
+Sequence convention: the model sequence includes any prefix (hymba meta
+tokens, paligemma patch embeddings); `cfg`-derived `prefix_length` positions
+carry no loss. Shape cells count the TOTAL sequence (prefix + text), so
+blockwise attention tiles stay aligned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache, MaskSpec
+from repro.models.common import (ParamSpec, dense, init_params, mlp_apply,
+                                 mlp_specs, norm_apply, norm_specs,
+                                 param_count, sinusoidal_embedding, spec_axes)
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+PyTree = Any
+
+AUX_ZERO = {"lb_loss": 0.0, "z_loss": 0.0, "dropped_frac": 0.0}
+
+
+def prefix_length(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid" and cfg.hybrid:
+        return cfg.hybrid.meta_tokens
+    if cfg.family == "vlm":
+        return cfg.num_prefix_tokens
+    return 0
+
+
+def default_mask(cfg: ModelConfig) -> MaskSpec:
+    return MaskSpec(
+        causal=True,
+        prefix_len=cfg.num_prefix_tokens if cfg.prefix_bidirectional else 0,
+        window=cfg.sliding_window,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _uses_mla(cfg: ModelConfig) -> bool:
+    return cfg.mla is not None
+
+
+def block_specs(kind: str, cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {"norm1": norm_specs(cfg)}
+    if kind == "ssm":
+        specs["mixer"] = ssm_mod.ssm_specs(cfg)
+        return specs  # mamba2: no FFN sub-block
+    if kind in ("hybrid_swa", "hybrid_global"):
+        specs["mixer"] = hybrid_mod.hybrid_specs(cfg)
+    elif _uses_mla(cfg):
+        specs["mixer"] = mla_mod.mla_specs(cfg)
+    else:
+        specs["mixer"] = attn_mod.attention_specs(cfg)
+    specs["norm2"] = norm_specs(cfg)
+    if kind == "moe":
+        specs["ffn"] = moe_mod.moe_specs(cfg)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe and kind == "dense" and cfg.moe.dense_d_ff:
+            d_ff = cfg.moe.dense_d_ff
+        specs["ffn"] = mlp_specs(cfg, d_ff)
+    return specs
+
+
+def block_apply(
+    kind: str,
+    params: Dict[str, Any],
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    cache: Optional[PyTree],
+    lengths: Optional[Array],
+    q_offset: int = 0,
+) -> Tuple[Array, Optional[PyTree], Dict[str, Array]]:
+    aux = dict(AUX_ZERO)
+    h = norm_apply(params["norm1"], x, cfg)
+    if kind == "ssm":
+        y, new_cache = ssm_mod.ssm_apply(params["mixer"], h, cfg, cache=cache)
+        return x + y, new_cache, aux
+    if kind in ("hybrid_swa", "hybrid_global"):
+        y, new_cache = hybrid_mod.hybrid_apply(
+            params["mixer"], h, cfg, is_global=(kind == "hybrid_global"),
+            positions=positions, cache=cache, lengths=lengths,
+            q_offset=q_offset)
+    elif _uses_mla(cfg):
+        y, new_cache = mla_mod.mla_apply(
+            params["mixer"], h, cfg, mask=default_mask(cfg),
+            positions=positions, cache=cache, lengths=lengths,
+            q_offset=q_offset)
+    else:
+        y, new_cache = attn_mod.attention_apply(
+            params["mixer"], h, cfg, mask=default_mask(cfg),
+            positions=positions, cache=cache, lengths=lengths,
+            q_offset=q_offset)
+    x = x + y
+    h2 = norm_apply(params["norm2"], x, cfg)
+    if kind == "moe":
+        y2, aux_moe = moe_mod.moe_apply(params["ffn"], h2, cfg)
+        aux.update(aux_moe)
+    else:
+        y2 = mlp_apply(params["ffn"], h2, cfg)
+    return x + y2, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model-level specs / init
+# ---------------------------------------------------------------------------
+
+
+def layer_groups(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    kinds = cfg.layer_kinds()
+    groups: List[Tuple[str, int]] = []
+    for k in kinds:
+        if groups and groups[-1][0] == k:
+            groups[-1] = (k, groups[-1][1] + 1)
+        else:
+            groups.append((k, 1))
+    return groups
+
+
+def model_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    emb_scale = 0.02
+    specs: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        specs["embed"] = ParamSpec((cfg.num_codebooks, v, d),
+                                   ("codebooks", "vocab", "embed"),
+                                   init="embed", scale=emb_scale)
+    else:
+        specs["embed"] = ParamSpec((v, d), ("vocab", "embed"), init="embed",
+                                   scale=emb_scale)
+    if cfg.family == "hybrid" and cfg.hybrid and cfg.hybrid.meta_tokens:
+        specs["meta"] = ParamSpec((cfg.hybrid.meta_tokens, d),
+                                  (None, "embed"), init="embed", scale=0.02)
+    groups = []
+    for kind, count in layer_groups(cfg):
+        bs = block_specs(kind, cfg)
+        stacked = jax.tree.map(
+            lambda s: ParamSpec((count,) + s.shape, ("layers",) + s.axes,
+                                init=s.init, scale=s.scale, dtype=s.dtype),
+            bs, is_leaf=lambda s: isinstance(s, ParamSpec))
+        groups.append({"kind_": kind, "params": stacked})
+    specs["groups"] = groups
+    specs["final_norm"] = norm_specs(cfg)
+    if not cfg.tie_embeddings:
+        if cfg.family == "audio":
+            specs["lm_head"] = ParamSpec((d, cfg.num_codebooks, v),
+                                         ("embed", "codebooks", "vocab"))
+        else:
+            specs["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    if cfg.param_dtype != "float32":
+        pdt = jnp.dtype(cfg.param_dtype)
+        specs = jax.tree.map(
+            lambda s: (dataclasses.replace(s, dtype=pdt)
+                       if isinstance(s, ParamSpec) and s.dtype == jnp.float32
+                       else s),
+            specs, is_leaf=lambda s: isinstance(s, ParamSpec))
+    return specs
+
+
+def _strip_kind(tree: PyTree) -> PyTree:
+    """Remove the static 'kind_' strings before tree ops on arrays."""
+
+    def strip(node):
+        if isinstance(node, dict) and "kind_" in node:
+            return {k: v for k, v in node.items() if k != "kind_"}
+        return node
+
+    if isinstance(tree, dict):
+        return {k: ([_strip_kind(g) for g in v] if k == "groups" else v)
+                for k, v in strip(tree).items()}
+    return tree
+
+
+def init(cfg: ModelConfig, key: Array) -> PyTree:
+    specs = _strip_kind(model_param_specs(cfg))
+    return init_params(specs, key)
+
+
+def param_axes(cfg: ModelConfig) -> PyTree:
+    specs = _strip_kind(model_param_specs(cfg))
+    return spec_axes(specs)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    specs = _strip_kind(model_param_specs(cfg))
+    total = param_count(specs)
+    if active_only and cfg.moe:
+        mo = cfg.moe
+        n_moe_layers = sum(1 for k in cfg.layer_kinds() if k == "moe")
+        per_expert = 3 * cfg.d_model * mo.d_expert
+        total -= n_moe_layers * (mo.num_experts - mo.top_k) * per_expert
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig
+                 ) -> Array:
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        # tokens (B, S, K): sum the K codebook embeddings
+        parts = [params["embed"][k][tokens[..., k]]
+                 for k in range(cfg.num_codebooks)]
+        x = sum(parts)
+    else:
+        x = params["embed"][tokens]
+    x = x.astype(cfg.activation_dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    b = tokens.shape[0]
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.activation_dtype)  # (B, P, D)
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.family == "hybrid" and cfg.hybrid and cfg.hybrid.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"].astype(cfg.activation_dtype),
+                                (b,) + params["meta"].shape)
+        x = jnp.concatenate([meta, x], axis=1)
+    return x
+
+
+def _head(params: PyTree, x: Array, cfg: ModelConfig) -> Array:
+    if cfg.family == "audio":
+        if cfg.tie_embeddings:
+            return jnp.einsum("bsd,kvd->bskv", x.astype(jnp.float32),
+                              params["embed"].astype(jnp.float32))
+        w = params["lm_head"]  # (D, K, V)
+        return dense(x, w, cfg).astype(jnp.float32)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return dense(x, w, cfg).astype(jnp.float32)
+
+
+def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
+                train: bool):
+    group_meta = layer_groups(cfg)
+    aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_ZERO}
+    new_caches = []
+    for gi, (kind, _count) in enumerate(group_meta):
+        gparams = params["groups"][gi]["params"]
+        gcache = caches[gi] if caches is not None else None
+
+        def body(carry, xs, kind=kind):
+            x_c, aux_c = carry
+            # Re-assert the batch sharding each layer: scans/remat otherwise
+            # let SPMD propagation drop it (observed: replicated activations
+            # inside the layer scan on the dry-run meshes).
+            x_c = constrain(x_c, ("batch", None, None))
+            if gcache is not None:
+                lp, lc = xs
+            else:
+                lp, lc = xs, None
+            y, nc, aux_l = block_apply(
+                kind, lp, x_c, cfg, positions=positions, cache=lc,
+                lengths=lengths, q_offset=q_offset)
+            aux_c = {k: aux_c[k] + jnp.asarray(aux_l[k], jnp.float32)
+                     for k in aux_c}
+            return (y, aux_c), nc
+
+        if train and cfg.remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            body = jax.checkpoint(body, policy=policy,
+                                  prevent_cse=False)
+        xs = (gparams, gcache) if gcache is not None else gparams
+        (x, aux_tot), nc = jax.lax.scan(body, (x, aux_tot), xs)
+        new_caches.append(nc)
+    return x, aux_tot, (new_caches if caches is not None else None)
+
+
+def forward(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig,
+            *, train: bool = True) -> Tuple[Array, Dict[str, Array]]:
+    """Full-sequence forward -> (logits over the token part, aux)."""
+    x = embed_tokens(params, batch, cfg)
+    x = constrain(x, ("batch", None, None))
+    b, s_total = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s_total)[None, :], (b, s_total))
+    x, aux, _ = _run_groups(params, x, cfg, positions=positions, caches=None,
+                            lengths=None, q_offset=0, train=train)
+    x = norm_apply(params["final_norm"], x, cfg)
+    pl = prefix_length(cfg)
+    logits = _head(params, x[:, pl:], cfg)
+    logits = constrain(logits, ("batch",) + (None,) * (logits.ndim - 2)
+                       + ("vocab",))
+    return logits, aux
+
+
+def _nll(logits: Array, labels: Array) -> Array:
+    """-log p[labels] without gather: the label logit is extracted with an
+    iota-compare masked sum, which shards cleanly over a vocab-partitioned
+    logits tensor (a gather/one-hot at (tokens × vocab) scale forced the
+    SPMD partitioner into multi-GB all-gathers on the dry-run meshes)."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    s = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(s), axis=-1))
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], s, 0.0), axis=-1)
+    return lse - label_logit
+
+
+def loss_fn(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig
+            ) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = forward(params, batch, cfg, train=True)
+    labels = batch["labels"]
+    mask = batch["mask"].astype(jnp.float32)
+    if cfg.family == "audio":
+        # labels (B, S, K); average over codebooks
+        nll = jnp.mean(_nll(logits, labels), axis=-1)
+    else:
+        nll = _nll(logits, labels)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    loss = ce + aux["lb_loss"] + aux["z_loss"]
+    metrics = {"loss": loss, "ce": ce, "lb_loss": aux["lb_loss"],
+               "z_loss": aux["z_loss"], "dropped_frac": aux["dropped_frac"],
+               "tokens": denom}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode / serving
+# ---------------------------------------------------------------------------
+
+
+class ModelCache(NamedTuple):
+    groups: Tuple[PyTree, ...]   # per layer-group stacked caches
+    lengths: Array               # (B,) valid lengths (total positions)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> ModelCache:
+    dt = cfg.activation_dtype
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    groups = []
+    for kind, count in layer_groups(cfg):
+        def stack(make):
+            one = make()
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+
+        if kind == "ssm":
+            groups.append(stack(lambda: ssm_mod.init_ssm_cache(cfg, batch)))
+        elif kind in ("hybrid_swa", "hybrid_global"):
+            def mk():
+                kv = KVCache(
+                    k=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+                    v=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt))
+                return hybrid_mod.HybridCache(
+                    kv=kv, ssm=ssm_mod.init_ssm_cache(cfg, batch))
+            groups.append(stack(mk))
+        elif _uses_mla(cfg):
+            m = cfg.mla
+            groups.append(stack(lambda: mla_mod.MLACache(
+                c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+                k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt))))
+        else:
+            groups.append(stack(lambda: KVCache(
+                k=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+                v=jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt))))
+    return ModelCache(groups=tuple(groups),
+                      lengths=jnp.zeros((batch,), jnp.int32))
+
+
+def cache_axes(cfg: ModelConfig) -> ModelCache:
+    """Logical-axes tree matching init_cache (for sharding resolution).
+    KV seq dim gets the "seq" rule (replicated by default; long-context
+    cells can override to shard the cache sequence over "data")."""
+    kv_axes = KVCache(
+        k=("layers", "batch", "kv_seq", "kv_heads", "head_dim_cache"),
+        v=("layers", "batch", "kv_seq", "kv_heads", "head_dim_cache"))
+    ssm_axes = ssm_mod.SSMCache(
+        conv=("layers", "batch", None, "inner"),
+        state=("layers", "batch", "heads", "state", "head_dim"))
+    groups = []
+    for kind, _ in layer_groups(cfg):
+        if kind == "ssm":
+            groups.append(ssm_axes)
+        elif kind in ("hybrid_swa", "hybrid_global"):
+            groups.append(hybrid_mod.HybridCache(kv=kv_axes, ssm=ssm_axes))
+        elif _uses_mla(cfg):
+            groups.append(mla_mod.MLACache(
+                c_kv=("layers", "batch", "kv_seq", "kv_lora_cache"),
+                k_rope=("layers", "batch", "kv_seq", None)))
+        else:
+            groups.append(kv_axes)
+    return ModelCache(groups=tuple(groups), lengths=("batch",))
+
+
+def decode_step(params: PyTree, cache: ModelCache, tokens: Array,
+                cfg: ModelConfig,
+                patches: Optional[Array] = None) -> Tuple[Array, ModelCache]:
+    """One decode step. tokens (B, 1) (audio: (B, 1, K)).
+
+    Positions are cache.lengths (append-at-end semantics); lengths advance
+    by 1. Prefix content (meta/patches) is assumed already prefetched into
+    the cache by `prefill`.
+    """
+    b = tokens.shape[0]
+    batch = {"tokens": tokens}
+    if cfg.family == "audio":
+        x = embed_tokens(params, batch, cfg)
+    else:
+        x = params["embed"][tokens].astype(cfg.activation_dtype)
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+    positions = cache.lengths[:, None]  # (B, 1)
+    lengths = cache.lengths + 1
+    x, _aux, new_groups = _run_groups(
+        params, x, cfg, positions=positions, caches=list(cache.groups),
+        lengths=lengths, q_offset=0, train=False)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = _head(params, x, cfg)
+    return logits, ModelCache(groups=tuple(new_groups), lengths=lengths)
+
+
+def prefill(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig,
+            cache: ModelCache) -> Tuple[Array, ModelCache]:
+    """Run the full prompt (incl. prefix) through the model, filling the
+    cache; returns (last-position logits, cache). Cache max_len must be >=
+    prompt length. Attention layers recompute K/V for the prompt and write
+    them at positions [0, S); SSM layers advance their state."""
+    x = embed_tokens(params, batch, cfg)
+    b, s_total = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s_total)[None, :], (b, s_total))
+    lengths = jnp.full((b,), s_total, jnp.int32)
+    # Prefill uses the blockwise path per layer but must also write KV into
+    # the cache: attention_apply's cache path handles (B, S) writes since
+    # cache_update writes S-length slabs at position 0.
+    x, _aux, new_groups = _run_groups(
+        params, x, cfg, positions=positions, caches=list(cache.groups),
+        lengths=lengths, q_offset=0, train=False)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = _head(params, x[:, -1:], cfg)
+    return logits, ModelCache(groups=tuple(new_groups), lengths=lengths)

@@ -1,0 +1,188 @@
+"""Mixture-of-Experts layer: top-k softmax router, sort-based capacity
+dispatch (TPU-friendly gather/scatter — no (T, E, C) one-hot dispatch
+tensors), shared experts, load-balance + router-z auxiliary losses.
+
+Expert FFN matmuls run vmapped over the expert dimension and therefore go
+through TimeFloats arithmetic when enabled — the experts ARE the crossbars
+in the train-in-memory picture (each expert's weights live in their own
+memristor arrays; routing merely selects which arrays see the token).
+
+Deviation noted in DESIGN.md: deepseek-v3's sigmoid router with
+aux-loss-free bias balancing is replaced by the standard softmax+aux-loss
+router (same FLOP/communication structure, simpler update rule).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, expert_mlp_apply
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    mo = cfg.moe
+    assert mo is not None
+    d, f = cfg.d_model, mo.d_expert
+    specs = {
+        "router": ParamSpec((d, mo.num_experts), ("embed", "experts"),
+                            dtype=jnp.float32),
+        "wg": ParamSpec((mo.num_experts, d, f), ("experts", "embed", "ffw")),
+        "wu": ParamSpec((mo.num_experts, d, f), ("experts", "embed", "ffw")),
+        "wd": ParamSpec((mo.num_experts, f, d), ("experts", "ffw", "embed")),
+    }
+    if mo.num_shared:
+        fs = mo.shared_d_ff or f
+        specs.update({
+            "shared_wg": ParamSpec((d, mo.num_shared * fs), ("embed", "ffw")),
+            "shared_wu": ParamSpec((d, mo.num_shared * fs), ("embed", "ffw")),
+            "shared_wd": ParamSpec((mo.num_shared * fs, d), ("ffw", "embed")),
+        })
+    return specs
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    mo = cfg.moe
+    c = int(math.ceil(n_tokens * mo.top_k / mo.num_experts
+                      * mo.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # pad to multiple of 8 for layout sanity
+
+
+def route(logits: Array, cfg: ModelConfig) -> Tuple[Array, Array, Dict[str, Array]]:
+    """logits (T, E) -> (weights (T,k), idx (T,k) int32, aux losses)."""
+    mo = cfg.moe
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, mo.top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # load-balance loss (Switch-style): E * Σ_e f_e P_e
+    e = mo.num_experts
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (T, k, E)
+    f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)     # fraction per expert
+    p_e = jnp.mean(probs, axis=0)
+    lb = e * jnp.sum(f_e * p_e) * mo.router_aux_coef
+    z = jnp.mean(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1) ** 2
+                 ) * mo.router_z_coef
+    return weights, idx, {"lb_loss": lb, "z_loss": z}
+
+
+def dispatch_indices(idx: Array, n_tokens: int, cap: int, n_experts: int):
+    """Sort-based dispatch bookkeeping.
+
+    Returns (slot (T*k,), order (T*k,), keep (T*k,)) where slot is the
+    destination row in the (E*C) expert buffer for the a-th sorted
+    assignment; dropped (over-capacity) assignments get slot E*C (overflow
+    row). `order` maps sorted position -> original assignment index.
+    """
+    flat = idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(flat.shape[0], dtype=jnp.int32) - offsets[sorted_e]
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, n_experts * cap)
+    return slot, order, keep
+
+
+def moe_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig
+              ) -> Tuple[Array, Dict[str, Array]]:
+    """x (B, S, D) -> (y, aux). Dispatch is over the flattened token dim,
+    optionally scanned in chunks (MoEConfig.dispatch_chunk, §Perf I-5)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    ck = mo.dispatch_chunk
+    if ck and t > ck and t % ck == 0:
+        xc = xf.reshape(t // ck, ck, d)
+
+        def body(_, xi):
+            yi, auxi = _moe_tokens(params, xi, cfg)
+            return None, (yi, auxi)
+
+        _, (yc, auxc) = jax.lax.scan(body, None, xc)
+        aux = {k: jnp.mean(v) for k, v in auxc.items()}
+        y = yc.reshape(t, d)
+        return y.reshape(b, s, d).astype(cfg.activation_dtype), aux
+    y, aux = _moe_tokens(params, xf, cfg)
+    return y.reshape(b, s, d).astype(cfg.activation_dtype), aux
+
+
+def _moe_tokens(params: Dict[str, Array], xf: Array, cfg: ModelConfig
+                ) -> Tuple[Array, Dict[str, Array]]:
+    """(T, D) tokens -> (T, D) output + aux; one dispatch buffer."""
+    mo = cfg.moe
+    t, d = xf.shape
+    # Router stays in f32 (precision-critical, tiny): plain matmul.
+    logits = xf.astype(jnp.float32) @ params["router"]
+    weights, idx, aux = route(logits, cfg)
+
+    cap = capacity(t, cfg)
+    slot, order, keep = dispatch_indices(idx, t, cap, mo.num_experts)
+    tok_of_sorted = order // mo.top_k
+
+    # Gather tokens into the (E, C, D) expert buffer (overflow row dropped).
+    # The buffer is constrained to expert parallelism (experts -> "model"):
+    # the token->slot scatter then lowers to the EP all-to-all instead of a
+    # replicated (E*C, D) temp (60 GB/device on the deepseek-v3 dry-run).
+    buf = jnp.zeros((mo.num_experts * cap + 1, d), xf.dtype)
+    buf = buf.at[slot].set(xf[tok_of_sorted], mode="drop")
+    xe = buf[: mo.num_experts * cap].reshape(mo.num_experts, cap, d)
+    if mo.ep_mode == "constrained":
+        xe = constrain(xe, ("experts", None, None))
+
+    ye = jax.vmap(lambda wg, wu, wd, xi: expert_mlp_apply(wg, wu, wd, xi, cfg)
+                  )(params["wg"], params["wu"], params["wd"], xe)
+    if mo.ep_mode == "constrained":
+        ye = constrain(ye, ("experts", None, None))
+
+    # Scatter back with combine weights. The combine buffer accumulates in
+    # the ACTIVATION dtype (bf16), not f32: this tensor is a partial sum
+    # over the model axis and crosses the wire in an all-reduce — f32 here
+    # doubled the dominant collective on the kimi prefill cell (§Perf I-6).
+    # Only k=8 bf16 addends land per row, so the precision cost is benign
+    # (and consistent with the paper's FP8-tolerance premise).
+    adt = cfg.activation_dtype
+    ye_flat = jnp.concatenate(
+        [ye.reshape(mo.num_experts * cap, d), jnp.zeros((1, d), ye.dtype)])
+    contrib = ye_flat[slot]  # (T*k, D) in sorted order
+    w_sorted = weights.reshape(-1)[order] * keep.astype(jnp.float32)
+    y = jnp.zeros((t, d), adt)
+    y = y.at[tok_of_sorted].add((contrib.astype(jnp.float32)
+                                 * w_sorted[:, None]).astype(adt))
+    y = constrain(y, ("batch", None))
+
+    if mo.num_shared:
+        y = y + expert_mlp_apply(params["shared_wg"], params["shared_wu"],
+                                 params["shared_wd"], xf, cfg).astype(adt)
+    aux["dropped_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y.astype(cfg.activation_dtype), aux
+
+
+def moe_apply_reference(params: Dict[str, Array], x: Array, cfg: ModelConfig
+                        ) -> Array:
+    """O(T·E) dense reference (every expert sees every token, masked) — used
+    by tests to validate the sort-based dispatch. No capacity drops."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"]
+    weights, idx, _ = route(logits, cfg)
+    ye = jax.vmap(lambda wg, wu, wd: expert_mlp_apply(wg, wu, wd, xf, cfg)
+                  )(params["wg"], params["wu"], params["wd"])  # (E, T, D)
+    onehot = jax.nn.one_hot(idx, mo.num_experts, dtype=jnp.float32)  # (T,k,E)
+    comb = jnp.einsum("tke,k...->te", onehot * weights[..., None],
+                      jnp.ones((mo.top_k,)))
+    y = jnp.einsum("te,etd->td", comb, ye.astype(jnp.float32))
+    if mo.num_shared:
+        y = y + expert_mlp_apply(params["shared_wg"], params["shared_wu"],
+                                 params["shared_wd"], xf, cfg
+                                 ).astype(jnp.float32)
+    return y.reshape(b, s, d).astype(cfg.activation_dtype)

@@ -1,0 +1,252 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked matmul-form training
+scan + O(1)-state decode step.
+
+TPU adaptation notes (DESIGN.md): the SSD block decomposition is already
+matmul-dominant (intra-chunk quadratic attention-like einsums + inter-chunk
+state recurrence), which is exactly the MXU-friendly form — no custom kernel
+needed for faithfulness. Projections (wz/wx/wB/wC/wdt/out) run through
+TimeFloats when enabled; the state recurrence itself is activation×activation
+arithmetic with no stored-weight operand, i.e. outside the crossbar's
+weight-stationary model — kept in f32/bf16 (noted inapplicability).
+
+Projections are stored un-fused (wz/wx/wB/wC/wdt instead of one in_proj) so
+tensor-parallel sharding never slices across component boundaries.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, dense, rms_norm
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    conv: Array   # (B, d_conv-1, conv_dim) rolling input buffer
+    state: Array  # (B, H, N, P) SSM state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+
+    def dt_bias_init(key, shape, dtype):
+        dt = jnp.exp(jax.random.uniform(key, shape, jnp.float32)
+                     * (math.log(s.dt_max) - math.log(s.dt_min))
+                     + math.log(s.dt_min))
+        return jnp.log(jnp.expm1(dt)).astype(dtype)  # inverse softplus
+
+    def a_log_init(key, shape, dtype):
+        return jnp.log(jax.random.uniform(key, shape, jnp.float32,
+                                          minval=1.0, maxval=16.0)).astype(dtype)
+
+    return {
+        "wz": ParamSpec((d, d_inner), ("embed", "inner")),
+        "wx": ParamSpec((d, d_inner), ("embed", "inner")),
+        "wB": ParamSpec((d, gn), ("embed", "state")),
+        "wC": ParamSpec((d, gn), ("embed", "state")),
+        "wdt": ParamSpec((d, h), ("embed", "heads")),
+        "conv_x": ParamSpec((s.d_conv, d_inner), (None, "inner"),
+                            init="normal", scale=0.1),
+        "conv_B": ParamSpec((s.d_conv, gn), (None, "state"),
+                            init="normal", scale=0.1),
+        "conv_C": ParamSpec((s.d_conv, gn), (None, "state"),
+                            init="normal", scale=0.1),
+        "A_log": ParamSpec((h,), ("heads",), init=a_log_init),
+        "D": ParamSpec((h,), ("heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("heads",), init=dt_bias_init),
+        "norm": ParamSpec((d_inner,), ("inner",), init="ones"),
+        "out": ParamSpec((d_inner, d), ("inner", "embed"),
+                         scale=1.0 / math.sqrt(s.expand)),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv: x (B, S, C), w (W, C)."""
+    wk = w[:, None, :]  # (W, 1, C) — WIO with feature groups = C
+    return jax.lax.conv_general_dilated(
+        x, wk.astype(x.dtype), window_strides=(1,),
+        padding=[(w.shape[0] - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+
+
+def _segsum(dA: Array) -> Array:
+    """dA (..., L) -> (..., L, L): sum_{j<k<=i} dA_k for i>=j else -inf."""
+    cs = jnp.cumsum(dA, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    l = dA.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array,    # (B, S, H, P) f32
+    dt: Array,   # (B, S, H) f32 (post-softplus)
+    a: Array,    # (H,) f32 negative
+    b_mat: Array,  # (B, S, G, N) f32
+    c_mat: Array,  # (B, S, G, N) f32
+    chunk: int,
+    initial_state: Optional[Array] = None,  # (B, H, N, P)
+) -> Tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    bsz, s_in, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+    pad = (-s_in) % chunk
+    if pad:
+        # dt=0 padding: dA=0 (decay 1), x̄=0 — no state/output contribution.
+        def pz(t):
+            w = [(0, 0)] * t.ndim
+            w[1] = (0, pad)
+            return jnp.pad(t, w)
+
+        x, dt, b_mat, c_mat = pz(x), pz(dt), pz(b_mat), pz(c_mat)
+    s = s_in + pad
+    c = s // chunk
+
+    def chunked(t, extra):  # (B, S, ...) -> (B, C, L, ...)
+        return t.reshape((bsz, c, chunk) + extra)
+
+    xc = chunked(x, (g, hg, p))
+    dtc = chunked(dt, (g, hg))
+    bc = chunked(b_mat, (g, n))
+    cc = chunked(c_mat, (g, n))
+    da = dtc * a.reshape(g, hg)  # (B,C,L,G,Hg)
+    dac = jnp.cumsum(da, axis=2)
+    xbar = xc * dtc[..., None]
+
+    # 1) intra-chunk (attention-like, lower-triangular)
+    lmat = jnp.exp(_segsum(jnp.moveaxis(da, 2, -1)))  # (B,C,G,Hg,L,L)
+    cb = jnp.einsum("bclgn,bcmgn->bcglm", cc, bc)
+    y_diag = jnp.einsum("bcglm,bcghlm,bcmghp->bclghp", cb, lmat, xbar)
+
+    # 2) per-chunk states
+    decay_states = jnp.exp(dac[:, :, -1:, :, :] - dac)  # (B,C,L,G,Hg)
+    s_chunk = jnp.einsum("bclgn,bclgh,bclghp->bcghnp", bc, decay_states, xbar)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(dac[:, :, -1, :, :])  # (B,C,G,Hg)
+    if initial_state is None:
+        s0 = jnp.zeros((bsz, g, hg, n, p), jnp.float32)
+    else:
+        s0 = initial_state.reshape(bsz, g, hg, n, p).astype(jnp.float32)
+
+    def scan_fn(carry, inp):
+        s_c, decay_c = inp  # (B,G,Hg,N,P), (B,G,Hg)
+        out = carry
+        new = carry * decay_c[..., None, None] + s_c
+        return new, out
+
+    s_cs = jnp.moveaxis(s_chunk, 1, 0)      # (C,B,G,Hg,N,P)
+    dec = jnp.moveaxis(chunk_decay, 1, 0)   # (C,B,G,Hg)
+    final, s_prev = jax.lax.scan(scan_fn, s0, (s_cs, dec))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)     # (B,C,G,Hg,N,P)
+
+    # 4) off-diagonal (state) contribution
+    state_decay_in = jnp.exp(dac)  # (B,C,L,G,Hg)
+    y_off = jnp.einsum("bclgn,bcghnp,bclgh->bclghp", cc, s_prev,
+                       state_decay_in)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_in]
+    return y, final.reshape(bsz, h, n, p)
+
+
+def ssm_apply(
+    params: Dict[str, Array],
+    x: Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    cache: Optional[SSMCache] = None,
+) -> Tuple[Array, Optional[SSMCache]]:
+    s_cfg = cfg.ssm
+    d_inner, h, conv_dim = _dims(cfg)
+    g, n, p = s_cfg.n_groups, s_cfg.d_state, s_cfg.head_dim
+    bsz, seq, _ = x.shape
+
+    z = dense(x, params["wz"], cfg)
+    xs = dense(x, params["wx"], cfg)
+    bs = dense(x, params["wB"], cfg)
+    cs = dense(x, params["wC"], cfg)
+    dt_raw = dense(x, params["wdt"], cfg)
+    xbc = jnp.concatenate([xs, bs, cs], axis=-1)
+
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_B"],
+                              params["conv_C"]], axis=-1)
+    if cache is None:
+        xbc = jax.nn.silu(_causal_conv(xbc, conv_w))
+        new_conv = None
+    elif seq == 1:
+        full = jnp.concatenate([cache.conv, xbc], axis=1)
+        out = jnp.einsum("bwc,wc->bc", full[:, -s_cfg.d_conv:],
+                         conv_w.astype(full.dtype))
+        xbc = jax.nn.silu(out)[:, None, :]
+        new_conv = full[:, -(s_cfg.d_conv - 1):, :]
+    else:
+        # prefill-with-cache: conv sees the cached left context
+        full = jnp.concatenate([cache.conv, xbc], axis=1)
+        xbc = jax.nn.silu(_causal_conv(full, conv_w))[:, -(seq):, :]
+        new_conv = full[:, -(s_cfg.d_conv - 1):, :]
+
+    xs = xbc[..., :d_inner]
+    bs = xbc[..., d_inner: d_inner + g * n]
+    cs = xbc[..., d_inner + g * n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(bsz, -1, h, p).astype(jnp.float32)
+    bm = bs.reshape(bsz, -1, g, n).astype(jnp.float32)
+    cm = cs.reshape(bsz, -1, g, n).astype(jnp.float32)
+
+    new_cache = None
+    if cache is None:
+        y, _final = ssd_chunked(xh, dt, a, bm, cm, min(s_cfg.chunk, seq))
+    elif seq > 1:
+        y, final = ssd_chunked(xh, dt, a, bm, cm, min(s_cfg.chunk, seq),
+                               initial_state=cache.state.astype(jnp.float32))
+        new_cache = SSMCache(conv=new_conv, state=final)
+    else:
+        # single-step recurrence: state (B,H,N,P)
+        hg = h // g
+        st = cache.state.astype(jnp.float32).reshape(bsz, g, hg, n, p)
+        dt1 = dt[:, 0].reshape(bsz, g, hg)
+        da = jnp.exp(dt1 * a.reshape(g, hg))
+        xb = xh[:, 0].reshape(bsz, g, hg, p) * dt1[..., None]
+        st = (st * da[..., None, None]
+              + jnp.einsum("bgn,bghp->bghnp", bm[:, 0], xb))
+        y = jnp.einsum("bgn,bghnp->bghp", cm[:, 0], st)
+        y = y.reshape(bsz, 1, h, p)
+        new_cache = SSMCache(conv=new_conv,
+                             state=st.reshape(bsz, h, n, p))
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh[:, :y.shape[1]]
+    y = y.reshape(bsz, -1, d_inner)
+    y = y * jax.nn.silu(z[:, : y.shape[1]].astype(jnp.float32))
+    y = rms_norm(y.astype(cfg.activation_dtype), params["norm"])
+    out = dense(y, params["out"], cfg)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    s = cfg.ssm
+    d_inner, h, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), cfg.activation_dtype),
+        state=jnp.zeros((batch, h, s.d_state, s.head_dim), jnp.float32),
+    )

@@ -1,0 +1,197 @@
+"""Optimizers: SGD(+momentum), AdamW, Adafactor (factored second moments —
+what makes 1T-param optimizer state fit), and the paper's **in-situ FP8
+update mode**.
+
+In-situ mode (train-in-memory): the stored weights never leave the E4M4
+grid — after every update the parameters are re-quantized,
+``w ← Q(w − lr·g)``, optionally with stochastic rounding (the standard
+fix for update-swallowing when |lr·g| is below the FP8 ULP; the paper's
+memristor program-read-tune cycles play this role on chip). Master-weight
+(QAT) mode simply skips the re-quantization.
+
+Interfaces are optax-like but self-contained: ``init(params) -> state``,
+``update(grads, state, params, step) -> (new_params, new_state)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import float8
+from repro.core.timefloats import TFConfig
+from repro.optim import schedules
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"             # sgd | adamw | adafactor
+    lr: float = 3e-4
+    schedule: str = "warmup_cosine"
+    warmup: int = 100
+    total_steps: int = 10000
+    momentum: float = 0.9
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    # in-situ FP8 storage (the paper's mode); None -> master weights
+    insitu: Optional[TFConfig] = None
+    stochastic_rounding: bool = True
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+
+
+def global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def _maybe_requantize(cfg: OptimizerConfig, params: PyTree, rng: Array
+                      ) -> PyTree:
+    if cfg.insitu is None:
+        return params
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(rng, len(leaves))
+    fmt = cfg.insitu.fmt
+
+    def q(x, k):
+        if x.ndim < 2:  # norms/biases stay digital (periphery registers)
+            return x
+        # scale-aware: codes are relative to the per-tensor reference (the
+        # chip's programmable V_B); raw-grid quantization would flush
+        # sub-min-normal weights to zero and freeze training.
+        if cfg.stochastic_rounding:
+            return float8.quantize_scaled(x, fmt, stochastic_key=k)
+        return float8.quantize_scaled(x, fmt)
+
+    return jax.tree.unflatten(treedef, [q(x, k) for x, k in zip(leaves, keys)])
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    sched = schedules.get(cfg.schedule, cfg.lr, cfg.warmup, cfg.total_steps)
+
+    if cfg.name == "sgd":
+        def init(params):
+            if cfg.momentum:
+                return {"mom": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+            return {}
+
+        def update(grads, state, params, step, rng=None):
+            lr = sched(step)
+            if cfg.momentum:
+                mom = jax.tree.map(
+                    lambda m, g: cfg.momentum * m + g.astype(jnp.float32),
+                    state["mom"], grads)
+                delta = mom
+                state = {"mom": mom}
+            else:
+                delta = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            new = jax.tree.map(
+                lambda p, d: (p.astype(jnp.float32) - lr * d).astype(p.dtype),
+                params, delta)
+            new = _maybe_requantize(cfg, new, rng if rng is not None
+                                    else jax.random.PRNGKey(0))
+            return new, state
+
+        return Optimizer(init, update)
+
+    if cfg.name == "adamw":
+        def init(params):
+            z = lambda p: jnp.zeros(p.shape, jnp.float32)
+            return {"m": jax.tree.map(z, params),
+                    "v": jax.tree.map(z, params)}
+
+        def update(grads, state, params, step, rng=None):
+            lr = sched(step)
+            t = step.astype(jnp.float32) + 1.0
+            m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1)
+                             * g.astype(jnp.float32), state["m"], grads)
+            v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2)
+                             * jnp.square(g.astype(jnp.float32)),
+                             state["v"], grads)
+            bc1 = 1 - cfg.b1 ** t
+            bc2 = 1 - cfg.b2 ** t
+
+            def upd(p, m, v):
+                step_ = lr * (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+                if cfg.weight_decay and p.ndim >= 2:
+                    step_ = step_ + lr * cfg.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+            new = jax.tree.map(upd, params, m, v)
+            new = _maybe_requantize(cfg, new, rng if rng is not None
+                                    else jax.random.PRNGKey(0))
+            return new, {"m": m, "v": v}
+
+        return Optimizer(init, update)
+
+    if cfg.name == "adafactor":
+        # Factored second moments for >=2D params: state is O(sum of dims),
+        # not O(param count) — the optimizer-state answer for the 1T cells.
+        def init(params):
+            def f(p):
+                if p.ndim >= 2:
+                    return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                            jnp.float32)}
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+            return {"fac": jax.tree.map(f, params)}
+
+        def update(grads, state, params, step, rng=None):
+            lr = sched(step)
+            decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+            def upd(p, g, s):
+                g = g.astype(jnp.float32)
+                g2 = jnp.square(g) + 1e-30
+                if p.ndim >= 2:
+                    vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                    vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                    denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                        1e-30)
+                    vhat = (vr[..., None] * vc[..., None, :]
+                            / denom[..., None])
+                    upd_ = g / (jnp.sqrt(vhat) + 1e-30)
+                    ns = {"vr": vr, "vc": vc}
+                else:
+                    v = decay * s["v"] + (1 - decay) * g2
+                    upd_ = g / (jnp.sqrt(v) + 1e-30)
+                    ns = {"v": v}
+                # update clipping (RMS<=1), standard adafactor
+                rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-30)
+                upd_ = upd_ / jnp.maximum(1.0, rms)
+                new_p = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+                return new_p, ns
+
+            flat_p, treedef = jax.tree.flatten(params)
+            flat_g = jax.tree.leaves(grads)
+            flat_s = treedef.flatten_up_to(state["fac"])
+            out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+            new = jax.tree.unflatten(treedef, [o[0] for o in out])
+            ns = jax.tree.unflatten(treedef, [o[1] for o in out])
+            new = _maybe_requantize(cfg, new, rng if rng is not None
+                                    else jax.random.PRNGKey(0))
+            return new, {"fac": ns}
+
+        return Optimizer(init, update)
+
+    raise ValueError(cfg.name)

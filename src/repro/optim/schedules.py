@@ -1,0 +1,34 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1) -> Schedule:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                    (1 + jnp.cos(math.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def get(name: str, lr: float, warmup: int = 100, total: int = 10000) -> Schedule:
+    if name == "constant":
+        return constant(lr)
+    if name == "warmup_cosine":
+        return warmup_cosine(lr, warmup, total)
+    raise ValueError(name)

@@ -1,0 +1,84 @@
+"""Int8 gradient compression with error feedback for the cross-pod
+all-reduce — the lowest-bandwidth link in the production mesh.
+
+Scheme (1-bit-Adam-family, int8 variant):
+    send      = g + e            (e = residual from last step)
+    q         = int8(send / s),  s = max|send| / 127   (per-tensor scale)
+    g_hat     = psum(q * s) / n_pods     (int8 payload on the wire)
+    e_new     = send - q * s     (local quantization residual)
+
+Error feedback makes the compression *unbiased over time*: residuals are
+re-injected next step, so convergence matches uncompressed SGD/Adam to
+first order (validated in tests/test_parallel.py by training to parity).
+
+`compressed_psum_tree` is designed for use inside shard_map over the pod
+axis (pure-DP pod mode). Wire-bytes accounting is returned so benchmarks
+can report the 4x reduction (f32) / 2x (bf16) per gradient sync.
+
+This mirrors the paper's premise that gradients tolerate aggressive
+quantization (TimeFloats trains *with FP8 arithmetic*; shipping FP8-grade
+gradients over the slowest link is the distributed-systems corollary).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class CompressionState(NamedTuple):
+    error: PyTree  # residual per gradient leaf (f32)
+
+
+def init_state(grads_like: PyTree) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                           grads_like))
+
+
+def _quantize(x: Array) -> Tuple[Array, Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum_tree(
+    grads: PyTree,
+    state: CompressionState,
+    axis_name: str,
+) -> Tuple[PyTree, CompressionState, Array]:
+    """All-reduce `grads` over `axis_name` with int8 payloads + error
+    feedback. Must run inside shard_map/pmap with that axis. Returns
+    (mean gradients, new state, wire_bytes_this_step)."""
+    n = jax.lax.psum(1, axis_name)
+    wire_bytes = jnp.zeros((), jnp.float32)
+    new_err = []
+    outs = []
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = jax.tree.leaves(state.error)
+    for g, e in zip(g_leaves, e_leaves):
+        send = g.astype(jnp.float32) + e
+        q, scale = _quantize(send)
+        # Wire payload per pod: int8 tensor + one f32 scale. (The psum of
+        # q*scale is the semantic model; a production ring would ship the
+        # int8 buffer and dequantize at the reducer.)
+        deq = q.astype(jnp.float32) * scale
+        mean = jax.lax.psum(deq, axis_name) / n
+        new_err.append(send - deq)
+        outs.append(mean.astype(g.dtype))
+        wire_bytes = wire_bytes + q.size + 4
+    return (jax.tree.unflatten(treedef, outs),
+            CompressionState(error=jax.tree.unflatten(treedef, new_err)),
+            wire_bytes)
+
+
+def uncompressed_psum_tree(grads: PyTree, axis_name: str
+                           ) -> Tuple[PyTree, Array]:
+    n = jax.lax.psum(1, axis_name)
+    out = jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads)
+    bytes_ = sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))
+    return out, jnp.asarray(bytes_, jnp.float32)

@@ -1,0 +1,46 @@
+"""ZeRO-style optimizer-state sharding helper.
+
+With the default FSDP rules (embed dim sharded over "data") optimizer state
+already inherits fully-sharded specs from the parameters. This module covers
+the *residual* case — parameters whose specs leave a dim replicated (small
+models, norms-free dims) — by assigning the first divisible replicated dim
+of each optimizer-state leaf to the given axes (ZeRO-1 semantics: state
+sharded even where params are replicated; params are re-gathered by GSPMD
+at update time).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def zero_shard_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+                    axes: Tuple[str, ...] = ("data",)) -> P:
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for p in parts if p is not None
+            for a in (p if isinstance(p, tuple) else (p,))}
+    free = [a for a in axes if a in mesh.shape and a not in used]
+    if not free:
+        return P(*parts)
+    size = 1
+    for a in free:
+        size *= mesh.shape[a]
+    for i, (dim, p) in enumerate(zip(shape, parts)):
+        if p is None and dim % size == 0 and dim > 0:
+            parts[i] = tuple(free) if len(free) > 1 else free[0]
+            break
+    return P(*parts)
+
+
+def zero_shardings(state_shardings: PyTree, state_shapes: PyTree, mesh: Mesh,
+                   axes: Tuple[str, ...] = ("data",)) -> PyTree:
+    def leaf(sh: NamedSharding, shaped):
+        return NamedSharding(mesh, zero_shard_spec(sh.spec,
+                                                   tuple(shaped.shape),
+                                                   mesh, axes))
+
+    return jax.tree.map(leaf, state_shardings, state_shapes)

@@ -1,0 +1,139 @@
+"""Batched serving engine: fixed-slot continuous batching.
+
+`Engine` holds a jitted decode_step over a (slots, max_len) cache. Requests
+queue up; free slots are prefilling prompts (per-request prefill into the
+slot's cache lines) while occupied slots decode. All slots advance together
+each `step()` — the standard TPU serving shape (decode batch is the unit of
+work; finished slots are recycled without disturbing others).
+
+Sampling: greedy or temperature. Stop: EOS token or per-request max tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32 (audio: (S, K))
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Finished:
+    uid: int
+    tokens: np.ndarray
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
+                 max_len: int = 512, eos_id: Optional[int] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model_lib.init_cache(cfg, slots, max_len)
+        self.active: Dict[int, Request] = {}      # slot -> request
+        self.queue: List[Request] = []
+        self.last_token = np.zeros(
+            (slots, 1) if cfg.family != "audio"
+            else (slots, 1, cfg.num_codebooks), np.int32)
+        self.rng = jax.random.PRNGKey(seed)
+
+        self._decode = jax.jit(
+            lambda p, c, t: model_lib.decode_step(p, c, t, cfg))
+        self._prefill1 = jax.jit(
+            lambda p, c, b: model_lib.prefill(p, b, cfg, c))
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.slots) if i not in self.active]
+
+    def _insert_prefill(self, slot: int, req: Request):
+        """Prefill a single prompt and splice its cache lines into `slot`."""
+        s = len(req.prompt)
+        assert s < self.max_len, "prompt longer than cache"
+        one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.num_prefix_tokens, self.cfg.d_model),
+                jnp.bfloat16)
+        logits, one_cache = self._prefill1(self.params, one_cache, batch)
+
+        def splice(full, one):
+            # group caches: leaves (L, B, ...) — write batch row `slot`
+            return full.at[:, slot].set(one[:, 0])
+
+        groups = tuple(
+            jax.tree.map(splice, gf, g1)
+            for gf, g1 in zip(self.cache.groups, one_cache.groups))
+        lengths = self.cache.lengths.at[slot].set(one_cache.lengths[0])
+        self.cache = model_lib.ModelCache(groups=groups, lengths=lengths)
+        tok = np.asarray(jnp.argmax(logits[0, -1], axis=-1)).reshape(-1)
+        if self.cfg.family == "audio":
+            self.last_token[slot, 0] = tok
+            req.generated.append(int(tok[0]))
+        else:
+            self.last_token[slot, 0] = int(tok[0])
+            req.generated.append(int(tok[0]))
+        self.active[slot] = req
+
+    def step(self) -> List[Finished]:
+        # 1) admit queued requests into free slots
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._insert_prefill(slot, self.queue.pop(0))
+        if not self.active:
+            return []
+        # 2) one decode step for every slot
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(self.last_token))
+        logits = logits[:, 0]  # (slots, [K,] V)
+        finished: List[Finished] = []
+        for slot, req in list(self.active.items()):
+            lg = logits[slot]
+            if req.temperature > 0:
+                self.rng, k = jax.random.split(self.rng)
+                tok = jax.random.categorical(k, lg / req.temperature, axis=-1)
+            else:
+                tok = jnp.argmax(lg, axis=-1)
+            tok = np.asarray(tok).reshape(-1)
+            first = int(tok[0])
+            req.generated.append(first)
+            self.last_token[slot, 0] = tok if self.cfg.family == "audio" else first
+            done = (len(req.generated) >= req.max_new_tokens
+                    or (self.eos_id is not None and first == self.eos_id)
+                    or int(self.cache.lengths[slot]) >= self.max_len - 1)
+            if done:
+                finished.append(Finished(uid=req.uid,
+                                         tokens=np.asarray(req.generated)))
+                del self.active[slot]
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Finished]:
+        out: List[Finished] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.active and not self.queue:
+                break
+        return out

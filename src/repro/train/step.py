@@ -1,0 +1,134 @@
+"""Train step factory: grad-accumulation microbatching, global-norm
+clipping, optimizer update, optional in-situ FP8 requantization.
+
+Grad accumulation is a lax.scan over microbatches (single weight-gradient
+all-reduce per step — the basic compute/comm overlap lever), with a
+configurable accumulator dtype: fp32 by default, bf16 for the 1T-param
+cells where the fp32 accumulator alone would blow the per-device HBM budget
+(§Perf discusses the trade).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.optim.optimizers import (OptimizerConfig, clip_by_global_norm,
+                                    make_optimizer)
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    accum: int = 1                    # gradient-accumulation microbatches
+    accum_dtype: str = "float32"      # fp32 | bfloat16 (1T cells)
+    donate: bool = True
+
+
+class TrainState(NamedTuple):
+    step: Array       # () int32
+    params: PyTree
+    opt: PyTree
+    rng: Array        # PRNGKey
+
+
+def init_state(model_cfg: ModelConfig, train_cfg: TrainConfig,
+               key: Array) -> TrainState:
+    k_init, k_rng = jax.random.split(key)
+    params = model_lib.init(model_cfg, k_init)
+    opt = make_optimizer(train_cfg.optimizer).init(params)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=opt, rng=k_rng)
+
+
+def state_axes(model_cfg: ModelConfig, train_cfg: TrainConfig) -> TrainState:
+    """Logical-axes tree matching TrainState (for sharding resolution)."""
+    p_axes = model_lib.param_axes(model_cfg)
+    name = train_cfg.optimizer.name
+    if name == "sgd":
+        o_axes = {"mom": p_axes} if train_cfg.optimizer.momentum else {}
+    elif name == "adamw":
+        o_axes = {"m": p_axes, "v": p_axes}
+    elif name == "adafactor":
+        def fac(axes):
+            if len(axes) >= 2:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+
+        o_axes = {"fac": jax.tree.map(
+            fac, p_axes, is_leaf=lambda x: isinstance(x, tuple))}
+    else:
+        raise ValueError(name)
+    return TrainState(step=(), params=p_axes, opt=o_axes, rng=(None,))
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    optimizer = make_optimizer(train_cfg.optimizer)
+    adt = jnp.dtype(train_cfg.accum_dtype)
+
+    def loss(params, mb):
+        return model_lib.loss_fn(params, mb, model_cfg)
+
+    def train_step(state: TrainState, batch: Dict[str, Array]
+                   ) -> Tuple[TrainState, Dict[str, Array]]:
+        rng, rng_next = jax.random.split(state.rng)
+        if train_cfg.accum == 1:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                state.params, batch)
+        else:
+            a = train_cfg.accum
+
+            def resh(x):
+                assert x.shape[0] % a == 0, (x.shape, a)
+                # (B, ...) -> (accum, B/a, ...) such that the *microbatch*
+                # dim keeps the global batch sharding: splitting the major
+                # positions and transposing keeps each device's shard spread
+                # across all microbatches (reshape (a, B/a) would put the
+                # sharded axis on the accum dim -> replicated microbatches,
+                # observed as a 16x per-device activation blowup in the
+                # dry-run HLO; EXPERIMENTS.md §Perf iteration 1).
+                x = x.reshape(x.shape[0] // a, a, *x.shape[1:]).swapaxes(0, 1)
+                return constrain(x, (None, "batch") + (None,) * (x.ndim - 2))
+
+            micro = jax.tree.map(resh, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), state.params)
+            m0 = {"loss": 0.0, "ce": 0.0, "lb_loss": 0.0, "z_loss": 0.0,
+                  "dropped_frac": 0.0, "tokens": 0.0}
+            m0 = {k: jnp.zeros((), jnp.float32) for k in m0}
+
+            def body(carry, mb):
+                gsum, msum = carry
+                mb = jax.tree.map(
+                    lambda x: constrain(
+                        x, ("batch",) + (None,) * (x.ndim - 1)), mb)
+                (_, m), g = jax.value_and_grad(loss, has_aux=True)(
+                    state.params, mb)
+                gsum = jax.tree.map(lambda a_, b: a_ + b.astype(adt), gsum, g)
+                msum = {k: msum[k] + jnp.asarray(m[k], jnp.float32)
+                        for k in msum}
+                return (gsum, msum), None
+
+            (gsum, msum), _ = jax.lax.scan(body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: (g / a).astype(jnp.float32), gsum)
+            metrics = {k: v / a for k, v in msum.items()}
+            metrics["tokens"] = msum["tokens"]
+
+        grads, gnorm = clip_by_global_norm(grads,
+                                           train_cfg.optimizer.grad_clip)
+        params, opt = optimizer.update(grads, state.opt, state.params,
+                                       state.step, rng=rng)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr_step"] = state.step.astype(jnp.float32)
+        return TrainState(step=state.step + 1, params=params, opt=opt,
+                          rng=rng_next), metrics
+
+    return train_step

@@ -1,0 +1,30 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — tests run on the single
+CPU device; only launch/dryrun.py forces 512 placeholder devices (harness
+contract). Multi-device tests spawn subprocesses instead."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+# Determinism for the whole suite.
+np.random.seed(0)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def run_subprocess_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run `code` in a subprocess with n fake CPU devices (for mesh tests)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"subprocess failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,152 @@
+"""Unit + property tests for the E4M4 codec (core/float8.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import float8
+from repro.core.float8 import E4M3, E4M4, E5M2, FloatFormat
+
+
+FORMATS = [E4M4, E4M3, E5M2]
+
+
+def all_code_values(fmt: FloatFormat) -> np.ndarray:
+    """Every representable positive value of the format."""
+    vals = []
+    for e in range(fmt.max_exp_code + 1):
+        for m in range(fmt.max_man_code + 1):
+            vals.append((1 + m / fmt.significand_scale) * 2.0 ** (e - fmt.bias))
+    return np.unique(np.array(vals, np.float32))
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=["e4m4", "e4m3", "e5m2"])
+def test_roundtrip_exact_on_grid(fmt):
+    """decompose∘compose is identity on representable values (both signs)."""
+    grid = all_code_values(fmt)
+    for sign in (1.0, -1.0):
+        x = jnp.asarray(sign * grid)
+        y = float8.compose(float8.decompose(x, fmt), fmt)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=["e4m4", "e4m3", "e5m2"])
+def test_zero_and_special(fmt):
+    x = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan], jnp.float32)
+    f = float8.decompose(x, fmt)
+    assert not bool(f.nonzero[0]) and not bool(f.nonzero[1])
+    # inf/nan are flushed (analog array has no inf); value becomes 0
+    y = float8.compose(f, fmt)
+    assert float(y[0]) == 0.0
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_saturation():
+    fmt = E4M4
+    big = jnp.asarray([1e9, -1e9], jnp.float32)
+    y = float8.compose(float8.decompose(big, fmt), fmt)
+    assert float(y[0]) == fmt.max_value
+    assert float(y[1]) == -fmt.max_value
+
+
+def test_flush_to_zero_subnormal():
+    fmt = E4M4
+    tiny = jnp.asarray([fmt.min_normal * 0.49, -fmt.min_normal * 0.4])
+    y = float8.compose(float8.decompose(tiny, fmt), fmt)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(2, np.float32))
+
+
+@settings(deadline=None, max_examples=200)
+@given(st.floats(min_value=-200.0, max_value=200.0,
+                 allow_nan=False, allow_infinity=False))
+def test_round_to_nearest_property(v):
+    """Quantized value is the nearest representable (ties either way).
+
+    The comparison must happen against the f32 representation of the
+    sample: hypothesis draws f64 values, and f32 rounding alone can move v
+    across the midpoint between two grid points (|f32(v)-v| up to
+    ~200*2^-24 ≈ 1.2e-5 — a first version with a 1e-6 slack flaked here).
+    """
+    fmt = E4M4
+    v32 = np.float32(v)
+    x = jnp.asarray([v32], jnp.float32)
+    y = float(float8.quantize(x, fmt)[0])
+    grid = all_code_values(fmt)
+    grid = np.concatenate([-grid[::-1], [0.0], grid])
+    if abs(v32) > fmt.max_value:  # saturation region
+        assert abs(y) == fmt.max_value
+        return
+    best = np.min(np.abs(grid - np.float64(v32)))
+    assert abs(y - np.float64(v32)) <= best * (1 + 1e-6) + 1e-12, (v, y)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(0, 2**31 - 1))
+def test_relative_error_bound(seed):
+    """|Q(x)-x|/|x| <= 2^-(m+1) for values in normal range (RTN property)."""
+    fmt = E4M4
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (64,), jnp.float32, 0.51 * fmt.min_normal * 2,
+                           fmt.max_value * 0.99)
+    y = float8.quantize(x, fmt)
+    rel = jnp.abs(y - x) / jnp.abs(x)
+    assert float(jnp.max(rel)) <= 2.0 ** (-(fmt.man_bits + 1)) * (1 + 1e-3)
+
+
+def test_stochastic_rounding_unbiased():
+    fmt = E4M4
+    # Midpoint-ish value between two mantissa codes: E[Q(x)] ~= x
+    x = jnp.full((20000,), 1.0 + 1.5 / fmt.significand_scale, jnp.float32)
+    y = float8.quantize_stochastic(x, jax.random.PRNGKey(1), fmt)
+    lo = 1.0 + 1.0 / fmt.significand_scale
+    hi = 1.0 + 2.0 / fmt.significand_scale
+    assert set(np.unique(np.asarray(y))) <= {np.float32(lo), np.float32(hi)}
+    assert abs(float(jnp.mean(y)) - float(x[0])) < 2e-3
+
+
+def test_stochastic_vs_rtn_mean_error_on_updates():
+    """SR preserves tiny updates on average; RTN swallows them (the reason
+    the in-situ optimizer mode defaults to SR)."""
+    fmt = E4M4
+    w = jnp.full((4096,), 1.0, jnp.float32)
+    upd = 1e-3  # far below E4M4 ULP at 1.0 (= 1/16)
+    w_rtn = float8.quantize(w - upd, fmt)
+    w_sr = float8.quantize_stochastic(w - upd, jax.random.PRNGKey(2), fmt)
+    assert float(jnp.mean(w_rtn)) == 1.0                   # swallowed
+    assert float(jnp.mean(w_sr)) < 1.0 - upd * 0.3         # survives on avg
+
+
+def test_mantissa_carry_on_rounding():
+    """Rounding 1.97 (E4M4) must carry into the exponent, not overflow man."""
+    fmt = E4M4
+    x = jnp.asarray([1.99, 3.98], jnp.float32)
+    f = float8.decompose(x, fmt)
+    y = float8.compose(f, fmt)
+    np.testing.assert_allclose(np.asarray(y), [2.0, 4.0], rtol=0)
+
+
+def test_pack_unpack_roundtrip():
+    fmt = E4M4
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (257,), jnp.float32) * 10
+    x = x.at[0].set(0.0)
+    f = float8.decompose(x, fmt)
+    f2 = float8.unpack(float8.pack(f, fmt), fmt)
+    for a, b in zip(f, f2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and through values
+    np.testing.assert_array_equal(np.asarray(float8.compose(f, fmt)),
+                                  np.asarray(float8.compose(f2, fmt)))
+
+
+def test_significand_range():
+    fmt = E4M4
+    x = jax.random.normal(jax.random.PRNGKey(4), (512,)) * 5
+    f = float8.decompose(x, fmt)
+    sig = f.significand(fmt)
+    nz = np.asarray(f.nonzero)
+    s = np.asarray(sig)
+    assert np.all(s[~nz] == 0)
+    assert np.all(s[nz] >= fmt.significand_scale)
+    assert np.all(s[nz] <= 2 * fmt.significand_scale - 1)

@@ -1,0 +1,43 @@
+"""Launcher CLI integration tests (subprocess, reduced configs)."""
+import os
+import subprocess
+import sys
+
+BASE = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_cli(args, n_devices=0, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(BASE, "src")
+    if n_devices:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_devices}")
+    return subprocess.run([sys.executable, "-m"] + args, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_cli_single_device(tmp_path):
+    p = run_cli(["repro.launch.train", "--arch", "qwen3-0.6b", "--reduced",
+                 "--steps", "4", "--batch", "2", "--seq", "32",
+                 "--log-every", "2",
+                 "--ckpt-dir", str(tmp_path)])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "done: steps=4" in p.stdout
+    assert any(f.startswith("step_4") for f in os.listdir(tmp_path))
+
+
+def test_train_cli_sharded_mesh(tmp_path):
+    p = run_cli(["repro.launch.train", "--arch", "phi3-mini-3.8b",
+                 "--reduced", "--steps", "2", "--batch", "4", "--seq", "32",
+                 "--mesh", "2x2", "--fake-devices", "4",
+                 "--ckpt-dir", str(tmp_path)], n_devices=4)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "mesh {'data': 2, 'model': 2}" in p.stdout
+
+
+def test_serve_cli():
+    p = run_cli(["repro.launch.serve", "--arch", "qwen3-0.6b", "--reduced",
+                 "--slots", "2", "--requests", "3", "--max-new", "4",
+                 "--max-len", "64"])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "served 3/3 requests" in p.stdout

@@ -1,0 +1,289 @@
+"""Per-architecture smoke tests (reduced configs) + model-component tests.
+
+Every assigned arch gets: init -> forward -> loss -> one train step on CPU,
+asserting output shapes and finiteness (the harness smoke contract), plus
+prefill/decode consistency for the families that serve.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_for_smoke
+from repro.models import model as M
+from repro.models import moe as moe_mod
+from repro.models.attention import MaskSpec, blockwise_attention, mask_allowed
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+
+def make_batch(cfg, b, s, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    shape = (b, s) if cfg.family != "audio" else (b, s, cfg.num_codebooks)
+    batch = {
+        "tokens": jax.random.randint(k1, shape, 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, shape, 0, cfg.vocab_size),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            k3, (b, cfg.num_prefix_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_step(arch):
+    cfg = reduced_for_smoke(get_config(arch))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 64
+    batch = make_batch(cfg, b, s, jax.random.PRNGKey(1))
+
+    logits, aux = M.forward(params, batch, cfg, train=False)
+    text = s  # tokens fed == text length; prefix added inside
+    if cfg.family == "audio":
+        assert logits.shape == (b, text, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (b, text, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    tcfg = TrainConfig(accum=2)
+    state = init_state(cfg, tcfg, jax.random.PRNGKey(2))
+    step = make_train_step(cfg, tcfg)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state.step) == 1
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l[0].astype(jnp.float32)
+                                               - l[1].astype(jnp.float32)))),
+        jax.tree.map(lambda a, b_: (a, b_), new_state.params, state.params),
+        0.0)
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-1.3b", "hymba-1.5b",
+                                  "deepseek-v3-671b", "paligemma-3b",
+                                  "musicgen-large"])
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced decode after prefill must reproduce forward logits —
+    the KV/SSM cache correctness test across attention/MLA/SSM/hybrid."""
+    cfg = reduced_for_smoke(get_config(arch))
+    cfg = dataclasses.replace(cfg, quant="none")  # isolate cache math
+    if cfg.moe is not None:
+        # capacity is a function of the token count, so prefill (fewer
+        # tokens) and full-forward would drop different tokens; make
+        # capacity non-binding to compare the pure cache math.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 32
+    batch = make_batch(cfg, b, s, jax.random.PRNGKey(1))
+    full_logits, _ = M.forward(params, batch, cfg, train=False)
+
+    prefix = M.prefix_length(cfg)
+    max_len = prefix + s + 8
+    cache = M.init_cache(cfg, b, max_len)
+    n_pre = s // 2
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :n_pre]
+    logits_pre, cache = M.prefill(params, pre_batch, cfg, cache)
+    # tolerance is absolute at logit scale: the cached path computes the
+    # absorbed MLA/decode math in f32 while the full forward runs bf16
+    # denses — measured |Δ|≈0.03-0.05 on ~3.5-scale logits; a cache BUG
+    # produces O(1) divergence.
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, 0], np.float32),
+        np.asarray(full_logits[:, n_pre - 1], np.float32),
+        rtol=5e-2, atol=8e-2)
+
+    # teacher-forced single-token decode for the rest
+    logits_steps = []
+    for t in range(n_pre, s):
+        tok = batch["tokens"][:, t:t + 1]
+        lg, cache = M.decode_step(params, cache, tok, cfg)
+        logits_steps.append(lg[:, 0])
+    got = jnp.stack(logits_steps, axis=1)
+    want = full_logits[:, n_pre:]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=8e-2)
+
+
+def test_blockwise_attention_matches_dense():
+    """Online-softmax tiling == plain softmax attention, causal + window."""
+    b, s, h, dk = 2, 100, 4, 16
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, h, dk))
+    k = jax.random.normal(kk, (b, s, h, dk))
+    v = jax.random.normal(kv, (b, s, h, dk))
+
+    for mask in [MaskSpec(causal=True),
+                 MaskSpec(causal=True, window=37),
+                 MaskSpec(causal=True, prefix_len=10),
+                 MaskSpec(causal=True, window=29, prefix_len=10)]:
+        out = blockwise_attention(q, k, v, mask, q_block=32, kv_block=32)
+        # dense reference
+        scale = 1.0 / np.sqrt(dk)
+        s_mat = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        pos = jnp.arange(s)
+        ok = mask_allowed(pos[:, None], pos[None, :], mask)
+        s_mat = jnp.where(ok[None, None], s_mat, -1e30)
+        p = jax.nn.softmax(s_mat, axis=-1)
+        want = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_grouping():
+    """H != Hkv grouping: each q-head group attends to its kv head."""
+    b, s, h, hkv, dk = 1, 16, 4, 2, 8
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (b, s, h, dk))
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, dk))
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, s, hkv, dk))
+    out = blockwise_attention(q, k, v, MaskSpec(causal=True),
+                              q_block=8, kv_block=8)
+    assert out.shape == (b, s, h, dk)
+    # head group g uses kv head g // (h//hkv): verify by zeroing one kv head
+    v0 = v.at[:, :, 1, :].set(0.0)
+    out0 = blockwise_attention(q, k, v0, MaskSpec(causal=True),
+                               q_block=8, kv_block=8)
+    np.testing.assert_allclose(np.asarray(out0[:, :, :2]),
+                               np.asarray(out[:, :, :2]), rtol=1e-5)
+    assert not np.allclose(np.asarray(out0[:, :, 2:]),
+                           np.asarray(out[:, :, 2:]))
+
+
+def test_moe_dispatch_matches_dense_reference():
+    """Sort-based capacity dispatch == O(T*E) masked reference when capacity
+    is not binding."""
+    cfg = reduced_for_smoke(get_config("deepseek-v3-671b"))
+    cfg = dataclasses.replace(
+        cfg, quant="none",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))  # no drops
+    specs = moe_mod.moe_specs(cfg)
+    from repro.models.common import init_params
+    params = init_params(specs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32).astype(cfg.activation_dtype)
+    y, aux = moe_mod.moe_apply(params, x, cfg)
+    y_ref = moe_mod.moe_apply_reference(params, x, cfg)
+    assert float(aux["dropped_frac"]) == 0.0
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_drops():
+    cfg = reduced_for_smoke(get_config("deepseek-v3-671b"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    specs = moe_mod.moe_specs(cfg)
+    from repro.models.common import init_params
+    params = init_params(specs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)
+                          ).astype(cfg.activation_dtype)
+    y, aux = moe_mod.moe_apply(params, x, cfg)
+    assert float(aux["dropped_frac"]) > 0.0
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+
+def test_ssm_chunked_matches_sequential():
+    """SSD chunked scan == naive per-step recurrence."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, g, n = 1, 24, 2, 4, 1, 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)))
+    bm = jax.random.normal(jax.random.PRNGKey(3), (b, s, g, n))
+    cm = jax.random.normal(jax.random.PRNGKey(4), (b, s, g, n))
+
+    y_chunk, final = ssd_chunked(x, dt, a, bm, cm, chunk=8)
+
+    # sequential reference
+    hg = h // g
+    st = np.zeros((b, g, hg, n, p))
+    ys = []
+    xn, dtn, an = np.asarray(x), np.asarray(dt), np.asarray(a)
+    bn_, cn = np.asarray(bm), np.asarray(cm)
+    for t in range(s):
+        da = np.exp(dtn[:, t].reshape(b, g, hg) * an.reshape(g, hg))
+        xb = xn[:, t].reshape(b, g, hg, p) * dtn[:, t].reshape(b, g, hg)[..., None]
+        st = st * da[..., None, None] + np.einsum("bgn,bghp->bghnp",
+                                                  bn_[:, t], xb)
+        ys.append(np.einsum("bgn,bghnp->bghp", cn[:, t], st).reshape(b, h, p))
+    want = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final).reshape(b, g, hg, n, p), st,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_chunked_initial_state():
+    """Splitting a sequence across two chunked calls == one call."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, g, n = 1, 32, 2, 4, 1, 8
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(6), (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(7), (h,)))
+    bm = jax.random.normal(jax.random.PRNGKey(8), (b, s, g, n))
+    cm = jax.random.normal(jax.random.PRNGKey(9), (b, s, g, n))
+    y_full, final_full = ssd_chunked(x, dt, a, bm, cm, chunk=8)
+    half = s // 2
+    y1, st1 = ssd_chunked(x[:, :half], dt[:, :half], a, bm[:, :half],
+                          cm[:, :half], chunk=8)
+    y2, st2 = ssd_chunked(x[:, half:], dt[:, half:], a, bm[:, half:],
+                          cm[:, half:], chunk=8,
+                          initial_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(final_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_counts_match_analytic():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        analytic = cfg.param_count()
+        # eval_shape'd init must agree exactly
+        shapes = jax.eval_shape(lambda: M.init(cfg, jax.random.PRNGKey(0)))
+        total = sum(np.prod(l.shape) for l in jax.tree.leaves(shapes))
+        assert analytic == total, arch
+
+
+def test_full_config_param_counts_sane():
+    """Full (non-reduced) configs: param totals in the advertised ballpark."""
+    expect = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.3e12),
+        "deepseek-v3-671b": (6.0e11, 7.4e11),
+        "mistral-large-123b": (1.15e11, 1.35e11),
+        "qwen3-0.6b": (5e8, 8e8),
+        "phi3-mini-3.8b": (3.3e9, 4.3e9),
+        "deepseek-coder-33b": (3.0e10, 3.7e10),
+        "mamba2-1.3b": (1.1e9, 1.6e9),
+        "musicgen-large": (1.5e9, 2.8e9),
+        "hymba-1.5b": (1.2e9, 1.9e9),
+        "paligemma-3b": (2.0e9, 3.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"
+    # MoE active < total
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.active_param_count() < 0.1 * kimi.param_count()
+
+
+def test_remat_modes_same_loss():
+    cfg = reduced_for_smoke(get_config("phi3-mini-3.8b"))
+    batch = make_batch(cfg, 2, 32, jax.random.PRNGKey(1))
+    losses = []
+    for remat in ["none", "full", "dots"]:
+        c = dataclasses.replace(cfg, remat=remat)
+        params = M.init(c, jax.random.PRNGKey(0))
+        (l, _), g = jax.value_and_grad(M.loss_fn, has_aux=True)(params, batch, c)
+        losses.append(float(l))
+        assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+    assert max(losses) - min(losses) < 1e-3

@@ -1,0 +1,150 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. Train-in-memory end-to-end: a small LM trained with TimeFloats matmuls
+   (fwd AND bwd through the quantized path) + in-situ FP8 weight updates
+   learns a synthetic Markov stream — the paper's core claim that FP8
+   time-domain arithmetic suffices for training.
+2. Paper-number reproduction: energy model == Table I / 22.1 TOPS/W,
+   linearity (Fig 3b), exponent-vs-mantissa variability ordering (Fig 7).
+3. Serving path smoke on the quantized model.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.core import analog, energy
+from repro.core.timefloats import TFConfig
+from repro.data.pipeline import DataPipeline
+from repro.models import model as M
+from repro.optim.optimizers import OptimizerConfig
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+
+def test_train_in_memory_end_to_end():
+    """Loss decreases when every projection runs TimeFloats fwd+bwd and the
+    weights are re-quantized to E4M4 after every update (in-situ mode)."""
+    cfg = reduced_for_smoke(get_config("qwen3-0.6b"))
+    cfg = dataclasses.replace(
+        cfg, n_layers=2, vocab_size=64,
+        quant="timefloats", tf=TFConfig(mode="separable"))
+    tcfg = TrainConfig(
+        accum=1,
+        optimizer=OptimizerConfig(name="adamw", lr=3e-3, schedule="constant",
+                                  insitu=TFConfig(),
+                                  stochastic_rounding=True))
+    state = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    pipe = DataPipeline(cfg, batch=8, seq=32, seed=0, kind="markov",
+                        prefetch=0)
+    losses = []
+    for i in range(30):
+        state, metrics = step(state, pipe.batch_at(i))
+        losses.append(float(metrics["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.2, (first, last)
+    assert np.isfinite(last)
+
+
+def test_fp32_vs_timefloats_training_gap():
+    """TimeFloats training tracks the bf16 baseline on the same stream
+    (within a modest gap) — the 'FP8 training works' claim, and our QAT
+    baseline comparison."""
+    def run(quant):
+        cfg = reduced_for_smoke(get_config("qwen3-0.6b"))
+        cfg = dataclasses.replace(cfg, n_layers=2, vocab_size=64, quant=quant)
+        tcfg = TrainConfig(accum=1, optimizer=OptimizerConfig(
+            name="adamw", lr=3e-3, schedule="constant"))
+        state = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        pipe = DataPipeline(cfg, batch=8, seq=32, seed=0, prefetch=0)
+        losses = []
+        for i in range(25):
+            state, m = step(state, pipe.batch_at(i))
+            losses.append(float(m["loss"]))
+        return losses[0], np.mean(losses[-5:])
+
+    l0_tf, l_tf = run("timefloats")
+    l0_bf, l_bf = run("none")
+    # Measured (EXPERIMENTS.md §Paper): at this deliberately-tiny probe
+    # (2 layers, FP8 on EVERY projection incl. embedding head) the early-
+    # training gap is ~1.0 nat and stable through step 60, with both runs
+    # descending steadily. Assert strong learning + the measured gap band.
+    # (init CE = ln(64) ≈ 4.16; measured at step 25: tf 3.44, bf 2.42)
+    assert l_tf < l0_tf - 0.5, (l0_tf, l_tf)   # FP8 run clearly learns
+    assert l_tf < l_bf + 1.5, (l_tf, l_bf)     # and tracks bf16 within band
+
+
+def test_table1_energy_reproduction():
+    """Paper Table I: 64-element FP8 scalar product = 5.8 pJ; 22.1 TOPS/W."""
+    assert energy.chunk_energy_pj() == pytest.approx(5.804, abs=0.01)
+    assert energy.tops_per_watt() == pytest.approx(22.1, abs=0.1)
+    # largest contributor is the exponent-max detector (paper Conclusion)
+    assert max(energy.TABLE1_PJ, key=energy.TABLE1_PJ.get) == "max_detect"
+
+
+def test_table2_ours_row_consistent():
+    ours = energy.TABLE2_SOTA[0]
+    assert ours[0].startswith("Ours")
+    assert ours[-1][0] == pytest.approx(energy.tops_per_watt(), abs=0.1)
+
+
+def test_fig3_linearity():
+    """RC-discharge exponent adder is linear in the summed code (Fig 3b)."""
+    r2 = analog.linearity_r2()
+    assert r2 > 0.999
+
+
+def test_analog_crossbar_mac_is_linear():
+    p = analog.DEFAULT_CIRCUIT
+    mhat = jnp.asarray([0, 5, 16, 31])
+    pulses = analog.mantissa_to_pulse(mhat)
+    g = analog.mantissa_to_conductance(jnp.asarray([[1.0], [2.0], [4.0], [8.0]]))
+    v1 = analog.crossbar_mac_analog(pulses, g, p)
+    v2 = analog.crossbar_mac_analog(2 * pulses, g, p)
+    np.testing.assert_allclose(np.asarray(v2), 2 * np.asarray(v1), rtol=1e-6)
+
+
+def test_fig7_exponent_more_sensitive_than_mantissa():
+    """Fig 7's design guidance, at the Monte-Carlo level the paper used."""
+    from repro.core.variability import (dot_product_error_metric,
+                                        run_monte_carlo)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+    metric = dot_product_error_metric(x, w, TFConfig())
+    sigmas = [0.01, 0.05]
+    exp_res = run_monte_carlo(metric, sigmas, path="exp", trials=20)
+    man_res = run_monte_carlo(metric, sigmas, path="mant", trials=20)
+    for e, m in zip(exp_res.mean, man_res.mean):
+        assert e > m, (exp_res.mean, man_res.mean)
+
+
+def test_serve_quantized_model():
+    """Inference path under TimeFloats arithmetic produces valid tokens."""
+    from repro.serve.engine import Engine, Request
+    cfg = reduced_for_smoke(get_config("qwen3-0.6b"))
+    cfg = dataclasses.replace(cfg, n_layers=2,
+                              quant="timefloats",
+                              tf=TFConfig(mode="separable"))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, slots=2, max_len=32)
+    eng.submit(Request(uid=0,
+                       prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].tokens) == 4
+    assert all(0 <= t < cfg.vocab_size for t in done[0].tokens)
+
+
+def test_energy_model_workload_projection():
+    """Energy projection for a model's matmul census is self-consistent."""
+    rep = energy.model_energy([(16, 64, 32), (16, 128, 8)])
+    assert rep.macs == 16 * 64 * 32 + 16 * 128 * 8
+    # K multiples of 64 -> exactly the headline efficiency
+    assert rep.tops_per_watt == pytest.approx(22.1, abs=0.1)
+    rep2 = energy.model_energy([(16, 65, 32)])  # padding waste
+    assert rep2.tops_per_watt < 22.1 * 0.6
