@@ -10,6 +10,7 @@ determines TPU occupancy; see kernels/timefloats_matmul.py header).
 from __future__ import annotations
 
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +30,121 @@ def timeit(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def _med_time(fn, *args, iters=3, reps=5):
+    """Median-of-reps wall time in us (this 2-core container is noisy)."""
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) / iters * 1e6)
+    return float(np.median(ts))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _legacy_linear(x, w, cfg):
+    """The pre-cache training linear (the speedup baseline): raw float
+    residuals; the backward re-quantizes w.T and x.T from float32 — three
+    full re-decompositions + two materialized transposes per fwd+bwd, none
+    of which XLA can CSE against the forward (different chunking axes)."""
+    lead = x.shape[:-1]
+    y = tf._scaled_matmul(x.reshape(-1, x.shape[-1]), w, cfg)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def _legacy_fwd(x, w, cfg):
+    return _legacy_linear(x, w, cfg), (x, w)
+
+
+def _legacy_bwd(cfg, res, g):
+    x, w = res
+    g2 = g.reshape(-1, g.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    dx = tf._scaled_matmul(g2, w.T, cfg).reshape(x.shape).astype(x.dtype)
+    dw = tf._scaled_matmul(x2.T, g2, cfg).astype(w.dtype)
+    return dx, dw
+
+
+_legacy_linear.defvjp(_legacy_fwd, _legacy_bwd)
+
+
+def _fwdbwd_step_bench(report):
+    """Quantized-operand cache win (DESIGN.md §3): a full fwd+bwd+update
+    training step of a 2-layer MLP, separable mode, three implementations:
+
+    legacy   — the pre-cache custom_vjp (re-quantize w.T/x.T in bwd).
+    uncached — cfg.cache=False: the transposed-read backward, but from raw
+               float residuals (re-quantization left to XLA CSE).
+    cached   — quantized residuals + each weight's cache entry prepared
+               once per step before the loss (the models/common.py +
+               train/step.py hook).
+
+    cached and uncached are bit-identical by contract (asserted); legacy
+    shares the forward bits but its backward pre-dates the transposed-read
+    semantics, so it is the cost baseline only.
+
+    The step is accum=1 (one jitted fwd+bwd+update program, the common
+    case). With a grad-accumulation scan, XLA's loop-invariant code motion
+    already hoists the loop-invariant weight quantization for every
+    variant, compressing the measured gap — the weight cache makes that
+    amortization explicit and portable instead of optimizer-dependent."""
+    d, rows = 1024, 16
+    kw1, kw2, kx, ky = jax.random.split(jax.random.PRNGKey(42), 4)
+    ws = {"w1": jax.random.normal(kw1, (d, d)) / np.sqrt(d),
+          "w2": jax.random.normal(kw2, (d, d)) / np.sqrt(d)}
+    xb = jax.random.normal(kx, (rows, d))
+    yb = jax.random.normal(ky, (rows, d))
+
+    def make_step(kind: str):
+        cfg = TFConfig(mode="separable", cache=(kind == "cached"))
+
+        def step(ws, x, tgt):
+            if kind == "cached":
+                pws = {k: tf.prepare_weight(ws[k], cfg)  # once per step
+                       for k in ws}
+
+            def loss(ws_):
+                if kind == "cached":
+                    h = jax.nn.relu(
+                        tf.linear_cached(x, ws_["w1"], pws["w1"], cfg))
+                    y = tf.linear_cached(h, ws_["w2"], pws["w2"], cfg)
+                else:
+                    lin = _legacy_linear if kind == "legacy" else tf.linear
+                    h = jax.nn.relu(lin(x, ws_["w1"], cfg))
+                    y = lin(h, ws_["w2"], cfg)
+                return jnp.mean((y - tgt) ** 2)
+
+            g = jax.grad(loss)(ws)
+            return jax.tree.map(lambda w, gg: w - 1e-3 * gg, ws, g)
+
+        return jax.jit(step)
+
+    steps = {k: make_step(k) for k in ("legacy", "uncached", "cached")}
+    outs = {k: jax.tree.map(np.asarray, s(ws, xb, yb))
+            for k, s in steps.items()}
+    identical = all(np.array_equal(outs["uncached"][k], outs["cached"][k])
+                    for k in ws)
+    times = {k: _med_time(s, ws, xb, yb, iters=5, reps=7)
+             for k, s in steps.items()}
+
+    report("kernel/step_legacy_us", times["legacy"],
+           f"2x({d}x{d}) MLP, {rows} rows, pre-cache bwd")
+    report("kernel/step_uncached_us", times["uncached"],
+           "transposed-read bwd, float residuals")
+    report("kernel/step_cached_us", times["cached"],
+           "quantized residuals + per-step weight cache")
+    report("kernel/step_cache_speedup_x",
+           times["legacy"] / times["cached"],
+           "vs pre-cache bwd; target >= 1.5x (ISSUE 1 acceptance)")
+    report("kernel/step_cache_bit_identical", int(identical),
+           "cached vs uncached updated weights, bitwise")
+    assert identical, "cache changed the arithmetic (must be bit-identical)"
+
+
 def run(report):
+    _fwdbwd_step_bench(report)
     m, k, n = 256, 1024, 512
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(kx, (m, k), jnp.float32)

@@ -1,6 +1,6 @@
 """TimeFloats scalar products: the paper's 5-step algorithm in JAX.
 
-Two matmul modes (see DESIGN.md §2):
+Three matmul modes (see DESIGN.md §2):
 
 - ``exact``     — faithful reproduction of the paper's pipeline. The
   alignment exponent is the *joint* max over the (input row, weight column)
@@ -18,6 +18,12 @@ Two matmul modes (see DESIGN.md §2):
 The five steps (Fig. 2 of the paper) appear literally in
 :func:`scalar_product_steps`; the batched matmuls are vectorizations of the
 same arithmetic.
+
+Training (DESIGN.md §3): :func:`linear`'s custom_vjp quantizes each operand
+once, caches the quantized operands as residuals, and runs the backward
+pass as transposed reads of the stored planes; :func:`linear_cached`
+additionally accepts a per-step weight cache entry (models/common.py,
+train/step.py).
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import float8
 from repro.core.float8 import E4M4, F8Fields, FloatFormat
@@ -55,6 +62,12 @@ class TFConfig:
     adc_mode   — "dynamic": idealized auto-ranged full-scale (per call);
                  "fixed": worst-case full-scale block*(2^(m+1)-1)^2.
     mode       — "exact" | "separable" | "pallas".
+    cache      — save already-quantized operands as custom_vjp residuals so
+                 the backward pass is a transposed read of the stored planes
+                 (DESIGN.md §3). ``False`` re-quantizes from the raw float
+                 residuals in the backward pass — bit-identical outputs,
+                 ~1.5x the quantization work (benchmarks/kernel_bench.py);
+                 kept as the baseline and as a memory escape hatch.
     """
 
     fmt: FloatFormat = E4M4
@@ -62,6 +75,7 @@ class TFConfig:
     adc_bits: int | None = None
     adc_mode: str = "dynamic"
     mode: str = "exact"
+    cache: bool = True
 
     @property
     def max_significand(self) -> int:
@@ -369,6 +383,56 @@ def matmul_separable(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
                                preferred_element_type=jnp.float32)
 
 
+def matmul_separable_transposed(g: Array, qw: QuantizedOperand, k_dim: int,
+                                cfg: TFConfig = DEFAULT) -> Array:
+    """dx = g @ W^T as a *transposed read* of the stored weight planes.
+
+    The stored operand keeps its forward-pass alignment: chunks along K
+    with per-(K-chunk, N-column) scales — exactly the int8 planes the
+    crossbar holds. Nothing is re-decomposed: the planes are dequantized
+    (exact: 5-bit significands times pow2 scales) into W's natural (K, N)
+    layout and the contraction over N is expressed in the dot_general
+    dimension numbers, so no (N, K) copy of W^T is ever materialized and
+    the dot lowers to a plain transposed-B GEMM. Only the streamed operand
+    ``g`` is quantized (once, along its own contraction dim N). See
+    DESIGN.md §3.
+
+    The per-chunk ADC is a forward-read model; transposed reads are modeled
+    ADC-free (DESIGN.md §3), so this is a single f32-accumulated contraction
+    in every configuration.
+    """
+    n_dim = g.shape[1]
+    qg = quantize_input(g, cfg)
+    gd = dequantize_input(qg, n_dim)             # (M2, N)
+    c, b, _ = qw.q.shape
+    wv = dequantize_weight(qw, c * b)            # (Kpad, N), stored codes
+    dx = jax.lax.dot_general(gd, wv, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (M2, Kpad)
+    return dx[:, :k_dim]
+
+
+def matmul_separable_outer(qx: QuantizedOperand, g: Array, k_dim: int,
+                           cfg: TFConfig = DEFAULT) -> Array:
+    """dW = x^T @ g as a transposed read of the stored activation planes.
+
+    Mirror image of :func:`matmul_separable_transposed`: the activations
+    written during the forward pass are read back (same codes, same
+    truncation — no re-quantization), ``g`` is quantized once as the
+    streamed operand (chunked along M, its contraction dim), and the
+    contraction over M is expressed in the dimension numbers (a
+    transposed-A GEMM). This is the outer-product accumulation the paper's
+    in-situ update consumes.
+    """
+    m2, n_dim = g.shape
+    qg = quantize_weight(g, cfg)
+    gd = dequantize_weight(qg, m2)               # (M2, N)
+    c, _, b = qx.q.shape
+    xd = dequantize_input(qx, c * b)             # (M2, Kpad), stored codes
+    dw = jax.lax.dot_general(xd, gd, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Kpad, N)
+    return dw[:k_dim]
+
+
 def matmul_from_quantized(qx: QuantizedOperand, qw: QuantizedOperand,
                           cfg: TFConfig = DEFAULT) -> Array:
     def body(acc, inputs):
@@ -425,39 +489,207 @@ def _scaled_matmul(x: Array, w: Array, cfg: TFConfig) -> Array:
     return matmul(xs, ws, cfg) / (sx * sw)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
+# ---------------------------------------------------------------------------
+# Quantized-operand cache (DESIGN.md §3): operands are prescaled + quantized
+# exactly once; the backward pass is a transposed read of the stored planes.
+# ---------------------------------------------------------------------------
+
+
+class PreparedOperand(NamedTuple):
+    """Mode-appropriate quantized form of one prescaled operand — the unit
+    of the quantized-operand cache (DESIGN.md §3).
+
+    scale — () f32 per-tensor pow2 amax prescale (exact in FP8; the
+            programmable reference V_B on chip). The quantized payload
+            encodes ``operand * scale``; products are divided by the two
+            operand scales on the way out.
+    q     — separable/pallas modes: block-aligned int8 planes + per-chunk
+            scales (the at-rest crossbar representation). None in exact
+            mode.
+    fq    — exact mode: the FP8-quantized scaled values (f32).
+            ``float8.decompose`` is exactly idempotent on these, so feeding
+            them back through ``matmul_exact`` reproduces the uncached bits.
+            None in separable/pallas modes.
+    """
+
+    scale: Array
+    q: QuantizedOperand | None
+    fq: Array | None
+
+
+def prepare_input(x2: Array, cfg: TFConfig = DEFAULT) -> PreparedOperand:
+    """(M, K) activation -> cache entry (quantized once; read by fwd + dW)."""
+    xs, s = _pow2_prescale(x2, cfg)
+    if cfg.mode == "exact":
+        return PreparedOperand(scale=s, q=None, fq=float8.quantize(xs, cfg.fmt))
+    return PreparedOperand(scale=s, q=quantize_input(xs, cfg), fq=None)
+
+
+def prepare_weight(w: Array, cfg: TFConfig = DEFAULT) -> PreparedOperand:
+    """(K, N) weight -> cache entry (quantized once; read by fwd + dx)."""
+    ws, s = _pow2_prescale(w, cfg)
+    if cfg.mode == "exact":
+        return PreparedOperand(scale=s, q=None, fq=float8.quantize(ws, cfg.fmt))
+    return PreparedOperand(scale=s, q=quantize_weight(ws, cfg), fq=None)
+
+
+def _matmul_prepared(px: PreparedOperand, pw: PreparedOperand, m_dim: int,
+                     k_dim: int, n_dim: int, cfg: TFConfig) -> Array:
+    """Forward product from cache entries; bit-identical to
+    ``matmul(xs, ws, cfg)`` on the prescaled operands in every mode."""
+    if cfg.mode == "exact":
+        return matmul_exact(px.fq, pw.fq, cfg)
+    if cfg.mode == "pallas":
+        from repro.kernels import ops  # local import: kernels dep is optional
+
+        return ops.quantized_matmul(px.q, pw.q, cfg=cfg)[:m_dim, :n_dim]
+    if cfg.adc_bits is not None:
+        return matmul_from_quantized(px.q, pw.q, cfg)
+    xd = dequantize_input(px.q, k_dim)
+    wd = dequantize_weight(pw.q, k_dim)
+    return jax.lax.dot_general(xd, wd, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _bwd_prepared(cfg: TFConfig, px: PreparedOperand, pw: PreparedOperand,
+                  g2: Array, k_dim: int) -> tuple[Array, Array]:
+    """dx = g @ W^T and dW = x^T @ g from the stored operands.
+
+    Exact mode re-MACs the stored FP8 values with joint alignment (the
+    oracle; bit-identical to the pre-cache implementation). Separable and
+    pallas modes read the stored int8 planes transposed — same codes, same
+    truncation, no re-decomposition (DESIGN.md §3).
+    """
+    gs, sg = _pow2_prescale(g2, cfg)
+    if cfg.mode == "exact":
+        dx = matmul_exact(gs, pw.fq.T, cfg) / (sg * pw.scale)
+        dw = matmul_exact(px.fq.T, gs, cfg) / (px.scale * sg)
+        return dx, dw
+    if cfg.mode == "pallas" and cfg.adc_bits is None:
+        from repro.kernels import ops  # local import: kernels dep is optional
+
+        dx = ops.timefloats_matmul_transposed(gs, pw.q, k_dim=k_dim, cfg=cfg)
+    else:
+        dx = matmul_separable_transposed(gs, pw.q, k_dim, cfg)
+    # The dW outer product is the in-situ *update* computation, not a
+    # crossbar read — it stays on the XLA path in all int8 modes (and is
+    # therefore bit-identical between separable and pallas).
+    dw = matmul_separable_outer(px.q, gs, k_dim, cfg)
+    return dx / (sg * pw.scale), dw / (px.scale * sg)
+
+
 def linear(x: Array, w: Array, cfg: TFConfig = DEFAULT) -> Array:
     """Training linear layer: y = x @ w with TimeFloats arithmetic.
 
     Train-in-memory means the backward pass also runs in the crossbar:
     dx = g @ W^T is the transposed-read of the same stored FP8 weights, and
-    dW = x^T @ g is the outer-product accumulation the paper's in-situ
-    update consumes. Both therefore go through the same TimeFloats matmul.
-    The quantizer itself uses a straight-through estimator (standard QAT),
-    and operands get per-tensor power-of-two amax prescaling (exact in FP8;
-    required so activations/gradients use the E4 exponent range).
+    dW = x^T @ g is the outer-product read of the stored activations. The
+    forward pass quantizes each operand exactly once and saves the
+    *quantized* operands as residuals (cfg.cache, DESIGN.md §3); the
+    backward pass consumes them directly, quantizing only the streamed
+    gradient. The quantizer itself uses a straight-through estimator
+    (standard QAT), and operands get per-tensor power-of-two amax
+    prescaling (exact in FP8; required so activations/gradients use the E4
+    exponent range).
 
     Accepts arbitrary leading batch dims on x.
     """
+    statics = (cfg, x.shape, jnp.dtype(x.dtype).name, jnp.dtype(w.dtype).name)
+    return _linear_p(statics, x, w)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linear_p(statics, x, w):
+    cfg = statics[0]
     lead = x.shape[:-1]
     y = _scaled_matmul(x.reshape(-1, x.shape[-1]), w, cfg)
     return y.reshape(*lead, w.shape[-1])
 
 
-def _linear_fwd(x, w, cfg):
-    return linear(x, w, cfg), (x, w)
-
-
-def _linear_bwd(cfg, res, g):
-    x, w = res
-    g2 = g.reshape(-1, g.shape[-1])
+def _linear_p_fwd(statics, x, w):
+    cfg = statics[0]
+    lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    dx = _scaled_matmul(g2, w.T, cfg).reshape(x.shape).astype(x.dtype)
-    dw = _scaled_matmul(x2.T, g2, cfg).astype(w.dtype)
-    return dx, dw
+    if cfg.cache:
+        px = prepare_input(x2, cfg)
+        pw = prepare_weight(w, cfg)
+        y = _matmul_prepared(px, pw, x2.shape[0], x2.shape[1], w.shape[1],
+                             cfg) / (px.scale * pw.scale)
+        res = (px, pw)
+    else:
+        y = _scaled_matmul(x2, w, cfg)
+        res = (x2, w)
+    return y.reshape(*lead, w.shape[-1]), res
 
 
-linear.defvjp(_linear_fwd, _linear_bwd)
+def _linear_p_bwd(statics, res, g):
+    cfg, x_shape, x_dt, w_dt = statics
+    g2 = g.reshape(-1, g.shape[-1])
+    if cfg.cache:
+        px, pw = res
+    else:
+        x2, w = res
+        px = prepare_input(x2, cfg)
+        pw = prepare_weight(w, cfg)
+    dx, dw = _bwd_prepared(cfg, px, pw, g2, x_shape[-1])
+    return dx.reshape(x_shape).astype(x_dt), dw.astype(w_dt)
+
+
+_linear_p.defvjp(_linear_p_fwd, _linear_p_bwd)
+
+
+def linear_cached(x: Array, w: Array, pw: PreparedOperand,
+                  cfg: TFConfig = DEFAULT) -> Array:
+    """:func:`linear` with the weight's cache entry precomputed.
+
+    ``pw = prepare_weight(w, cfg)`` may be built once per optimizer step —
+    outside the microbatch scan and the autodiff trace — and shared by every
+    forward/dx read of that weight (models/common.py weight_cache_scope,
+    train/step.py). Gradients still flow to ``w`` (which participates only
+    as the gradient attachment point; its stored codes are ``pw``); the
+    cache entry itself is a non-differentiable read-only view of the
+    crossbar state and receives zero/float0 cotangents.
+    """
+    assert w.ndim == 2
+    statics = (cfg, x.shape, jnp.dtype(x.dtype).name, jnp.dtype(w.dtype).name)
+    return _linear_cached_p(statics, x, w, pw)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linear_cached_p(statics, x, w, pw):
+    y, _ = _linear_cached_p_fwd(statics, x, w, pw)
+    return y
+
+
+def _linear_cached_p_fwd(statics, x, w, pw):
+    cfg = statics[0]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    px = prepare_input(x2, cfg)
+    y = _matmul_prepared(px, pw, x2.shape[0], x2.shape[1], w.shape[1],
+                         cfg) / (px.scale * pw.scale)
+    return y.reshape(*lead, w.shape[-1]), (px, pw)
+
+
+def _zero_cotangent(tree):
+    """Zero (float leaves) / float0 (integer leaves) cotangents for the
+    non-differentiable cache entry passed through the custom_vjp."""
+    return jax.tree.map(
+        lambda a: jnp.zeros_like(a)
+        if jnp.issubdtype(a.dtype, jnp.inexact)
+        else np.zeros(a.shape, jax.dtypes.float0), tree)
+
+
+def _linear_cached_p_bwd(statics, res, g):
+    cfg, x_shape, x_dt, w_dt = statics
+    px, pw = res
+    g2 = g.reshape(-1, g.shape[-1])
+    dx, dw = _bwd_prepared(cfg, px, pw, g2, x_shape[-1])
+    return (dx.reshape(x_shape).astype(x_dt), dw.astype(w_dt),
+            _zero_cotangent(pw))
+
+
+_linear_cached_p.defvjp(_linear_cached_p_fwd, _linear_cached_p_bwd)
 
 
 def dot(x: Array, w: Array, cfg: TFConfig = DEFAULT, *, use_vjp: bool = True):

@@ -19,6 +19,7 @@ from repro.core.timefloats import (
     DEFAULT,
     QuantizedOperand,
     TFConfig,
+    matmul_separable_transposed,
     quantize_input,
     quantize_weight,
 )
@@ -39,18 +40,19 @@ def _pad_to(a: Array, mults: tuple[int, ...], pad_value=0) -> Array:
     return jnp.pad(a, widths, constant_values=pad_value)
 
 
-def _tile_sizes(m: int, n: int, c: int, bm: int, bn: int, bc: int):
-    """Shrink default tiles for small problems (tests sweep tiny shapes)
-    but keep M/N tiles multiples of 8: sub-8 tiles are below any TPU
-    register tile, and jax 0.8.2's CPU interpreter miscompiles some
+def _rnd8(v: int) -> int:
+    """Round tile dims up to a multiple of 8: sub-8 tiles are below any
+    TPU register tile, and jax 0.8.2's CPU interpreter miscompiles some
     degenerate (m<=3, odd-n) tile shapes when the pallas_call is jitted
     with traced operands (bisected in tests/test_kernels.py — shapes like
     (2,1,9) returned a zero row)."""
+    return -(-v // 8) * 8
 
-    def rnd8(v: int) -> int:
-        return -(-v // 8) * 8
 
-    return (min(bm, rnd8(m)), min(bn, rnd8(n)), min(bc, max(c, 1)))
+def _tile_sizes(m: int, n: int, c: int, bm: int, bn: int, bc: int):
+    """Shrink default tiles for small problems (tests sweep tiny shapes)
+    but keep M/N tiles multiples of 8 (see _rnd8)."""
+    return (min(bm, _rnd8(m)), min(bn, _rnd8(n)), min(bc, max(c, 1)))
 
 
 @partial(jax.jit, static_argnames=("cfg", "bm", "bn", "bc", "interpret"))
@@ -98,3 +100,53 @@ def quantized_matmul(
     qws = _pad_to(qw.scale, (bc, bn), pad_value=1.0)
     return kernel_mod.timefloats_matmul_quantized(
         qxq, qxs, qwq, qws, cfg=cfg, bm=bm, bn=bn, bc=bc, interpret=interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("k_dim", "cfg", "bm", "bc", "bd", "interpret"))
+def timefloats_matmul_transposed(
+    g: Array,
+    qw: QuantizedOperand,
+    *,
+    k_dim: int,
+    cfg: TFConfig = DEFAULT,
+    bm: int = 128,
+    bc: int = 4,
+    bd: int = 4,
+    interpret: bool | None = None,
+) -> Array:
+    """dx = g @ W^T (M,N)x(K,N planes) through the transposed-read kernel.
+
+    ``qw`` is the *stored* weight in the exact layout the forward kernel
+    consumed — no re-quantization, no materialized W^T (DESIGN.md §3). The
+    streamed gradient is quantized here, along its own contraction dim N.
+    With an ADC configured the call falls back to the XLA reference
+    (transposed reads are modeled ADC-free, so the numbers are identical;
+    the kernel itself rejects adc_bits).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if cfg.adc_bits is not None:
+        return matmul_separable_transposed(g, qw, k_dim, cfg)
+    m_dim = g.shape[0]
+    qg = quantize_input(g, cfg)
+    d_chunks = qg.q.shape[0]
+    c_chunks, blk, _ = qw.q.shape
+
+    bm = min(bm, _rnd8(m_dim))
+    bc = min(bc, max(c_chunks, 1))
+    bd = min(bd, max(d_chunks, 1))
+    qgq = _pad_to(qg.q, (bd, bm, blk))
+    qgs = _pad_to(qg.scale, (bd, bm), pad_value=1.0)
+    n_pad = qgq.shape[0] * blk
+    # Pad the stored planes along C (whole zero planes) and N (zero columns;
+    # the matching padded g chunks are zero as well, so nothing contributes).
+    qwq = _pad_to(qw.q, (bc, blk, 1))
+    qws = _pad_to(qw.scale, (bc, 1), pad_value=1.0)
+    if qwq.shape[2] < n_pad:
+        qwq = jnp.pad(qwq, ((0, 0), (0, 0), (0, n_pad - qwq.shape[2])))
+        qws = jnp.pad(qws, ((0, 0), (0, n_pad - qws.shape[1])),
+                      constant_values=1.0)
+    dx = kernel_mod.timefloats_matmul_transposed_quantized(
+        qgq, qgs, qwq, qws, cfg=cfg, bm=bm, bc=bc, bd=bd, interpret=interpret)
+    return dx[:m_dim, :k_dim]

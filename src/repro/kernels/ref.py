@@ -18,6 +18,7 @@ from repro.core.timefloats import (  # noqa: F401  (re-exported as the oracle)
     TFConfig,
     matmul_from_quantized,
     matmul_separable_scan,
+    matmul_separable_transposed,
     quantize_input,
     quantize_weight,
 )
@@ -35,3 +36,11 @@ def quantized_matmul_ref(qx: QuantizedOperand, qw: QuantizedOperand,
                          cfg: TFConfig = DEFAULT) -> Array:
     """Oracle on pre-quantized operands (the kernel's exact input contract)."""
     return matmul_from_quantized(qx, qw, cfg)
+
+
+def timefloats_matmul_transposed_ref(g: Array, qw: QuantizedOperand,
+                                     k_dim: int, cfg: TFConfig = DEFAULT
+                                     ) -> Array:
+    """Oracle for the transposed-read kernel: dx = g @ W^T against the
+    stored planes (DESIGN.md §3), computed on the XLA path."""
+    return matmul_separable_transposed(g, qw, k_dim, cfg)

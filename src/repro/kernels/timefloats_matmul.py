@@ -108,3 +108,89 @@ def timefloats_matmul_quantized(
         out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), jnp.float32),
         interpret=interpret,
     )(qx, sx, qw, sw)
+
+
+# ---------------------------------------------------------------------------
+# Transposed read: dx = g @ W^T against the *stored* weight planes
+# (DESIGN.md §3). The weight operand arrives in exactly the layout the
+# forward kernel consumed — (C, Bk, N) int8 planes with (C, N) scales — so
+# the backward pass re-reads the crossbar contents instead of re-quantizing
+# a materialized W^T. The streamed gradient is quantized along its own
+# contraction dim N: qg (D, M, Bn) int8, sg (D, M) f32 (D = N/Bn chunks).
+#
+#     out: (M, C*Bk) f32,  out[m, (c,b)] = Σ_n gv[m,n] · qw[c,b,n] · sw[c,n]
+#
+# The per-column weight scale sw[c, n] varies along the contraction, so it
+# cannot be hoisted into a rank-1 post-scale like the forward kernel's; the
+# kernel folds both scale sets into the operands (exact: 5-bit significands
+# times pow2 scales are lossless in f32) and accumulates an f32 MAC per
+# (d-chunk, c-plane) pair. Tiling: grid (M/bm, C/bc, D/bd), d innermost so
+# the (bm, bc*Bk) output tile stays resident across the N reduction.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_transposed(qg_ref, sg_ref, qw_ref, sw_ref, out_ref, *, bd: int,
+                       bc: int, blk_n: int):
+    """One (bm, bc*Bk) dx tile; accumulates bd gradient chunks per step."""
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    gv = [qg_ref[dd].astype(jnp.float32) * sg_ref[dd][:, None]
+          for dd in range(bd)]  # each (bm, Bn)
+    cols = []
+    for cc in range(bc):
+        acc = None
+        for dd in range(bd):
+            sl = slice(dd * blk_n, (dd + 1) * blk_n)
+            wv = (qw_ref[cc, :, sl].astype(jnp.float32)
+                  * sw_ref[cc, sl][None, :])  # (Bk, Bn)
+            p = jax.lax.dot_general(
+                gv[dd], wv, dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)  # (bm, Bk)
+            acc = p if acc is None else acc + p
+        cols.append(acc)
+    out_ref[...] = out_ref[...] + jnp.concatenate(cols, axis=1)
+
+
+def timefloats_matmul_transposed_quantized(
+    qg: Array, sg: Array, qw: Array, sw: Array,
+    *,
+    cfg: TFConfig,
+    bm: int = 128,
+    bc: int = 4,
+    bd: int = 4,
+    interpret: bool = True,
+) -> Array:
+    """pallas_call wrapper on pre-quantized/padded operands (ops.py pads).
+
+    Expects M % bm == C % bc == D % bd == 0 and qw's N axis padded to
+    D * block. Returns the padded (M, C*Bk) dx; callers slice to k_dim.
+    """
+    d_chunks, m_dim, blk_n = qg.shape
+    c_chunks, blk_k, n_pad = qw.shape
+    assert sg.shape == (d_chunks, m_dim) and sw.shape == (c_chunks, n_pad)
+    assert n_pad == d_chunks * blk_n, (qg.shape, qw.shape)
+    assert m_dim % bm == 0 and c_chunks % bc == 0 and d_chunks % bd == 0
+
+    if cfg.adc_bits is not None:
+        raise ValueError("transposed reads are modeled ADC-free (DESIGN.md "
+                         "§3); the ADC applies to forward reads only")
+
+    grid = (m_dim // bm, c_chunks // bc, d_chunks // bd)
+    kernel = functools.partial(_kernel_transposed, bd=bd, bc=bc, blk_n=blk_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bm, blk_n), lambda i, c, d: (d, i, 0)),
+            pl.BlockSpec((bd, bm), lambda i, c, d: (d, i)),
+            pl.BlockSpec((bc, blk_k, bd * blk_n), lambda i, c, d: (c, 0, d)),
+            pl.BlockSpec((bc, bd * blk_n), lambda i, c, d: (c, d)),
+        ],
+        out_specs=pl.BlockSpec((bm, bc * blk_k), lambda i, c, d: (i, c)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, c_chunks * blk_k), jnp.float32),
+        interpret=interpret,
+    )(qg, sg, qw, sw)

@@ -9,9 +9,10 @@ shapes anywhere.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +87,96 @@ def param_count(specs: PyTree) -> int:
 # The dense layer — the paper's integration point. Every projection matmul
 # in every architecture goes through here; cfg.quant selects bf16 vs
 # TimeFloats arithmetic (exact / separable / pallas via cfg.tf.mode).
+#
+# Weight cache (DESIGN.md §3): train/step.py quantizes every dense-eligible
+# weight once per optimizer step (build_weight_cache, hoisted outside the
+# microbatch scan) and installs the entries for the duration of the loss
+# trace (weight_cache_scope). dense() consults the registry by parameter
+# identity: a hit routes through timefloats.linear_cached (the stored
+# crossbar codes are read for fwd AND dx), a miss falls back to
+# timefloats.linear, which still quantizes each operand only once per
+# fwd+bwd via its residuals. Per-layer slices of scanned layer stacks miss
+# by construction (the scan body sees sliced tracers) — that fallback is
+# correct, just one weight-quantization per microbatch instead of per step.
 # ---------------------------------------------------------------------------
+
+
+_ACTIVE_WEIGHT_CACHE: Optional[dict] = None
+
+
+def _cacheable_param(path, leaf) -> bool:
+    """Dense-eligible: float, >=2-D, not an embedding/meta table (those are
+    gather-read) and not inside a scanned layer stack ("groups" in
+    model.py): the scan body only ever sees per-layer *slices* of those
+    leaves, which can never hit the identity-keyed registry, so preparing
+    the stack would be dead weight in the step graph."""
+    if getattr(leaf, "ndim", 0) < 2:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    keys = [str(p) for p in path]
+    if any("groups" in k for k in keys):
+        return False
+    last = keys[-1] if keys else ""
+    return not any(t in last for t in ("embed", "meta"))
+
+
+def build_weight_cache(params: PyTree, cfg: ModelConfig) -> Optional[dict]:
+    """Quantize every dense-eligible weight once (per optimizer step).
+
+    Returns {tree-path: PreparedOperand} for the 2-D reshape dense() uses,
+    or None when TimeFloats (with caching) is off. Call it *outside* the
+    microbatch scan / autodiff trace so the quantization work is hoisted;
+    pair with :func:`weight_cache_scope` inside the loss.
+    """
+    if cfg.quant != "timefloats" or not cfg.tf.cache:
+        return None
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for path, leaf in flat:
+        if _cacheable_param(path, leaf):
+            w2 = leaf.reshape(leaf.shape[0], -1)
+            out[jax.tree_util.keystr(path)] = timefloats.prepare_weight(
+                w2, cfg.tf)
+    return out or None
+
+
+@contextlib.contextmanager
+def weight_cache_scope(params: PyTree, cache: Optional[dict]):
+    """Install `cache` (from build_weight_cache, possibly built outside the
+    current autodiff/scan trace) for the `params` tree *as traced here*.
+
+    The registry is keyed by the identity of the leaves of ``params`` as
+    this scope sees them — inside jax.value_and_grad those are fresh
+    tracers, which is exactly what dense() will receive — so entries are
+    re-keyed per trace while the quantized payloads stay hoisted.
+    """
+    global _ACTIVE_WEIGHT_CACHE
+    if not cache:
+        yield
+        return
+    table = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        k = jax.tree_util.keystr(path)
+        if k in cache:
+            table[id(leaf)] = (leaf, cache[k])
+    prev = _ACTIVE_WEIGHT_CACHE
+    _ACTIVE_WEIGHT_CACHE = table
+    try:
+        yield
+    finally:
+        _ACTIVE_WEIGHT_CACHE = prev
+
+
+def cached_weight(w: Array) -> Optional[timefloats.PreparedOperand]:
+    """Registry lookup for dense(); the stored leaf reference both keeps
+    id() stable and guards against id reuse."""
+    if _ACTIVE_WEIGHT_CACHE is None:
+        return None
+    ent = _ACTIVE_WEIGHT_CACHE.get(id(w))
+    if ent is None or ent[0] is not w:
+        return None
+    return ent[1]
 
 
 def dense(x: Array, w: Array, cfg: ModelConfig) -> Array:
@@ -99,7 +189,11 @@ def dense(x: Array, w: Array, cfg: ModelConfig) -> Array:
     w2 = w.reshape(k, -1)
     out_shape = x.shape[:-1] + w.shape[1:]
     if cfg.quant == "timefloats":
-        y = timefloats.linear(x, w2, cfg.tf)
+        pw = cached_weight(w)
+        if pw is not None:
+            y = timefloats.linear_cached(x, w2, pw, cfg.tf)
+        else:
+            y = timefloats.linear(x, w2, cfg.tf)
     else:
         y = x.astype(cfg.activation_dtype) @ w2.astype(cfg.activation_dtype)
     return y.reshape(out_shape).astype(cfg.activation_dtype)

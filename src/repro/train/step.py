@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import model as model_lib
+from repro.models import common, model as model_lib
 from repro.optim.optimizers import (OptimizerConfig, clip_by_global_norm,
                                     make_optimizer)
 from repro.parallel.sharding import constrain
@@ -74,12 +74,20 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
     optimizer = make_optimizer(train_cfg.optimizer)
     adt = jnp.dtype(train_cfg.accum_dtype)
 
-    def loss(params, mb):
-        return model_lib.loss_fn(params, mb, model_cfg)
-
     def train_step(state: TrainState, batch: Dict[str, Array]
                    ) -> Tuple[TrainState, Dict[str, Array]]:
         rng, rng_next = jax.random.split(state.rng)
+        # Quantized-operand weight cache (DESIGN.md §3): every dense-eligible
+        # weight is prescaled + quantized ONCE per optimizer step, outside
+        # the grad trace and the microbatch scan; the scope re-keys the
+        # entries onto the traced params so fwd and dx both read the stored
+        # planes. No-op unless model_cfg.quant == "timefloats".
+        wcache = common.build_weight_cache(state.params, model_cfg)
+
+        def loss(params, mb):
+            with common.weight_cache_scope(params, wcache):
+                return model_lib.loss_fn(params, mb, model_cfg)
+
         if train_cfg.accum == 1:
             (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
                 state.params, batch)

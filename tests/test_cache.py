@@ -1,0 +1,205 @@
+"""Bit-identity of the quantized-operand cache (DESIGN.md §3).
+
+The contract: caching changes *when* quantization happens, never *what* it
+produces. Cached (quantized residuals / precomputed weight entries) and
+uncached (re-quantize in the backward pass) executions must produce
+bit-identical y, dx and dW in every mode; exact mode must additionally be
+bit-identical to the pre-cache implementation (whose backward re-decomposed
+w.T / x.T — elementwise decomposition is transpose-equivariant, so only the
+separable plane layouts changed semantics, and those by design).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import timefloats as tf
+from repro.core.timefloats import TFConfig
+from repro.models import common
+
+MODES = ["exact", "separable", "pallas"]
+
+
+def _data(key=0, lead=(3, 5), k=96, n=10):
+    kx, kw, kg = jax.random.split(jax.random.PRNGKey(key), 3)
+    x = jax.random.normal(kx, (*lead, k))
+    w = jax.random.normal(kw, (k, n))
+    g = jax.random.normal(kg, (*lead, n))
+    return x, w, g
+
+
+def _run(fn, x, w, g):
+    y, vjp = jax.vjp(fn, x, w)
+    dx, dw = vjp(g)
+    return np.asarray(y), np.asarray(dx), np.asarray(dw)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_cached_vs_uncached_bit_identical(mode):
+    """fwd/dx/dW: quantized residuals == re-quantized float residuals."""
+    x, w, g = _data()
+    cfg_c = TFConfig(mode=mode)               # cache=True default
+    cfg_u = TFConfig(mode=mode, cache=False)
+    y_c, dx_c, dw_c = _run(lambda a, b: tf.linear(a, b, cfg_c), x, w, g)
+    y_u, dx_u, dw_u = _run(lambda a, b: tf.linear(a, b, cfg_u), x, w, g)
+    np.testing.assert_array_equal(y_c, y_u)
+    np.testing.assert_array_equal(dx_c, dx_u)
+    np.testing.assert_array_equal(dw_c, dw_u)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_fwd_primal_matches_vjp_fwd(mode):
+    """linear() outside autodiff == the custom_vjp forward (the prepared
+    path must reproduce _scaled_matmul bit-for-bit)."""
+    x, w, g = _data(key=1)
+    cfg = TFConfig(mode=mode)
+    y_p = np.asarray(tf.linear(x, w, cfg))
+    y_f, _, _ = _run(lambda a, b: tf.linear(a, b, cfg), x, w, g)
+    np.testing.assert_array_equal(y_p, y_f)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_weight_cache_entry_bit_identical(mode):
+    """linear_cached with a precomputed prepare_weight entry == linear."""
+    x, w, g = _data(key=2)
+    cfg = TFConfig(mode=mode)
+    pw = tf.prepare_weight(w, cfg)
+    y_a, dx_a, dw_a = _run(lambda a, b: tf.linear(a, b, cfg), x, w, g)
+    y_b, dx_b, dw_b = _run(
+        lambda a, b: tf.linear_cached(a, b, pw, cfg), x, w, g)
+    np.testing.assert_array_equal(y_a, y_b)
+    np.testing.assert_array_equal(dx_a, dx_b)
+    np.testing.assert_array_equal(dw_a, dw_b)
+
+
+def test_exact_mode_matches_precache_backward():
+    """Exact mode is the oracle: the cached backward must equal the
+    pre-cache formulation (re-quantizing w.T / x.T from float32) bitwise."""
+    x, w, g = _data(key=3)
+    cfg = TFConfig(mode="exact")
+    _, dx, dw = _run(lambda a, b: tf.linear(a, b, cfg), x, w, g)
+    g2 = g.reshape(-1, g.shape[-1])
+    x2 = x.reshape(-1, x.shape[-1])
+    legacy_dx = tf._scaled_matmul(g2, w.T, cfg).reshape(x.shape)
+    legacy_dw = tf._scaled_matmul(x2.T, g2, cfg)
+    np.testing.assert_array_equal(dx, np.asarray(legacy_dx))
+    np.testing.assert_array_equal(dw, np.asarray(legacy_dw))
+
+
+def test_separable_transposed_read_tracks_f32_gradients():
+    """The transposed read changes the W/x-side alignment grouping vs the
+    pre-cache backward (documented, DESIGN.md §3); it must stay as close to
+    the f32 gradients as FP8 allows."""
+    x, w, g = _data(key=4, lead=(64,), k=256, n=32)
+    cfg = TFConfig(mode="separable")
+    _, dx, dw = _run(lambda a, b: tf.linear(a, b, cfg), x, w, g)
+    rdx, rdw = np.asarray(g @ w.T), np.asarray(x.T @ g)
+
+    def cos(a, b):
+        return float((a * b).sum() / (np.linalg.norm(a) * np.linalg.norm(b)))
+
+    assert cos(dx, rdx) > 0.98
+    assert cos(dw, rdw) > 0.98
+
+
+def test_separable_pallas_backward_bit_identical():
+    """separable and pallas must stay mutually bit-identical through the
+    new backward (dx via the transposed kernel, dW via the shared XLA
+    outer-product read)."""
+    x, w, g = _data(key=5, lead=(8,), k=128, n=16)
+    outs = {}
+    for mode in ("separable", "pallas"):
+        outs[mode] = _run(lambda a, b: tf.linear(a, b, TFConfig(mode=mode)),
+                          x, w, g)
+    for a, b in zip(outs["separable"], outs["pallas"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_adc_training_path_runs_through_cache():
+    """adc_bits forces the scanned forward; backward transposed reads are
+    modeled ADC-free — the whole vjp must stay finite and cache-invariant."""
+    x, w, g = _data(key=6, lead=(4,), k=64, n=8)
+    outs = {}
+    for cache in (True, False):
+        cfg = TFConfig(mode="separable", adc_bits=4, cache=cache)
+        y, dx, dw = _run(lambda a, b: tf.linear(a, b, cfg), x, w, g)
+        assert np.isfinite(y).all() and np.isfinite(dx).all()
+        assert np.isfinite(dw).all()
+        outs[cache] = (y, dx, dw)
+    for a, b in zip(outs[True], outs[False]):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# The models/common.py + train/step.py hook
+# ---------------------------------------------------------------------------
+
+
+def _mlp_model_cfg(mode="separable"):
+    from repro.configs import get_config, reduced_for_smoke
+
+    cfg = reduced_for_smoke(get_config("qwen3-0.6b"))
+    return dataclasses.replace(cfg, quant="timefloats", tf=TFConfig(mode=mode))
+
+
+def test_dense_weight_cache_scope_bit_identical():
+    """common.dense under weight_cache_scope == without it, for values and
+    for gradients through the params."""
+    model_cfg = _mlp_model_cfg()
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    d = model_cfg.d_model
+    params = {"w_up": jax.random.normal(kw, (d, 2 * d))}
+    x = jax.random.normal(kx, (4, d))
+
+    def loss(p, use_cache):
+        cache = common.build_weight_cache(p, model_cfg) if use_cache else None
+        with common.weight_cache_scope(p, cache):
+            return jnp.sum(common.dense(x, p["w_up"], model_cfg) ** 2)
+
+    l0, g0 = jax.value_and_grad(lambda p: loss(p, False))(params)
+    l1, g1 = jax.value_and_grad(lambda p: loss(p, True))(params)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    np.testing.assert_array_equal(np.asarray(g0["w_up"]),
+                                  np.asarray(g1["w_up"]))
+
+
+def test_build_weight_cache_filters():
+    """Embedding tables and scanned layer stacks are excluded; dense
+    projection weights are included; quant='none' disables the cache."""
+    model_cfg = _mlp_model_cfg()
+    params = {
+        "embed": jnp.ones((32, 8)),
+        "groups": [{"w_up": jnp.ones((8, 16))}],
+        "lm_head": jnp.ones((8, 32)),
+        "norm": {"scale": jnp.ones((8,))},
+    }
+    cache = common.build_weight_cache(params, model_cfg)
+    keys = sorted(cache)
+    assert len(keys) == 1 and "lm_head" in keys[0]
+    off = dataclasses.replace(model_cfg, quant="none")
+    assert common.build_weight_cache(params, off) is None
+
+
+def test_train_step_with_weight_cache_learns():
+    """A jitted train step with the step-level weight cache installed (and
+    grad accumulation, so the cache is hoisted outside the microbatch scan)
+    still descends."""
+    from repro.data.pipeline import DataPipeline
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.train.step import TrainConfig, init_state, make_train_step
+
+    cfg = dataclasses.replace(_mlp_model_cfg(), n_layers=1, vocab_size=32)
+    tcfg = TrainConfig(accum=2, optimizer=OptimizerConfig(
+        name="adamw", lr=3e-3, schedule="constant"))
+    state = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    pipe = DataPipeline(cfg, batch=8, seq=16, seed=0, kind="markov",
+                        prefetch=0)
+    losses = []
+    for i in range(10):
+        state, m = step(state, pipe.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-3:]) < losses[0]

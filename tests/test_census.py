@@ -153,6 +153,8 @@ def test_census_on_real_compiled_module():
     want = iters * 2 * n * n * n
     assert c["flops"] == want, (c["flops"], want, c["warnings"])
     raw = compiled.cost_analysis() or {}
+    if isinstance(raw, (list, tuple)):  # older jax returned [dict]
+        raw = raw[0] if raw else {}
     if raw.get("flops"):  # demonstrate the undercount being fixed
         assert c["flops"] >= raw["flops"]
 

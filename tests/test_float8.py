@@ -1,9 +1,15 @@
-"""Unit + property tests for the E4M4 codec (core/float8.py)."""
+"""Unit + property tests for the E4M4 codec (core/float8.py).
+
+This module is property-test heavy, so it requires `hypothesis` (an
+optional dev dependency — pip install -r requirements-dev.txt); without it
+the whole module is skipped rather than erroring at collection."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import float8
 from repro.core.float8 import E4M3, E4M4, E5M2, FloatFormat

@@ -4,8 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dependency (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import timefloats as tf
 from repro.core.timefloats import (TFConfig, matmul_separable,
                                    quantize_input, quantize_weight)
 from repro.kernels import ops, ref
@@ -144,6 +149,63 @@ def test_property_kernel_oracle_any_shape(m, k, n, seed):
     want = ref.timefloats_matmul_ref(x, w, cfg)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+TRANSPOSED_SHAPES = [
+    (8, 64, 64),
+    (16, 100, 48),     # N not a multiple of block
+    (56, 192, 300),    # K larger than one plane set, ragged M
+    (3, 17, 9),        # tiny/degenerate
+    (128, 256, 128),
+]
+
+
+@pytest.mark.parametrize("shape", TRANSPOSED_SHAPES,
+                         ids=[str(s) for s in TRANSPOSED_SHAPES])
+def test_transposed_kernel_matches_oracle(shape):
+    """dx = g @ W^T through the transposed-read kernel == XLA oracle on the
+    same stored planes (DESIGN.md §3)."""
+    m, n, k = shape
+    kg, kw = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31))
+    g = _rand(kg, (m, n))
+    w = _rand(kw, (k, n))
+    cfg = TFConfig(mode="separable")
+    qw = quantize_weight(w, cfg)
+    got = ops.timefloats_matmul_transposed(g, qw, k_dim=k, cfg=cfg)
+    want = ref.timefloats_matmul_transposed_ref(g, qw, k, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_transposed_read_roundtrip_identity():
+    """Transposed-read round trip: streaming the identity through the
+    transposed path must return exactly the dequantized stored planes —
+    i.e. the backward pass reads precisely the codes the forward pass
+    wrote, with no re-quantization anywhere on the weight side."""
+    k, n = 130, 24
+    w = _rand(jax.random.PRNGKey(3), (k, n))
+    cfg = TFConfig(mode="separable")
+    qw = quantize_weight(w, cfg)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    got = tf.matmul_separable_transposed(eye, qw, k, cfg)      # (N, K)
+    want = tf.dequantize_weight(qw, k).astype(jnp.float32).T   # (N, K)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and through the Pallas kernel
+    got_k = ops.timefloats_matmul_transposed(eye, qw, k_dim=k, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want))
+
+
+def test_transposed_adc_falls_back_to_xla():
+    """With an ADC configured the kernel entry must route to the (ADC-free
+    transposed-read) XLA reference rather than the kernel."""
+    kg, kw = jax.random.split(jax.random.PRNGKey(4))
+    g = _rand(kg, (8, 64))
+    w = _rand(kw, (32, 64))
+    cfg = TFConfig(mode="separable", adc_bits=4)
+    qw = quantize_weight(w, cfg)
+    got = ops.timefloats_matmul_transposed(g, qw, k_dim=32, cfg=cfg)
+    want = ref.timefloats_matmul_transposed_ref(g, qw, 32, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_kernel_vjp_through_pallas_mode():

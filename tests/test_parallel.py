@@ -75,7 +75,7 @@ def test_compression_error_feedback_unbiased():
 import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.parallel import compression
+from repro.parallel import compression, sharding
 
 mesh = jax.make_mesh((4,), ("pod",))
 grads_seq = [
@@ -84,7 +84,7 @@ grads_seq = [
 ]
 
 def one_step(g, state):
-    f = jax.shard_map(
+    f = sharding.shard_map(
         lambda g_, e_: compression.compressed_psum_tree(
             g_, compression.CompressionState(error=e_), "pod"),
         mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod"), P()),
