@@ -510,6 +510,16 @@ class PreparedOperand(NamedTuple):
             ``float8.decompose`` is exactly idempotent on these, so feeding
             them back through ``matmul_exact`` reproduces the uncached bits.
             None in separable/pallas modes.
+
+    Pytree contract (DESIGN.md §3, scanned stacks): as a NamedTuple this is
+    a registered JAX pytree whose ``None`` fields are empty subtrees, so a
+    *stack* of prepared weights — every leaf carrying a leading ``(layers,)``
+    dim, built by ``jax.vmap(prepare_weight)`` — threads through
+    ``lax.scan``/``vmap`` as an ordinary operand and slices back into valid
+    per-layer entries. Within one ``TFConfig`` the None-pattern is fixed
+    (mode decides q vs fq), so the tree structure is scan-stable.
+    ``tests/test_cache.py::test_prepared_operand_pytree_roundtrip`` pins
+    this.
     """
 
     scale: Array
@@ -517,8 +527,31 @@ class PreparedOperand(NamedTuple):
     fq: Array | None
 
 
+# Trace-time quantization census. Each prepare_* call increments ONCE per
+# Python invocation, i.e. once per *trace* — a call inside a lax.scan body
+# or under vmap counts 1 no matter the trip count / batch size. That makes
+# the counter a structural proof: a jitted train step whose trace shows
+# exactly one prepare_weight per dense-eligible leaf performs ALL its weight
+# quantization in build_weight_cache (hoisted, once per optimizer step);
+# any registry miss inside the loss would add a per-call-site count (and
+# would *execute* once per microbatch/layer). Read/reset via
+# quant_trace_counts / reset_quant_trace_counts; asserted by
+# tests/test_cache.py and reported by benchmarks/kernel_bench.py.
+_QUANT_TRACE_COUNTS = {"prepare_input": 0, "prepare_weight": 0}
+
+
+def quant_trace_counts() -> dict:
+    return dict(_QUANT_TRACE_COUNTS)
+
+
+def reset_quant_trace_counts() -> None:
+    for k in _QUANT_TRACE_COUNTS:
+        _QUANT_TRACE_COUNTS[k] = 0
+
+
 def prepare_input(x2: Array, cfg: TFConfig = DEFAULT) -> PreparedOperand:
     """(M, K) activation -> cache entry (quantized once; read by fwd + dW)."""
+    _QUANT_TRACE_COUNTS["prepare_input"] += 1
     xs, s = _pow2_prescale(x2, cfg)
     if cfg.mode == "exact":
         return PreparedOperand(scale=s, q=None, fq=float8.quantize(xs, cfg.fmt))
@@ -527,6 +560,7 @@ def prepare_input(x2: Array, cfg: TFConfig = DEFAULT) -> PreparedOperand:
 
 def prepare_weight(w: Array, cfg: TFConfig = DEFAULT) -> PreparedOperand:
     """(K, N) weight -> cache entry (quantized once; read by fwd + dx)."""
+    _QUANT_TRACE_COUNTS["prepare_weight"] += 1
     ws, s = _pow2_prescale(w, cfg)
     if cfg.mode == "exact":
         return PreparedOperand(scale=s, q=None, fq=float8.quantize(ws, cfg.fmt))

@@ -9,6 +9,12 @@ causal/sliding-window block skipping (triangular work, no 2× waste).
 
 Masks: causal, prefix-LM bidirectional (paligemma), sliding window + global
 prefix exemption (hymba meta tokens).
+
+Weight-cache consumption rules (DESIGN.md §3): wq/wk/wv are dense-rule
+leaves (dense() reshapes and keys them itself); wo is consumed through
+dense_in, whose registry lookup happens on the original (H, hd, d) leaf
+before the (H*hd, d) reshape — its cache entry is prepared under that
+dense_in rule by models/common.build_weight_cache.
 """
 from __future__ import annotations
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,86 +91,201 @@ def param_count(specs: PyTree) -> int:
 # Weight cache (DESIGN.md §3): train/step.py quantizes every dense-eligible
 # weight once per optimizer step (build_weight_cache, hoisted outside the
 # microbatch scan) and installs the entries for the duration of the loss
-# trace (weight_cache_scope). dense() consults the registry by parameter
-# identity: a hit routes through timefloats.linear_cached (the stored
-# crossbar codes are read for fwd AND dx), a miss falls back to
-# timefloats.linear, which still quantizes each operand only once per
-# fwd+bwd via its residuals. Per-layer slices of scanned layer stacks miss
-# by construction (the scan body sees sliced tracers) — that fallback is
-# correct, just one weight-quantization per microbatch instead of per step.
+# trace (weight_cache_scope). Unscanned leaves are keyed by parameter
+# identity in dense()/dense_in(); a hit routes through
+# timefloats.linear_cached (the stored crossbar codes are read for fwd AND
+# dx), a miss falls back to timefloats.linear, which still quantizes each
+# operand only once per fwd+bwd via its residuals.
+#
+# Scanned layer stacks ("groups" in models/model.py) are covered by the
+# STACKED cache: build_weight_cache vmaps prepare_weight over the leading
+# (layers,) dim of every dense-eligible group leaf, weight_cache_scope
+# publishes those stacks, and models/model._run_groups threads them through
+# the layer scan as extra xs so the body receives per-layer PreparedOperand
+# slices and re-keys them against the sliced param tracers (a nested
+# weight_cache_scope). The scan-sliced entries are leaf-exact equal to
+# per-layer prepare_weight (the stacking law, tests/test_cache.py), so the
+# whole model quantizes each weight once per optimizer step.
+#
+# Preparation must mirror how each consumer reshapes its weight, recorded
+# as a per-leaf rule:
+#   dense    — w.reshape(w.shape[0], -1)        (wq/wk/wv, MLP, lm_head, …)
+#   dense_in — w.reshape(-1, w.shape[-1])       (wo: contract leading dims)
+#   expert   — vmap(dense rule) over dim 0      (MoE wg/wu/wd: per-expert
+#              crossbars, consumed under vmap in models/moe.py)
+# Excluded: <2-D slices, non-float, embeddings/meta tables (gather-read),
+# the f32 MoE router (precision-critical plain matmul), depthwise conv
+# kernels (not a dense() operand).
 # ---------------------------------------------------------------------------
 
 
 _ACTIVE_WEIGHT_CACHE: Optional[dict] = None
+_ACTIVE_GROUP_CACHES: Optional[tuple] = None
+
+_EXPERT_LEAVES = ("wg", "wu", "wd")  # MoE expert stacks (E, d, f)/(E, f, d)
+_DENSE_IN_LEAVES = ("wo",)           # consumed via dense_in
 
 
-def _cacheable_param(path, leaf) -> bool:
-    """Dense-eligible: float, >=2-D, not an embedding/meta table (those are
-    gather-read) and not inside a scanned layer stack ("groups" in
-    model.py): the scan body only ever sees per-layer *slices* of those
-    leaves, which can never hit the identity-keyed registry, so preparing
-    the stack would be dead weight in the step graph."""
-    if getattr(leaf, "ndim", 0) < 2:
-        return False
-    if not jnp.issubdtype(leaf.dtype, jnp.floating):
-        return False
-    keys = [str(p) for p in path]
-    if any("groups" in k for k in keys):
-        return False
-    last = keys[-1] if keys else ""
-    return not any(t in last for t in ("embed", "meta"))
+def _leaf_name(path) -> str:
+    """Last string key on a tree path (dict key; index entries skipped)."""
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+    return ""
 
 
-def build_weight_cache(params: PyTree, cfg: ModelConfig) -> Optional[dict]:
+def _leaf_rule(path, ndim: int, dtype) -> Optional[str]:
+    """Preparation rule for a leaf consumed at `ndim` dims (the per-layer
+    slice ndim for stacked group leaves), or None if not dense-eligible."""
+    if ndim < 2 or not jnp.issubdtype(dtype, jnp.floating):
+        return None
+    name = _leaf_name(path)
+    if any(t in name for t in ("embed", "meta")):
+        return None
+    if name == "router" or name.startswith("conv"):
+        return None
+    if name in _EXPERT_LEAVES and ndim == 3:
+        return "expert"
+    if name in _DENSE_IN_LEAVES:
+        return "dense_in"
+    return "dense"
+
+
+def _prepare_by_rule(leaf: Array, rule: str, cfg: ModelConfig
+                     ) -> timefloats.PreparedOperand:
+    """One leaf -> PreparedOperand under the consumer's reshape."""
+    if rule == "dense":
+        return timefloats.prepare_weight(leaf.reshape(leaf.shape[0], -1),
+                                         cfg.tf)
+    if rule == "dense_in":
+        return timefloats.prepare_weight(leaf.reshape(-1, leaf.shape[-1]),
+                                         cfg.tf)
+    if rule == "expert":
+        return jax.vmap(lambda w: timefloats.prepare_weight(
+            w.reshape(w.shape[0], -1), cfg.tf))(leaf)
+    raise ValueError(rule)
+
+
+class WeightCache(NamedTuple):
+    """Per-step weight cache (DESIGN.md §3).
+
+    flat   — {keystr: PreparedOperand} for unscanned leaves; re-keyed onto
+             the traced params by identity in weight_cache_scope.
+    groups — one entry per layer group of models/model.py: a
+             {keystr-relative-to-the-group-param-tree: stacked
+             PreparedOperand} dict whose every leaf carries a leading
+             (layers,) dim (built by vmapped prepare_weight), or None for
+             groups with no eligible leaves. _run_groups threads these
+             through the layer scan as extra xs.
+    """
+
+    flat: dict
+    groups: tuple
+
+
+def build_weight_cache(params: PyTree, cfg: ModelConfig
+                       ) -> Optional[WeightCache]:
     """Quantize every dense-eligible weight once (per optimizer step).
 
-    Returns {tree-path: PreparedOperand} for the 2-D reshape dense() uses,
-    or None when TimeFloats (with caching) is off. Call it *outside* the
-    microbatch scan / autodiff trace so the quantization work is hoisted;
-    pair with :func:`weight_cache_scope` inside the loss.
+    Covers unscanned leaves (flat, keyed by tree path) AND the scanned
+    layer stacks (per-group stacked PreparedOperand trees, quantized once
+    for all layers via a vmapped prepare_weight). Returns None when
+    TimeFloats (with caching) is off. Call it *outside* the microbatch scan
+    / autodiff trace so the quantization work is hoisted; pair with
+    :func:`weight_cache_scope` inside the loss.
     """
     if cfg.quant != "timefloats" or not cfg.tf.cache:
         return None
-    flat, _ = jax.tree_util.tree_flatten_with_path(params)
-    out = {}
-    for path, leaf in flat:
-        if _cacheable_param(path, leaf):
-            w2 = leaf.reshape(leaf.shape[0], -1)
-            out[jax.tree_util.keystr(path)] = timefloats.prepare_weight(
-                w2, cfg.tf)
-    return out or None
+    flat_out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if any("groups" in str(p) for p in path):
+            continue  # handled by the stacked per-group caches below
+        rule = _leaf_rule(path, getattr(leaf, "ndim", 0), leaf.dtype)
+        if rule:
+            flat_out[jax.tree_util.keystr(path)] = _prepare_by_rule(
+                leaf, rule, cfg)
+    # Tied-embedding LM head: _head reads the table transposed
+    # (params["embed"].T — a fresh tracer, so dense() could never key it);
+    # prepare the transposed read explicitly under the embed leaf's key and
+    # let _head pass it to dense() directly. The gather-read embedding path
+    # never consults the registry, so the entry cannot be misused. (Audio
+    # ties through an einsum, not dense() — left uncached.)
+    if (cfg.tie_embeddings and cfg.family != "audio"
+            and isinstance(params, dict) and "embed" in params
+            and getattr(params["embed"], "ndim", 0) == 2):
+        flat_out["['embed']"] = timefloats.prepare_weight(
+            params["embed"].T, cfg.tf)
+    group_out = []
+    groups = params.get("groups", ()) if isinstance(params, dict) else ()
+    for g in groups:
+        gtree = g.get("params", g) if isinstance(g, dict) else g
+        entries = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(gtree)[0]:
+            # per-layer slice drops the leading (layers,) dim
+            rule = _leaf_rule(path, getattr(leaf, "ndim", 0) - 1, leaf.dtype)
+            if rule:
+                entries[jax.tree_util.keystr(path)] = jax.vmap(
+                    lambda w, rule=rule: _prepare_by_rule(w, rule, cfg))(leaf)
+        group_out.append(entries or None)
+    if not flat_out and not any(group_out):
+        return None
+    return WeightCache(flat=flat_out, groups=tuple(group_out))
 
 
 @contextlib.contextmanager
-def weight_cache_scope(params: PyTree, cache: Optional[dict]):
+def weight_cache_scope(params: PyTree, cache):
     """Install `cache` (from build_weight_cache, possibly built outside the
     current autodiff/scan trace) for the `params` tree *as traced here*.
 
     The registry is keyed by the identity of the leaves of ``params`` as
     this scope sees them — inside jax.value_and_grad those are fresh
     tracers, which is exactly what dense() will receive — so entries are
-    re-keyed per trace while the quantized payloads stay hoisted.
+    re-keyed per trace while the quantized payloads stay hoisted. Entries
+    merge over any enclosing scope, so the per-layer scope _run_groups
+    opens inside the layer scan (with `cache` a plain {relative-keystr:
+    PreparedOperand} dict of scan-sliced entries) nests under the step
+    scope. A WeightCache additionally publishes its per-group stacked
+    caches for _run_groups to pick up (active_group_cache).
     """
-    global _ACTIVE_WEIGHT_CACHE
-    if not cache:
+    global _ACTIVE_WEIGHT_CACHE, _ACTIVE_GROUP_CACHES
+    if cache is None or (isinstance(cache, dict) and not cache):
         yield
         return
-    table = {}
+    if isinstance(cache, WeightCache):
+        flat, groups = cache.flat, cache.groups
+    else:
+        flat, groups = cache, None
+    table = dict(_ACTIVE_WEIGHT_CACHE or ())
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         k = jax.tree_util.keystr(path)
-        if k in cache:
-            table[id(leaf)] = (leaf, cache[k])
-    prev = _ACTIVE_WEIGHT_CACHE
+        if k in flat:
+            table[id(leaf)] = (leaf, flat[k])
+    prev, prev_g = _ACTIVE_WEIGHT_CACHE, _ACTIVE_GROUP_CACHES
     _ACTIVE_WEIGHT_CACHE = table
+    if groups is not None:
+        _ACTIVE_GROUP_CACHES = groups
     try:
         yield
     finally:
         _ACTIVE_WEIGHT_CACHE = prev
+        _ACTIVE_GROUP_CACHES = prev_g
+
+
+def active_group_cache(gi: int) -> Optional[dict]:
+    """The installed stacked cache for layer group `gi` (or None). Read by
+    models/model._run_groups to pick its extra scan xs."""
+    if _ACTIVE_GROUP_CACHES is None or gi >= len(_ACTIVE_GROUP_CACHES):
+        return None
+    return _ACTIVE_GROUP_CACHES[gi]
 
 
 def cached_weight(w: Array) -> Optional[timefloats.PreparedOperand]:
-    """Registry lookup for dense(); the stored leaf reference both keeps
-    id() stable and guards against id reuse."""
+    """Registry lookup by leaf identity; the stored leaf reference both
+    keeps id() stable and guards against id reuse. Callers must consume the
+    entry under the reshape rule it was built with (_leaf_rule): dense()
+    looks up leaves it reshapes itself, dense_in() and models/moe.py look
+    up their leaves before reshaping/vmapping."""
     if _ACTIVE_WEIGHT_CACHE is None:
         return None
     ent = _ACTIVE_WEIGHT_CACHE.get(id(w))
@@ -179,17 +294,22 @@ def cached_weight(w: Array) -> Optional[timefloats.PreparedOperand]:
     return ent[1]
 
 
-def dense(x: Array, w: Array, cfg: ModelConfig) -> Array:
+def dense(x: Array, w: Array, cfg: ModelConfig,
+          pw: Optional[timefloats.PreparedOperand] = None) -> Array:
     """y[..., n] = x[..., k] @ w[k, n] with optional TimeFloats arithmetic.
 
     `w` may have >2 dims; trailing dims are flattened into the output
-    (e.g. (d, H, hd)); callers reshape the output back.
+    (e.g. (d, H, hd)); callers reshape the output back. `pw` overrides the
+    registry lookup with an explicit cache entry for callers that reshape
+    or slice `w` before this point (dense_in, MoE expert vmap) — it must
+    describe exactly the 2-D ``w.reshape(w.shape[0], -1)`` seen here.
     """
     k = w.shape[0]
     w2 = w.reshape(k, -1)
     out_shape = x.shape[:-1] + w.shape[1:]
     if cfg.quant == "timefloats":
-        pw = cached_weight(w)
+        if pw is None:
+            pw = cached_weight(w)
         if pw is not None:
             y = timefloats.linear_cached(x, w2, pw, cfg.tf)
         else:
@@ -201,11 +321,16 @@ def dense(x: Array, w: Array, cfg: ModelConfig) -> Array:
 
 def dense_in(x: Array, w: Array, cfg: ModelConfig) -> Array:
     """Contraction over multiple leading dims of w (e.g. wo: (H, hd, d)).
-    x (..., H, hd) @ w (H, hd, d) -> (..., d)."""
+    x (..., H, hd) @ w (H, hd, d) -> (..., d).
+
+    The registry is consulted on the ORIGINAL leaf before the reshape
+    (the reshaped view is a fresh tracer, so dense() could never key it);
+    entries for these leaves are prepared under the dense_in rule."""
     n_in = w.ndim - 1
     k = math.prod(w.shape[:n_in])
     x2 = x.reshape(*x.shape[: x.ndim - n_in], k)
-    return dense(x2, w.reshape(k, w.shape[-1]), cfg)
+    pw = cached_weight(w) if cfg.quant == "timefloats" else None
+    return dense(x2, w.reshape(k, w.shape[-1]), cfg, pw=pw)
 
 
 # ---------------------------------------------------------------------------
@@ -298,8 +423,13 @@ def mlp_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig) -> Array:
 
 
 def expert_mlp_apply(wg: Array, wu: Array, wd: Array, x: Array,
-                     cfg: ModelConfig) -> Array:
-    """SwiGLU on explicit weights (used vmapped over experts)."""
-    g = jax.nn.silu(dense(x, wg, cfg))
-    u = dense(x, wu, cfg)
-    return dense(g * u, wd, cfg)
+                     cfg: ModelConfig, pws=None) -> Array:
+    """SwiGLU on explicit weights (used vmapped over experts). `pws` is an
+    optional (pwg, pwu, pwd) triple of PreparedOperand cache entries —
+    per-expert slices of the stacked expert cache, vmapped in alongside the
+    weights by models/moe.py (the weights themselves are vmap slices here,
+    so the identity-keyed registry could never see them)."""
+    pg, pu, pd = pws if pws is not None else (None, None, None)
+    g = jax.nn.silu(dense(x, wg, cfg, pw=pg))
+    u = dense(x, wu, cfg, pw=pu)
+    return dense(g * u, wd, cfg, pw=pd)

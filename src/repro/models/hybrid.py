@@ -6,6 +6,11 @@ are window-exempt in the attention mask (MaskSpec.prefix_len). Most layers
 use sliding-window attention; cfg.hybrid.global_layers use full attention.
 Cross-layer KV sharing from the paper is not implemented (breaks
 layer-homogeneous scan; memory-only optimization) — noted in DESIGN.md.
+
+Weight-cache notes (DESIGN.md §3): the attn/ssm sub-trees inherit their
+modules' consumption rules unchanged — the stacked per-group cache mirrors
+the whole nested param tree, so both mixers' projections hit inside the
+hybrid layer scan.
 """
 from __future__ import annotations
 

@@ -9,6 +9,11 @@ MLA serving trick and is what makes deepseek-class 32k decode cells
 memory-sane.
 
 All projections go through `dense` → TimeFloats arithmetic when enabled.
+Weight-cache notes (DESIGN.md §3): wq_a/wq_b/wkv_a/wkv_b are dense-rule
+leaves, wo is a dense_in-rule leaf (looked up pre-reshape). The absorbed
+decode path reads wkv_b through einsum slices — a serving-only path that
+never consults the registry (no weight_cache_scope is installed outside
+train/step.py).
 """
 from __future__ import annotations
 

@@ -27,6 +27,7 @@ from repro.models import hybrid as hybrid_mod
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
+from repro.models import common
 from repro.models.attention import KVCache, MaskSpec
 from repro.models.common import (ParamSpec, dense, init_params, mlp_apply,
                                  mlp_specs, norm_apply, norm_specs,
@@ -254,8 +255,13 @@ def _head(params: PyTree, x: Array, cfg: ModelConfig) -> Array:
                               params["embed"].astype(jnp.float32))
         w = params["lm_head"]  # (D, K, V)
         return dense(x, w, cfg).astype(jnp.float32)
-    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    return dense(x, w, cfg).astype(jnp.float32)
+    if cfg.tie_embeddings:
+        # Transposed read of the embedding table; its cache entry (prepared
+        # from embed.T by build_weight_cache) is keyed on the table leaf.
+        return dense(x, params["embed"].T, cfg,
+                     pw=common.cached_weight(params["embed"])
+                     ).astype(jnp.float32)
+    return dense(x, params["lm_head"], cfg).astype(jnp.float32)
 
 
 def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
@@ -266,6 +272,15 @@ def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
     for gi, (kind, _count) in enumerate(group_meta):
         gparams = params["groups"][gi]["params"]
         gcache = caches[gi] if caches is not None else None
+        # Stacked weight cache (DESIGN.md §3): when a step-level
+        # weight_cache_scope is active (train/step.py), each group's
+        # dense-eligible weights have a (layers,)-leading PreparedOperand
+        # stack, threaded through the scan as extra xs. The body re-keys
+        # the per-layer slices against the sliced param tracers via a
+        # nested weight_cache_scope, so dense() hits inside the scan.
+        # None (the serving paths, quant="none", tf.cache=False) adds no
+        # xs leaves and the body scope is a no-op.
+        gprep = common.active_group_cache(gi)
 
         def body(carry, xs, kind=kind):
             x_c, aux_c = carry
@@ -273,13 +288,11 @@ def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
             # let SPMD propagation drop it (observed: replicated activations
             # inside the layer scan on the dry-run meshes).
             x_c = constrain(x_c, ("batch", None, None))
-            if gcache is not None:
-                lp, lc = xs
-            else:
-                lp, lc = xs, None
-            y, nc, aux_l = block_apply(
-                kind, lp, x_c, cfg, positions=positions, cache=lc,
-                lengths=lengths, q_offset=q_offset)
+            lp, lc, lprep = xs
+            with common.weight_cache_scope(lp, lprep):
+                y, nc, aux_l = block_apply(
+                    kind, lp, x_c, cfg, positions=positions, cache=lc,
+                    lengths=lengths, q_offset=q_offset)
             aux_c = {k: aux_c[k] + jnp.asarray(aux_l[k], jnp.float32)
                      for k in aux_c}
             return (y, aux_c), nc
@@ -289,8 +302,8 @@ def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
                       if cfg.remat == "dots" else None)
             body = jax.checkpoint(body, policy=policy,
                                   prevent_cse=False)
-        xs = (gparams, gcache) if gcache is not None else gparams
-        (x, aux_tot), nc = jax.lax.scan(body, (x, aux_tot), xs)
+        (x, aux_tot), nc = jax.lax.scan(body, (x, aux_tot),
+                                        (gparams, gcache, gprep))
         new_caches.append(nc)
     return x, aux_tot, (new_caches if caches is not None else None)
 

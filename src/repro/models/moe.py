@@ -5,7 +5,11 @@ tensors), shared experts, load-balance + router-z auxiliary losses.
 Expert FFN matmuls run vmapped over the expert dimension and therefore go
 through TimeFloats arithmetic when enabled — the experts ARE the crossbars
 in the train-in-memory picture (each expert's weights live in their own
-memristor arrays; routing merely selects which arrays see the token).
+memristor arrays; routing merely selects which arrays see the token). The
+per-step weight cache (DESIGN.md §3) follows the same picture: wg/wu/wd
+entries are prepared per-expert (vmapped), looked up on the full (E, d, f)
+leaves before the expert vmap, and threaded in alongside the weights; the
+f32 router is deliberately uncached (precision-critical plain matmul).
 
 Deviation noted in DESIGN.md: deepseek-v3's sigmoid router with
 aux-loss-free bias balancing is replaced by the standard softmax+aux-loss
@@ -20,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.common import ParamSpec, expert_mlp_apply
+from repro.models.common import ParamSpec, cached_weight, expert_mlp_apply
 from repro.parallel.sharding import constrain
 
 Array = jax.Array
@@ -138,8 +142,20 @@ def _moe_tokens(params: Dict[str, Array], xf: Array, cfg: ModelConfig
     if mo.ep_mode == "constrained":
         xe = constrain(xe, ("experts", None, None))
 
-    ye = jax.vmap(lambda wg, wu, wd, xi: expert_mlp_apply(wg, wu, wd, xi, cfg)
-                  )(params["wg"], params["wu"], params["wd"], xe)
+    # Weight cache (DESIGN.md §3): the expert stacks are prepared per-expert
+    # (vmapped over E) by build_weight_cache; the registry is keyed on the
+    # full (E, d, f) leaves — inside the expert vmap the weights are fresh
+    # batch tracers, so the entries are looked up HERE and vmapped in
+    # alongside the weights (each expert's crossbar codes ride with it).
+    pws = tuple(cached_weight(params[k]) for k in ("wg", "wu", "wd"))
+    if all(p is not None for p in pws):
+        ye = jax.vmap(
+            lambda wg, wu, wd, pg, pu, pd, xi: expert_mlp_apply(
+                wg, wu, wd, xi, cfg, pws=(pg, pu, pd))
+        )(params["wg"], params["wu"], params["wd"], *pws, xe)
+    else:
+        ye = jax.vmap(lambda wg, wu, wd, xi: expert_mlp_apply(
+            wg, wu, wd, xi, cfg))(params["wg"], params["wu"], params["wd"], xe)
     if mo.ep_mode == "constrained":
         ye = constrain(ye, ("experts", None, None))
 

@@ -11,6 +11,12 @@ weight-stationary model — kept in f32/bf16 (noted inapplicability).
 
 Projections are stored un-fused (wz/wx/wB/wC/wdt instead of one in_proj) so
 tensor-parallel sharding never slices across component boundaries.
+
+Weight-cache notes (DESIGN.md §3): wz/wx/wB/wC/wdt/out are dense-rule
+leaves and get stacked PreparedOperand entries in the scanned layer stacks;
+the depthwise conv kernels (conv_x/conv_B/conv_C) are 2-D float but are
+convolution operands, not dense() operands — excluded by name in
+models/common._leaf_rule.
 """
 from __future__ import annotations
 

@@ -78,10 +78,16 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
                    ) -> Tuple[TrainState, Dict[str, Array]]:
         rng, rng_next = jax.random.split(state.rng)
         # Quantized-operand weight cache (DESIGN.md §3): every dense-eligible
-        # weight is prescaled + quantized ONCE per optimizer step, outside
-        # the grad trace and the microbatch scan; the scope re-keys the
-        # entries onto the traced params so fwd and dx both read the stored
-        # planes. No-op unless model_cfg.quant == "timefloats".
+        # weight — including the scanned layer stacks, prepared as stacked
+        # PreparedOperands via vmapped prepare_weight — is prescaled +
+        # quantized ONCE per optimizer step, outside the grad trace and the
+        # microbatch scan; the scope re-keys the unscanned entries onto the
+        # traced params and publishes the per-group stacks for
+        # models/model._run_groups to thread through the layer scans (where
+        # they are compatible with jax.checkpoint remat of the scan body:
+        # the stacks are scan xs, i.e. saved inputs, never recomputed).
+        # No-op unless model_cfg.quant == "timefloats" (TFConfig.cache=False
+        # is the escape hatch back to residual-level caching only).
         wcache = common.build_weight_cache(state.params, model_cfg)
 
         def loss(params, mb):

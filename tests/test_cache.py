@@ -7,6 +7,12 @@ bit-identical y, dx and dW in every mode; exact mode must additionally be
 bit-identical to the pre-cache implementation (whose backward re-decomposed
 w.T / x.T — elementwise decomposition is transpose-equivariant, so only the
 separable plane layouts changed semantics, and those by design).
+
+The scanned-stack suite at the bottom extends the contract to whole models:
+with the weight cache threaded through the grouped layer scans (stacked
+PreparedOperands as scan xs, DESIGN.md §3), loss AND grads must equal the
+TFConfig.cache=False execution for every layer family, in all three modes,
+including under remat.
 """
 import dataclasses
 
@@ -14,6 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dependency (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import timefloats as tf
 from repro.core.timefloats import TFConfig
@@ -166,20 +177,341 @@ def test_dense_weight_cache_scope_bit_identical():
 
 
 def test_build_weight_cache_filters():
-    """Embedding tables and scanned layer stacks are excluded; dense
-    projection weights are included; quant='none' disables the cache."""
-    model_cfg = _mlp_model_cfg()
+    """Embedding tables, norms, routers and conv kernels are excluded;
+    dense projection weights are included (flat), scanned layer stacks get
+    stacked entries (groups); quant='none' disables the cache."""
+    model_cfg = dataclasses.replace(_mlp_model_cfg(), tie_embeddings=False)
     params = {
         "embed": jnp.ones((32, 8)),
-        "groups": [{"w_up": jnp.ones((8, 16))}],
+        "groups": [{"params": {
+            "mixer": {"wq": jnp.ones((2, 8, 4, 4)),
+                      "wo": jnp.ones((2, 4, 4, 8)),
+                      "conv_x": jnp.ones((2, 4, 16))},
+            "ffn": {"w_up": jnp.ones((2, 8, 16)),
+                    "router": jnp.ones((2, 8, 4))},
+            "norm1": {"scale": jnp.ones((2, 8))},
+        }}],
         "lm_head": jnp.ones((8, 32)),
         "norm": {"scale": jnp.ones((8,))},
     }
     cache = common.build_weight_cache(params, model_cfg)
-    keys = sorted(cache)
-    assert len(keys) == 1 and "lm_head" in keys[0]
+    assert isinstance(cache, common.WeightCache)
+    assert sorted(cache.flat) == ["['lm_head']"]
+    assert len(cache.groups) == 1
+    assert sorted(cache.groups[0]) == [
+        "['ffn']['w_up']", "['mixer']['wo']", "['mixer']['wq']"]
+    # every stacked entry leads with the (layers,) dim and mirrors the
+    # consumer's reshape: wq (2,8,4,4) -> dense rule (8, 16); wo (2,4,4,8)
+    # -> dense_in rule (16, 8)
+    wq = cache.groups[0]["['mixer']['wq']"]
+    wo = cache.groups[0]["['mixer']['wo']"]
+    assert wq.q.q.shape[0] == 2 and wq.scale.shape == (2,)
+    assert wq.q.q.shape[-1] == 16 and wo.q.q.shape[-1] == 8
     off = dataclasses.replace(model_cfg, quant="none")
     assert common.build_weight_cache(params, off) is None
+    hatch = dataclasses.replace(
+        model_cfg, tf=dataclasses.replace(model_cfg.tf, cache=False))
+    assert common.build_weight_cache(params, hatch) is None
+
+
+def test_build_weight_cache_tied_head_entry():
+    """Tied-embedding configs get a transposed-read head entry keyed on the
+    embed leaf (the table itself stays gather-read / uncached)."""
+    model_cfg = _mlp_model_cfg()
+    assert model_cfg.tie_embeddings
+    params = {"embed": jnp.ones((32, 8)), "norm": {"scale": jnp.ones((8,))}}
+    cache = common.build_weight_cache(params, model_cfg)
+    assert sorted(cache.flat) == ["['embed']"]
+    pw = cache.flat["['embed']"]
+    assert pw.q.q.shape[-1] == 32  # prepared for the (8, 32) transposed read
+
+
+# ---------------------------------------------------------------------------
+# PreparedOperand as a scan operand (the tentpole mechanism, distilled)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_prepared_operand_pytree_roundtrip(mode):
+    """PreparedOperand is a registered pytree (NamedTuple): flatten/
+    unflatten round-trips, and vmapped preparation yields a stack whose
+    every leaf leads with the (layers,) dim."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 96, 8))
+    cfg = TFConfig(mode=mode)
+    pw = tf.prepare_weight(w[0], cfg)
+    leaves, treedef = jax.tree.flatten(pw)
+    assert jax.tree.unflatten(treedef, leaves)._fields == pw._fields
+    stacked = jax.vmap(lambda wi: tf.prepare_weight(wi, cfg))(w)
+    assert jax.tree.structure(stacked) == treedef
+    for a, b in zip(jax.tree.leaves(stacked), leaves):
+        assert a.shape == (3,) + b.shape
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_prepared_operand_scan_threading(mode):
+    """A stack of prepared weights threaded through lax.scan as xs yields
+    per-layer slices that reproduce tf.linear bit-for-bit — the exact
+    mechanism models/model._run_groups uses."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    ws = jax.random.normal(kw, (3, 96, 8))
+    x = jax.random.normal(kx, (4, 96))
+    cfg = TFConfig(mode=mode)
+    stacked = jax.vmap(lambda wi: tf.prepare_weight(wi, cfg))(ws)
+
+    def body(carry, xs):
+        w, pw = xs
+        return carry, tf.linear_cached(x, w, pw, cfg)
+
+    _, ys = jax.lax.scan(body, 0.0, (ws, stacked))
+    for i in range(ws.shape[0]):
+        np.testing.assert_array_equal(
+            np.asarray(ys[i]), np.asarray(tf.linear(x, ws[i], cfg)))
+
+
+def test_stacking_law_smoke():
+    """Deterministic stacking-law check (runs even without hypothesis):
+    vmap(prepare_weight) over a stack == per-layer prepare_weight of each
+    slice, leaf-exact — including the double-vmap expert rule."""
+    for mode in MODES:
+        cfg = TFConfig(mode=mode)
+        w = jax.random.normal(jax.random.PRNGKey(2), (4, 70, 6)) * 3.0
+        stacked = jax.vmap(lambda wi: tf.prepare_weight(wi, cfg))(w)
+        for i in range(4):
+            per = tf.prepare_weight(w[i], cfg)
+            jax.tree.map(
+                lambda a, b: np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b)),
+                jax.tree.map(lambda a: a[i], stacked), per)
+    # expert rule: (layers, E, d, f) -> vmap over layers of vmap over E
+    cfg = TFConfig(mode="separable")
+    we = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 64, 5))
+    stacked = jax.vmap(jax.vmap(lambda wi: tf.prepare_weight(wi, cfg)))(we)
+    per = tf.prepare_weight(we[1, 2], cfg)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        jax.tree.map(lambda a: a[1, 2], stacked), per)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mode=st.sampled_from(MODES),
+       layers=st.integers(min_value=1, max_value=4),
+       k=st.integers(min_value=1, max_value=130),
+       n=st.integers(min_value=1, max_value=9),
+       scale_exp=st.integers(min_value=-6, max_value=6),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_stacking_law_property(mode, layers, k, n, scale_exp, seed):
+    """Property form of the stacking law: for any stack shape / scale /
+    mode, the scan-threaded slice equals what the residual-level fallback
+    would have computed from the raw slice, leaf-exact."""
+    cfg = TFConfig(mode=mode)
+    w = (jax.random.normal(jax.random.PRNGKey(seed), (layers, k, n))
+         * (2.0 ** scale_exp))
+    # sprinkle exact zeros: the nonzero plane must stack exactly too
+    w = jnp.where(jnp.abs(w) < 0.1 * (2.0 ** scale_exp), 0.0, w)
+    stacked = jax.vmap(lambda wi: tf.prepare_weight(wi, cfg))(w)
+    i = seed % layers
+    per = tf.prepare_weight(w[i], cfg)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        jax.tree.map(lambda a: a[i], stacked), per)
+
+
+# ---------------------------------------------------------------------------
+# Scanned-stack cross-family bit-identity (the tentpole, end to end)
+# ---------------------------------------------------------------------------
+
+FAMILIES = ["attention", "mla", "ssm", "hybrid", "moe"]
+
+
+def _family_cfg(family, mode, cache=True, remat="none"):
+    """Smallest grouped-scan config exercising `family`'s block stack."""
+    from repro.configs import get_config, reduced_for_smoke
+    from repro.configs.base import MLAConfig
+
+    arch = {"attention": "qwen3-0.6b", "mla": "deepseek-v3-671b",
+            "ssm": "mamba2-1.3b", "hybrid": "hymba-1.5b",
+            "moe": "deepseek-v3-671b"}[family]
+    cfg = reduced_for_smoke(get_config(arch))
+    tiny_mla = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                         qk_nope_head_dim=16, qk_rope_head_dim=8,
+                         v_head_dim=16)
+    ch = dict(d_model=64, vocab_size=128, quant="timefloats", remat=remat,
+              tf=TFConfig(mode=mode, cache=cache), q_block=32, kv_block=32)
+    if cfg.n_heads:
+        ch.update(n_heads=2, n_kv_heads=1, head_dim=32)
+    if cfg.d_ff:
+        ch["d_ff"] = 128
+    if family == "mla":
+        # pure MLA+MLP stack: drop the MoE FFN so the scatter-dispatch
+        # noise (see the moe notes below) stays out of this family's run
+        ch.update(family="dense", moe=None, n_layers=2, mla=tiny_mla)
+    if family == "moe":
+        ch["mla"] = tiny_mla
+        ch["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=2, d_expert=32, shared_d_ff=32,
+            dense_d_ff=64)
+    if cfg.ssm:
+        ch["ssm"] = dataclasses.replace(cfg.ssm, d_state=8, head_dim=16,
+                                        chunk=16)
+    if cfg.hybrid:
+        ch["hybrid"] = dataclasses.replace(cfg.hybrid, meta_tokens=4,
+                                           sliding_window=16)
+    return dataclasses.replace(cfg, **ch)
+
+
+def _family_batch(cfg, b=2, s=8, seed=1):
+    k1, k2, _ = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size),
+            "mask": jnp.ones((b, s), jnp.float32)}
+
+
+def _loss_and_grads(cfg, batch, jit=True):
+    """loss+grads exactly as train/step.py computes them: weight cache
+    built outside the grad trace, scope installed around the loss."""
+    from repro.models import model as model_lib
+
+    params = model_lib.init(cfg, jax.random.PRNGKey(0))
+
+    def loss(p):
+        wc = common.build_weight_cache(p, cfg)
+        with common.weight_cache_scope(p, wc):
+            return model_lib.loss_fn(p, batch, cfg)[0]
+
+    fn = jax.value_and_grad(loss)
+    if jit:
+        fn = jax.jit(fn)
+    l, g = fn(params)
+    return np.asarray(l), jax.tree.map(np.asarray, g)
+
+
+def _assert_grads_identical(family, gc, gu):
+    """Bitwise by default. The MoE dispatch region is compared to f32
+    reassociation tolerance ONLY: XLA compiles the token-contraction dW
+    dots adjacent to the scatter/gather dispatch with program-dependent
+    reduction order (the dW sum mixes per-token pow2 scales, so order
+    changes last bits; observed on wd/shared_wd, pre-existing at the
+    residual-cache level). test_stacked_cache_moe_bit_identical_op_by_op
+    proves the arithmetic itself is bit-identical."""
+    fc = jax.tree_util.tree_flatten_with_path(gc)[0]
+    fu = jax.tree_util.tree_flatten_with_path(gu)[0]
+    for (path, a), (_, b) in zip(fc, fu):
+        name = jax.tree_util.keystr(path)
+        if family == "moe" and "['ffn']" in name:
+            np.testing.assert_allclose(a, b, rtol=1e-2, atol=2e-3,
+                                       err_msg=name)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("family", FAMILIES)
+def test_stacked_cache_bit_identity(family, mode):
+    """Loss AND grads with the stacked scan cache on == TFConfig.cache=False
+    for every layer family, in every mode."""
+    cfg_c = _family_cfg(family, mode, cache=True)
+    cfg_u = _family_cfg(family, mode, cache=False)
+    batch = _family_batch(cfg_c)
+    lc, gc = _loss_and_grads(cfg_c, batch)
+    lu, gu = _loss_and_grads(cfg_u, batch)
+    np.testing.assert_array_equal(lc, lu)
+    _assert_grads_identical(family, gc, gu)
+
+
+@pytest.mark.parametrize("family,remat", [
+    ("attention", "dots"), ("attention", "full"), ("mla", "full"),
+    ("ssm", "dots"), ("hybrid", "dots"), ("moe", "full")])
+def test_stacked_cache_bit_identity_remat(family, remat):
+    """Same contract under jax.checkpoint remat of the scan body (the
+    stacked cache entries are scan xs = saved inputs, never recomputed)."""
+    cfg_c = _family_cfg(family, "separable", cache=True, remat=remat)
+    cfg_u = _family_cfg(family, "separable", cache=False, remat=remat)
+    batch = _family_batch(cfg_c)
+    lc, gc = _loss_and_grads(cfg_c, batch)
+    lu, gu = _loss_and_grads(cfg_u, batch)
+    np.testing.assert_array_equal(lc, lu)
+    _assert_grads_identical(family, gc, gu)
+
+
+def test_stacked_cache_moe_bit_identical_op_by_op():
+    """Op-by-op (jit disabled), cached vs uncached MoE loss AND grads are
+    bit-identical on EVERY leaf — the tolerance in the jitted comparison
+    covers XLA's program-dependent dot reduction order, not our math."""
+    cfg_c = _family_cfg("moe", "separable", cache=True)
+    cfg_u = _family_cfg("moe", "separable", cache=False)
+    batch = _family_batch(cfg_c)
+    with jax.disable_jit():
+        lc, gc = _loss_and_grads(cfg_c, batch, jit=False)
+        lu, gu = _loss_and_grads(cfg_u, batch, jit=False)
+    np.testing.assert_array_equal(lc, lu)
+    jax.tree.map(np.testing.assert_array_equal, gc, gu)
+
+
+def test_step_trace_contains_zero_weight_preparations():
+    """The acceptance check for the scanned-stack cache: tracing the full
+    fwd+bwd loss with the cache installed performs ZERO prepare_weight
+    calls — every weight quantization lives in build_weight_cache, which
+    train/step.py runs once per optimizer step outside the microbatch
+    scan. (prepare_* counters tick once per Python invocation, i.e. per
+    trace — a call inside the layer-scan body would execute per layer per
+    microbatch; with the stacked cache there are none at all.)"""
+    from repro.models import model as model_lib
+
+    for family in ("attention", "moe"):
+        cfg = _family_cfg(family, "separable", cache=True)
+        batch = _family_batch(cfg)
+        params = model_lib.init(cfg, jax.random.PRNGKey(0))
+        wcache = common.build_weight_cache(params, cfg)
+
+        def loss(p, cfg=cfg, batch=batch, wcache=wcache):
+            with common.weight_cache_scope(p, wcache):
+                return model_lib.loss_fn(p, batch, cfg)[0]
+
+        tf.reset_quant_trace_counts()
+        jax.jit(jax.value_and_grad(loss)).lower(params)
+        counts = tf.quant_trace_counts()
+        assert counts["prepare_weight"] == 0, (family, counts)
+
+        # control: without the weight cache the loss trace prepares
+        # weights at every dense call site (executed per layer per
+        # microbatch at run time)
+        cfg_u = _family_cfg(family, "separable", cache=False)
+
+        def loss_u(p, cfg=cfg_u, batch=batch):
+            return model_lib.loss_fn(p, batch, cfg)[0]
+
+        tf.reset_quant_trace_counts()
+        jax.jit(jax.value_and_grad(loss_u)).lower(params)
+        assert tf.quant_trace_counts()["prepare_weight"] > 0
+
+
+@pytest.mark.parametrize("family", ["attention", "ssm", "hybrid"])
+def test_decode_prefill_unchanged_by_cache(family):
+    """Serving is a training-path-free zone: prefill and decode_step
+    logits are bit-identical whether TFConfig.cache is on or off (no
+    weight_cache_scope is ever installed outside train/step.py)."""
+    from repro.models import model as model_lib
+
+    outs = {}
+    for cache in (True, False):
+        cfg = _family_cfg(family, "separable", cache=cache)
+        params = model_lib.init(cfg, jax.random.PRNGKey(0))
+        batch = _family_batch(cfg, b=2, s=8)
+        from repro.models.model import prefix_length
+        max_len = 8 + prefix_length(cfg) + 4
+        mc = model_lib.init_cache(cfg, 2, max_len)
+        logits_p, mc = model_lib.prefill(params, batch, cfg, mc)
+        steps = [np.asarray(logits_p)]
+        tok = jnp.argmax(logits_p[:, -1], axis=-1)[:, None]
+        for _ in range(3):
+            logits_d, mc = model_lib.decode_step(params, mc, tok, cfg)
+            steps.append(np.asarray(logits_d))
+            tok = jnp.argmax(logits_d[:, -1], axis=-1)[:, None]
+        outs[cache] = steps
+    for a, b in zip(outs[True], outs[False]):
+        np.testing.assert_array_equal(a, b)
 
 
 def test_train_step_with_weight_cache_learns():
