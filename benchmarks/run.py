@@ -3,16 +3,22 @@
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table1 fig7
 
-Prints ``name,value,note`` CSV lines (the harness contract) and a summary.
+Prints ``name,value,note`` CSV lines (the harness contract) and a summary,
+and writes every record to ``BENCH_kernel.json`` (machine-readable: step
+times, cache speedups, hw-report headline numbers) so the perf trajectory
+is tracked across PRs instead of only printed.
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
 import sys
 import time
 import traceback
 
 from benchmarks import (ablation_formats, fig3_linearity, fig7_variability,
-                        kernel_bench, roofline, table1_energy,
+                        hw_projection, kernel_bench, roofline, table1_energy,
                         table2_comparison)
 
 MODULES = {
@@ -23,18 +29,36 @@ MODULES = {
     "kernel": kernel_bench,
     "formats": ablation_formats,
     "roofline": roofline,
+    "hw": hw_projection,
 }
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernel.json")
+
+# Headline records surfaced in the JSON summary (trajectory-over-PRs view).
+SUMMARY_KEYS = (
+    "kernel/step_cache_speedup_x",
+    "kernel/scan_step_cache_speedup_x",
+    "kernel/step_cached_us",
+    "kernel/scan_step_cached_us",
+    "table1/tops_per_watt",
+    "hw/mlp_hardware_tops_per_watt",
+    "hw/mlp_step_energy_uj",
+    "hw/qwen3-0p6b_token_fwd_uj",
+)
 
 
 def main() -> None:
     picks = [a for a in sys.argv[1:] if a in MODULES] or list(MODULES)
     failures = []
+    records = []
     print("name,value,note")
     for name in picks:
         mod = MODULES[name]
         t0 = time.time()
 
-        def report(key, value, note=""):
+        def report(key, value, note="", module=name):
+            records.append({"name": key, "value": value, "note": note,
+                            "module": module})
             if isinstance(value, float):
                 print(f"{key},{value:.6g},{note}")
             else:
@@ -46,6 +70,32 @@ def main() -> None:
         except Exception as e:  # keep going; report at the end
             failures.append((name, e))
             traceback.print_exc()
+
+    # Merge with any existing file so a partial run (`run.py table1`) only
+    # refreshes its own modules' records and never wipes the trajectory
+    # the other modules last wrote.
+    if os.path.exists(JSON_PATH):
+        try:
+            with open(JSON_PATH) as f:
+                prev = json.load(f).get("records", [])
+            records = [r for r in prev if r.get("module") not in picks] \
+                + records
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt/unreadable previous file: rewrite from scratch
+    by_name = {r["name"]: r["value"] for r in records}
+    payload = {
+        "schema": "timefloats-bench/v1",
+        "modules_run": picks,
+        "platform": {"python": platform.python_version(),
+                     "machine": platform.machine()},
+        "summary": {k: by_name[k] for k in SUMMARY_KEYS if k in by_name},
+        "failures": [n for n, _ in failures],
+        "records": records,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {os.path.normpath(JSON_PATH)} "
+          f"({len(records)} records)")
     if failures:
         print(f"# FAILURES: {[n for n, _ in failures]}")
         raise SystemExit(1)

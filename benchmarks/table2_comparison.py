@@ -1,7 +1,9 @@
-"""Table II reproduction: TimeFloats vs state-of-the-art CIM MAC macros."""
+"""Table II reproduction: TimeFloats vs state-of-the-art CIM MAC macros,
+plus model-level TOPS/W projections from the §6 digital twin."""
 from __future__ import annotations
 
 from repro.core import energy
+from repro.launch import hw_report
 
 
 def run(report):
@@ -16,3 +18,18 @@ def run(report):
     fp_rows = [r for r in energy.TABLE2_SOTA[1:] if "FP" in r[3] or "BF16" in r[3]]
     report("table2/ours_vs_fp_competitors_min", ours - max(r[-1][0] for r in fp_rows),
            "TOPS/W margin vs FP-capable rows (low bound)")
+
+    # Model-level projections (hw/mapper + census cost model): the macro
+    # headline assumes full 64-element chunks; real models keep it when
+    # their contraction dims are 64-aligned, and the paper MLP's training
+    # step must land on 22.1 within 1% (asserted inside mlp_report).
+    mlp = hw_report.mlp_report()  # raises if the projection strays ±1%
+    report("table2/model_mlp_train_tops_per_watt",
+           mlp["hardware_tops_per_watt"],
+           "census-driven fwd+bwd+write step on timefloats_mlp; paper 22.1")
+    for arch in ("qwen3-0.6b", "deepseek-v3-671b"):
+        r = hw_report.report_for_arch(arch)
+        tag = arch.replace(".", "p")
+        report(f"table2/model_{tag}_tops_per_watt",
+               r["effective_tops_per_watt"],
+               "per-token forward projection incl. padding waste")

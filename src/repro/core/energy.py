@@ -1,100 +1,31 @@
 """Analytical energy model reproducing Table I / Table II of the paper.
 
-The container is CPU-only, so TimeFloats-chip energy is a *model*, exercised
-by the benchmark harness (benchmarks/table1_energy.py, table2_comparison.py)
-and by the cost projections in EXPERIMENTS.md. Constants are the paper's
-Table I values at 15 nm (see DESIGN.md §1 for the two text/table
-discrepancies — we follow Table I, which is the set consistent with the
-headline 22.1 TOPS/W).
+Thin re-export: the Table I constants and the workload aggregation now
+live in ``repro.hw.energy`` (the digital twin's single source of truth,
+DESIGN.md §6) so the arithmetic-side and hardware-side models can never
+drift. This module keeps the historical public API — import either
+``repro.core.energy`` or ``repro.hw.energy``; they are the same objects.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Dict
+from repro.hw.energy import (  # noqa: F401
+    CHUNK_ELEMS,
+    OPS_PER_CHUNK,
+    TABLE1_PJ,
+    TABLE2_SOTA,
+    EnergyReport,
+    chunk_energy_pj,
+    effective_tops_per_watt,
+    matmul_chunks,
+    matmul_energy_breakdown_pj,
+    matmul_energy_pj,
+    model_energy,
+    tops_per_watt,
+)
 
-# Table I: energy per 64-element FP8 scalar product (one crossbar chunk,
-# one output column), in picojoules.
-TABLE1_PJ: Dict[str, float] = {
-    "exp_add": 1.28,      # mixed-signal exponent adder (Fig 3)
-    "max_detect": 3.25,   # D-FF + MUX tournament tree (Fig 4)
-    "mantissa_scale": 0.023,  # time-domain subtract + right shift (Fig 5)
-    "crossbar_mac": 1.23,  # memristor crossbar (Fig 6)
-    "adc": 0.021,          # shared 4-bit SAR ADC
-}
-
-CHUNK_ELEMS = 64          # crossbar height
-OPS_PER_CHUNK = 2 * CHUNK_ELEMS  # 64 multiplies + 64 accumulates = 128 ops
-
-
-def chunk_energy_pj() -> float:
-    """Total energy of one 64-element FP8 scalar product (paper: 5.8 pJ)."""
-    return sum(TABLE1_PJ.values())
-
-
-def tops_per_watt() -> float:
-    """Paper headline: 128 ops / 5.8 pJ = 22.1 TOPS/W."""
-    return OPS_PER_CHUNK / chunk_energy_pj()  # pJ^-1 == TOPS/W numerically
-
-
-def matmul_energy_pj(m: int, k: int, n: int, block: int = CHUNK_ELEMS) -> float:
-    """Energy of an (M,K)@(K,N) TimeFloats matmul: every output element
-    consumes ceil(K/64) chunk scalar products."""
-    chunks = m * n * math.ceil(k / block)
-    return chunks * chunk_energy_pj()
-
-
-def matmul_energy_breakdown_pj(m: int, k: int, n: int,
-                               block: int = CHUNK_ELEMS) -> Dict[str, float]:
-    chunks = m * n * math.ceil(k / block)
-    return {name: chunks * e for name, e in TABLE1_PJ.items()}
-
-
-def effective_tops_per_watt(m: int, k: int, n: int) -> float:
-    """2MKN useful ops over modeled energy. Equals tops_per_watt() when K is
-    a multiple of 64; degrades with chunk padding waste otherwise."""
-    return (2 * m * k * n) / matmul_energy_pj(m, k, n)
-
-
-# Table II: state-of-the-art MAC macros the paper compares against.
-# (reference tag, technology, domain, input/weight precision, memory, TOPS/W)
-TABLE2_SOTA = [
-    ("Ours (TimeFloats)", "15nm", "Time", "FP8", "FP8", "Memristor", (22.1, 22.1)),
-    ("[10] ISSCC'23 Wu", "22nm", "Hybrid", "BF16", "BF16", "SRAM", (16.22, 17.59)),
-    ("[11] ISSCC'23 Guo", "28nm", "Digital", "BF16/INT8", "BF16/INT8", "SRAM", (19.5, 44.0)),
-    ("[12] ISSCC'22 Wu", "28nm", "Time", "INT8/INT4", "INT8/INT4", "SRAM", (21.10, 27.75)),
-    ("[13] ISSCC'24 Yuan", "28nm", "Hybrid", "BF16/INT8", "BF16/INT8", "SRAM", (22.78, 50.53)),
-    ("[14] JSSC'24 Wu", "22nm", "Hybrid", "BF16", "BF16", "SRAM", (72.12, 72.12)),
-    ("[15] ISSCC'21 Su", "28nm", "Analog", "INT8/INT4", "INT8/INT4", "SRAM", (15.02, 22.75)),
+__all__ = [
+    "CHUNK_ELEMS", "OPS_PER_CHUNK", "TABLE1_PJ", "TABLE2_SOTA",
+    "EnergyReport", "chunk_energy_pj", "effective_tops_per_watt",
+    "matmul_chunks", "matmul_energy_breakdown_pj", "matmul_energy_pj",
+    "model_energy", "tops_per_watt",
 ]
-
-
-@dataclasses.dataclass(frozen=True)
-class EnergyReport:
-    """Projected TimeFloats-chip energy for a model workload."""
-
-    total_pj: float
-    breakdown_pj: Dict[str, float]
-    macs: int
-
-    @property
-    def total_joules(self) -> float:
-        return self.total_pj * 1e-12
-
-    @property
-    def tops_per_watt(self) -> float:
-        return (2 * self.macs) / self.total_pj
-
-
-def model_energy(matmul_shapes: list[tuple[int, int, int]]) -> EnergyReport:
-    """Aggregate energy for a list of (M, K, N) matmuls — e.g. one training
-    step's projections, produced by the model's shape census."""
-    total = 0.0
-    macs = 0
-    breakdown = {k: 0.0 for k in TABLE1_PJ}
-    for m, k, n in matmul_shapes:
-        for name, e in matmul_energy_breakdown_pj(m, k, n).items():
-            breakdown[name] += e
-        total += matmul_energy_pj(m, k, n)
-        macs += m * k * n
-    return EnergyReport(total_pj=total, breakdown_pj=breakdown, macs=macs)

@@ -27,10 +27,11 @@ train/step.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -484,6 +485,7 @@ def _pow2_prescale(a: Array, cfg: TFConfig) -> tuple[Array, Array]:
 
 
 def _scaled_matmul(x: Array, w: Array, cfg: TFConfig) -> Array:
+    _record_op("fwd", x.shape[0], x.shape[1], w.shape[1])
     xs, sx = _pow2_prescale(x, cfg)
     ws, sw = _pow2_prescale(w, cfg)
     return matmul(xs, ws, cfg) / (sx * sw)
@@ -549,6 +551,108 @@ def reset_quant_trace_counts() -> None:
         _QUANT_TRACE_COUNTS[k] = 0
 
 
+# ---------------------------------------------------------------------------
+# Op-level trace census (DESIGN.md §6). Like the prepare_* counters above,
+# records are appended at Python trace time — but each record carries the
+# static matmul shape, a crossbar-access tag, and the execution multiplier
+# accumulated from every enclosing census_scale() context (layer-scan trip
+# counts, the MoE expert vmap and dispatch-chunk scan, grad-accumulation
+# microbatches), so ONE abstract trace of a forward program yields its
+# full crossbar read census:
+#
+#   fwd     — forward read:            y  = x @ W          (ADC digitizes)
+#   bwd_dx  — transposed read:         dx = g @ W^T        (ADC-free, §3)
+#   bwd_dw  — outer-product read:      dW = x^T @ g        (ADC-free, §3)
+#
+# Shapes are the (M, K, N) of the equivalent crossbar matmul with K the
+# contraction dim (so ceil(K/block) is the chunk count per output): bwd_dx
+# is (M, N_fwd, K_fwd) — it contracts over the forward output columns —
+# and bwd_dw is (K_fwd, M_fwd, N_fwd).
+#
+# Only the *primal* paths record (tag "fwd"): capture a census by tracing
+# the forward/loss function WITHOUT differentiation, then synthesize the
+# training tags with backward_census(). Rationale: the primal Python body
+# runs exactly once per call site inside every trace context (verified per
+# family in tests/test_hw.py), whereas JAX's custom_vjp machinery invokes
+# the fwd/bwd rules at mechanism-dependent times — the bwd callback during
+# transposition (outside any census_scale extent), the fwd rule 0–2x
+# depending on scan/vmap nesting — so recording there over- or
+# under-counts. The backward synthesis is structural and exact: the §3
+# custom_vjp performs exactly one transposed dx read and one outer dW read
+# per differentiated linear, with the shapes above.
+# hw/schedule.py turns a census into energy/latency/TOPS-per-W.
+# ---------------------------------------------------------------------------
+
+
+class OpRecord(NamedTuple):
+    """One trace-time crossbar matmul: tag, (M, K, N), static multiplier."""
+
+    tag: str
+    m: int
+    k: int
+    n: int
+    mult: int
+
+
+_OP_CENSUS: Optional[list] = None
+_CENSUS_SCALE: int = 1
+
+
+@contextlib.contextmanager
+def op_census():
+    """Collect OpRecords for everything traced inside the context:
+
+        with op_census() as events:
+            jax.eval_shape(loss_fn, params, batch)   # trace, no FLOPs
+        cost = hw.schedule.census_cost(backward_census(events))
+
+    Trace a FORWARD program (see the header above); expand training
+    censuses with backward_census(). Nested uses stack (each context sees
+    only its own records).
+    """
+    global _OP_CENSUS
+    prev = _OP_CENSUS
+    events: list = []
+    _OP_CENSUS = events
+    try:
+        yield events
+    finally:
+        _OP_CENSUS = prev
+
+
+@contextlib.contextmanager
+def census_scale(n: int):
+    """Multiply the census weight of records traced inside by ``n`` — used
+    around lax.scan calls (the body traces once for ``n`` executions) and
+    the MoE expert vmap. No-ops cheaply when no census is active."""
+    global _CENSUS_SCALE
+    prev = _CENSUS_SCALE
+    _CENSUS_SCALE = prev * int(n)
+    try:
+        yield
+    finally:
+        _CENSUS_SCALE = prev
+
+
+def _record_op(tag: str, m: int, k: int, n: int) -> None:
+    if _OP_CENSUS is not None:
+        _OP_CENSUS.append(OpRecord(tag, int(m), int(k), int(n),
+                                   _CENSUS_SCALE))
+
+
+def backward_census(events) -> list:
+    """Expand a forward census into the full training-step census: every
+    differentiated linear's forward read (M, K, N) is joined by its
+    transposed dx read (M, N, K) and outer dW read (K, M, N) — exactly
+    what the §3 custom_vjp backward executes against the stored planes."""
+    out = list(events)
+    for ev in events:
+        if ev.tag == "fwd":
+            out.append(OpRecord("bwd_dx", ev.m, ev.n, ev.k, ev.mult))
+            out.append(OpRecord("bwd_dw", ev.k, ev.m, ev.n, ev.mult))
+    return out
+
+
 def prepare_input(x2: Array, cfg: TFConfig = DEFAULT) -> PreparedOperand:
     """(M, K) activation -> cache entry (quantized once; read by fwd + dW)."""
     _QUANT_TRACE_COUNTS["prepare_input"] += 1
@@ -571,6 +675,7 @@ def _matmul_prepared(px: PreparedOperand, pw: PreparedOperand, m_dim: int,
                      k_dim: int, n_dim: int, cfg: TFConfig) -> Array:
     """Forward product from cache entries; bit-identical to
     ``matmul(xs, ws, cfg)`` on the prescaled operands in every mode."""
+    _record_op("fwd", m_dim, k_dim, n_dim)
     if cfg.mode == "exact":
         return matmul_exact(px.fq, pw.fq, cfg)
     if cfg.mode == "pallas":
@@ -691,11 +796,11 @@ def linear_cached(x: Array, w: Array, pw: PreparedOperand,
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _linear_cached_p(statics, x, w, pw):
-    y, _ = _linear_cached_p_fwd(statics, x, w, pw)
+    y, _ = _linear_cached_core(statics, x, w, pw)
     return y
 
 
-def _linear_cached_p_fwd(statics, x, w, pw):
+def _linear_cached_core(statics, x, w, pw):
     cfg = statics[0]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
@@ -703,6 +808,10 @@ def _linear_cached_p_fwd(statics, x, w, pw):
     y = _matmul_prepared(px, pw, x2.shape[0], x2.shape[1], w.shape[1],
                          cfg) / (px.scale * pw.scale)
     return y.reshape(*lead, w.shape[-1]), (px, pw)
+
+
+def _linear_cached_p_fwd(statics, x, w, pw):
+    return _linear_cached_core(statics, x, w, pw)
 
 
 def _zero_cotangent(tree):

@@ -1,0 +1,15 @@
+"""repro.hw — the crossbar digital twin (DESIGN.md §6).
+
+Submodules (import them directly; this package init stays dependency-free
+so `core.energy` can re-export `hw.energy` without cycles):
+
+- ``hw.energy``   — Table I per-module energies (the single source of
+                    truth re-exported by ``core.energy``), write-energy and
+                    timing constants, workload energy aggregation.
+- ``hw.arrays``   — crossbar tile geometry / macro inventory.
+- ``hw.mapper``   — weight→tile placement for any pool config, using the
+                    same per-leaf rules as the §3 weight cache.
+- ``hw.schedule`` — read/write scheduler: op-census → energy/latency/
+                    TOPS-per-W projections, per-tile write/endurance
+                    counters, trainer and serving telemetry adapters.
+"""

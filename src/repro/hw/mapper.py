@@ -1,0 +1,218 @@
+"""Weight → crossbar-tile placement (DESIGN.md §6).
+
+The mapper answers "how many crossbar macros does this model need, and how
+well are they filled?". It walks a parameter tree (real arrays, or the
+`ShapeDtypeStruct` tree derived from a `ModelConfig` — no initialization
+needed for trillion-parameter configs) with EXACTLY the per-leaf rules of
+the §3 weight cache (`models/common.leaf_rule_with_reason`), reshapes each
+dense-eligible leaf the way its consumer does —
+
+    dense    — w.reshape(w.shape[0], -1)
+    dense_in — w.reshape(-1, w.shape[-1])
+    expert   — the dense rule per expert, x num_experts copies
+    tied head — the embedding table read transposed (d_model, vocab)
+
+— and covers the resulting 2-D matrix with a grid of `TileGeometry` tiles.
+Scanned layer groups place one copy per layer (the stacked leading dim).
+Everything the cache excludes is reported as *unmapped* with the shared
+reason string, so the placement doubles as an audit of what the chip does
+NOT hold (embeddings, routers, conv kernels, norm vectors).
+
+Conservation invariant (pinned by tests/test_hw.py): for every mapped
+leaf, rows*cols cells are covered exactly once per copy —
+``cells_used == rows * cols`` and ``0 < utilization <= 1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.hw.arrays import DEFAULT_GEOMETRY, TileGeometry
+from repro.models import common
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlacement:
+    """One dense-eligible leaf on the tile inventory.
+
+    rows/cols   — the 2-D matrix shape under the consumer's reshape rule.
+    copies      — structural replicas holding DISTINCT weights: layers in a
+                  scanned group x experts in an MoE stack.
+    tiles_r/c   — tile grid covering one copy.
+    """
+
+    key: str
+    rule: str
+    rows: int
+    cols: int
+    copies: int
+    tiles_r: int
+    tiles_c: int
+    group: Optional[int] = None   # layer-group index (None = unscanned)
+
+    @property
+    def tiles_per_copy(self) -> int:
+        return self.tiles_r * self.tiles_c
+
+    @property
+    def cells_used_per_copy(self) -> int:
+        return self.rows * self.cols
+
+    def tiles(self, geom: TileGeometry) -> int:
+        """Physical tiles including read-bandwidth duplication."""
+        return self.tiles_per_copy * self.copies * geom.duplication
+
+    def cells_alloc_per_copy(self, geom: TileGeometry) -> int:
+        return self.tiles_per_copy * geom.cells_per_tile
+
+    def utilization(self, geom: TileGeometry) -> float:
+        return self.cells_used_per_copy / self.cells_alloc_per_copy(geom)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Full-model placement report."""
+
+    name: str
+    geometry: TileGeometry
+    leaves: Tuple[LeafPlacement, ...]
+    unmapped: Tuple[Tuple[str, str], ...]   # (key, shared exclusion reason)
+
+    @property
+    def tiles(self) -> int:
+        return sum(lp.tiles(self.geometry) for lp in self.leaves)
+
+    @property
+    def macros(self) -> int:
+        return self.geometry.macros_for(self.tiles)
+
+    @property
+    def cells_used(self) -> int:
+        """Weight cells holding distinct parameters (one copy each)."""
+        return sum(lp.cells_used_per_copy * lp.copies for lp in self.leaves)
+
+    @property
+    def cells_written_per_update(self) -> int:
+        """Cells programmed per optimizer step: every placed weight, in
+        every duplicated copy, is rewritten by the in-situ dW update."""
+        return self.cells_used * self.geometry.duplication
+
+    @property
+    def utilization(self) -> float:
+        alloc = sum(lp.cells_alloc_per_copy(self.geometry) * lp.copies
+                    * self.geometry.duplication for lp in self.leaves)
+        return (self.cells_used * self.geometry.duplication / alloc
+                if alloc else 0.0)
+
+    def by_rule(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for lp in self.leaves:
+            out[lp.rule] = out.get(lp.rule, 0) + lp.tiles(self.geometry)
+        return out
+
+
+def _mapped_shape(shape: tuple, rule: str) -> Tuple[int, int, int]:
+    """(rows, cols, copies-from-rule) of one leaf under its reshape rule.
+    For "expert", `shape` is the full (E, ...) stack."""
+    if rule == "dense":
+        return shape[0], math.prod(shape[1:]), 1
+    if rule == "dense_in":
+        return math.prod(shape[:-1]), shape[-1], 1
+    if rule == "expert":
+        e = shape[0]
+        per = shape[1:]
+        return per[0], math.prod(per[1:]), e
+    raise ValueError(rule)
+
+
+def _walk(tree: PyTree, *, slice_lead: bool, group: Optional[int],
+          leaves: List[LeafPlacement], unmapped: List[Tuple[str, str]],
+          geom: TileGeometry) -> None:
+    """Place every leaf of one (sub)tree. ``slice_lead`` marks stacked
+    layer-group trees whose leading dim is the scanned (layers,) axis —
+    the rule applies to the per-layer slice, copies multiply by layers."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if not slice_lead and any("groups" in str(p) for p in path):
+            continue  # handled per group by map_params/map_model
+        key = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        ndim = len(shape) - (1 if slice_lead else 0)
+        rule, reason = common.leaf_rule_with_reason(path, ndim, leaf.dtype)
+        if rule is None:
+            unmapped.append((key, reason))
+            continue
+        layers = shape[0] if slice_lead else 1
+        per_layer = shape[1:] if slice_lead else shape
+        rows, cols, e_copies = _mapped_shape(per_layer, rule)
+        tiles_r, tiles_c = geom.tiles_for(rows, cols)
+        leaves.append(LeafPlacement(
+            key=key, rule=rule, rows=rows, cols=cols,
+            copies=layers * e_copies, tiles_r=tiles_r, tiles_c=tiles_c,
+            group=group))
+
+
+def map_params(params: PyTree, cfg: ModelConfig, *, name: Optional[str] = None,
+               geom: TileGeometry = DEFAULT_GEOMETRY) -> Placement:
+    """Place a model parameter tree (arrays OR ShapeDtypeStructs).
+
+    Mirrors `models/common.build_weight_cache` traversal exactly: unscanned
+    leaves, the tied-embedding transposed head, and the per-group stacked
+    layer leaves (rule applied at per-layer slice ndim).
+    """
+    assert geom.rows == cfg.tf.block, (
+        f"tile height {geom.rows} must equal the alignment block "
+        f"{cfg.tf.block}: one chunk scalar product spans one tile column")
+    leaves: List[LeafPlacement] = []
+    unmapped: List[Tuple[str, str]] = []
+    _walk(params, slice_lead=False, group=None, leaves=leaves,
+          unmapped=unmapped, geom=geom)
+    if (cfg.tie_embeddings and cfg.family != "audio"
+            and isinstance(params, dict) and "embed" in params
+            and len(params["embed"].shape) == 2):
+        # The tied LM head reads the embedding table transposed (d, V);
+        # that read IS a crossbar matmul, so the transposed table is
+        # placed even though gather-read embeddings are excluded.
+        v, d = params["embed"].shape
+        tiles_r, tiles_c = geom.tiles_for(d, v)
+        leaves.append(LeafPlacement(
+            key="['embed']", rule="dense", rows=d, cols=v, copies=1,
+            tiles_r=tiles_r, tiles_c=tiles_c))
+    groups = params.get("groups", ()) if isinstance(params, dict) else ()
+    for gi, g in enumerate(groups):
+        gtree = g.get("params", g) if isinstance(g, dict) else g
+        _walk(gtree, slice_lead=True, group=gi, leaves=leaves,
+              unmapped=unmapped, geom=geom)
+    return Placement(name=name or cfg.name, geometry=geom,
+                     leaves=tuple(leaves), unmapped=tuple(unmapped))
+
+
+def map_model(cfg: ModelConfig, *,
+              geom: TileGeometry = DEFAULT_GEOMETRY) -> Placement:
+    """Shape-only placement of a `ModelConfig` — no parameter allocation,
+    usable on the 1T-param configs."""
+    from repro.models import model as model_lib
+
+    specs = model_lib._strip_kind(model_lib.model_param_specs(cfg))
+    sds = common.spec_shapes(specs)
+    return map_params(sds, cfg, geom=geom)
+
+
+def map_edge_mlp(cfg, *, geom: TileGeometry = DEFAULT_GEOMETRY) -> Placement:
+    """Placement of the paper-scale edge MLP (`configs/timefloats_mlp.py`,
+    an `EdgeMLPConfig`): consecutive dense layers in→hidden…→classes."""
+    assert geom.rows == cfg.tf.block
+    dims = (cfg.in_dim, *cfg.hidden, cfg.n_classes)
+    leaves = []
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        tiles_r, tiles_c = geom.tiles_for(k, n)
+        leaves.append(LeafPlacement(
+            key=f"['w{i + 1}']", rule="dense", rows=k, cols=n, copies=1,
+            tiles_r=tiles_r, tiles_c=tiles_c))
+    return Placement(name=cfg.name, geometry=geom, leaves=tuple(leaves),
+                     unmapped=())

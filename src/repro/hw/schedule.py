@@ -1,0 +1,334 @@
+"""Read/write scheduler and cost model (DESIGN.md §6).
+
+Turns an op-level trace census (`core.timefloats.op_census`) plus a tile
+`Placement` (`hw/mapper.py`) into the digital twin's projections:
+
+- **energy** — forward reads pay the full Table I chunk energy (the SAR
+  ADC digitizes every partial sum); transposed backward reads (`bwd_dx`,
+  `bwd_dw`) are ADC-free (DESIGN.md §3); in-situ dW updates pay
+  ``WRITE_PJ_PER_CELL`` per programmed cell per optimizer step.
+- **latency** — a throughput bound: all placed tiles (× duplication) read
+  one chunk per ``T_CHUNK_READ_NS`` concurrently; writes are row-parallel
+  (one ``T_CELL_WRITE_NS`` pulse per tile row). A real controller adds
+  dependency stalls, so these are lower bounds, reported as such.
+- **TOPS/W** — two figures. ``hardware_tops_per_watt`` counts every chunk
+  at the paper's 128 ops (what the macro *executes*; this is the 22.1
+  headline when K % 64 == 0). ``effective_tops_per_watt`` counts only the
+  2·M·K·N useful MACs, so chunk padding waste shows up as the gap.
+- **endurance** — per-tile write counters: every optimizer step programs
+  every placed cell once (each copy), so tiles age uniformly at one write
+  per step; lifetime = ``ENDURANCE_WRITES`` steps.
+
+`HwMonitor` adapts this for the training loop (energy + cumulative writes
+per step, logged by `train/trainer.run_loop`); `ServeEnergyModel` adapts
+it for `serve/engine.Engine` (per-request pJ/token attribution and
+fleet-style slot-utilization telemetry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+
+from repro.core import timefloats
+from repro.hw import energy as hw_energy
+from repro.hw.arrays import DEFAULT_GEOMETRY, TileGeometry
+from repro.hw.mapper import Placement
+
+TAGS = ("fwd", "bwd_dx", "bwd_dw")
+_ADC_BY_TAG = {"fwd": True, "bwd_dx": False, "bwd_dw": False}
+
+
+@dataclasses.dataclass(frozen=True)
+class CensusCost:
+    """Aggregate crossbar-read cost of one traced program (e.g. one train
+    step or one decode step), weighted by the census multipliers."""
+
+    chunks_by_tag: Dict[str, int]
+    energy_pj_by_tag: Dict[str, float]
+    macs_by_tag: Dict[str, int]
+    n_records: int
+
+    @property
+    def chunks(self) -> int:
+        return sum(self.chunks_by_tag.values())
+
+    @property
+    def energy_pj(self) -> float:
+        return sum(self.energy_pj_by_tag.values())
+
+    @property
+    def macs(self) -> int:
+        return sum(self.macs_by_tag.values())
+
+    @property
+    def hardware_tops_per_watt(self) -> float:
+        """Chunk-throughput ops (128/chunk) per energy — the paper's
+        accounting; 22.1 for pure full-chunk forward reads."""
+        if self.energy_pj == 0:
+            return 0.0
+        return self.chunks * hw_energy.OPS_PER_CHUNK / self.energy_pj
+
+    @property
+    def effective_tops_per_watt(self) -> float:
+        """Useful 2·M·K·N ops per energy (padding waste included)."""
+        return (2 * self.macs / self.energy_pj) if self.energy_pj else 0.0
+
+
+def census_cost(events: Iterable[timefloats.OpRecord],
+                block: int = hw_energy.CHUNK_ELEMS) -> CensusCost:
+    chunks = {t: 0 for t in TAGS}
+    macs = {t: 0 for t in TAGS}
+    n = 0
+    for ev in events:
+        n += 1
+        if ev.tag not in chunks:  # future tags: count conservatively as fwd
+            chunks[ev.tag] = 0
+            macs[ev.tag] = 0
+        chunks[ev.tag] += ev.mult * hw_energy.matmul_chunks(
+            ev.m, ev.k, ev.n, block)
+        macs[ev.tag] += ev.mult * ev.m * ev.k * ev.n
+    e = {t: c * hw_energy.chunk_energy_pj(adc=_ADC_BY_TAG.get(t, True))
+         for t, c in chunks.items()}
+    return CensusCost(chunks_by_tag=chunks, energy_pj_by_tag=e,
+                      macs_by_tag=macs, n_records=n)
+
+
+def capture_census(trace_fn, *args, **kwargs) -> List[timefloats.OpRecord]:
+    """Trace ``trace_fn(*args, **kwargs)`` abstractly (jax.eval_shape — no
+    FLOPs execute) with the op census enabled; returns the records.
+
+    ``trace_fn`` must be a FORWARD program (loss/logits/decode), not a
+    grad: only the primal paths record, exactly once per call site (see
+    the census header in core/timefloats.py). For a training census, pass
+    the loss and expand with ``timefloats.backward_census``.
+    """
+    with timefloats.op_census() as events:
+        jax.eval_shape(trace_fn, *args, **kwargs)
+    return events
+
+
+# ---------------------------------------------------------------------------
+# Step-level schedule: reads + writes against a placement.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSchedule:
+    """Cost of ONE optimizer step (reads from the census, writes from the
+    placement) on the placed tile inventory."""
+
+    read: CensusCost
+    cells_written: int            # per step, incl. duplicated copies
+    write_energy_pj: float
+    read_latency_ns: float        # throughput lower bound over all tiles
+    write_latency_ns: float       # row-parallel program pulses
+    tiles: int
+
+    @property
+    def energy_pj(self) -> float:
+        return self.read.energy_pj + self.write_energy_pj
+
+    @property
+    def latency_ns(self) -> float:
+        return self.read_latency_ns + self.write_latency_ns
+
+
+def schedule_step(placement: Placement, events, *,
+                  train: bool = True) -> StepSchedule:
+    """Schedule one step's census onto the placement. ``train=False``
+    (serving) books no writes — inference never programs the arrays."""
+    geom = placement.geometry
+    read = census_cost(events, block=geom.rows)
+    tiles = max(placement.tiles, 1)
+    read_lat = read.chunks / tiles * hw_energy.T_CHUNK_READ_NS
+    if train:
+        cells = placement.cells_written_per_update
+        # Row-parallel programming: each tile writes its rows sequentially,
+        # all tiles in parallel -> geom.rows pulses per full rewrite.
+        write_lat = geom.rows * hw_energy.T_CELL_WRITE_NS
+    else:
+        cells, write_lat = 0, 0.0
+    return StepSchedule(
+        read=read, cells_written=cells,
+        write_energy_pj=cells * hw_energy.WRITE_PJ_PER_CELL,
+        read_latency_ns=read_lat, write_latency_ns=write_lat,
+        tiles=placement.tiles)
+
+
+# ---------------------------------------------------------------------------
+# Trainer telemetry.
+# ---------------------------------------------------------------------------
+
+
+class HwMonitor:
+    """Digital-twin telemetry for the training loop.
+
+    Built once per run from the jitted step's trace census and the model's
+    placement (static shapes ⇒ every step costs the same); `on_step()`
+    accumulates and returns the metrics `train/trainer.run_loop` merges
+    into its logging stream.
+    """
+
+    def __init__(self, placement: Placement, events):
+        self.placement = placement
+        self.step_schedule = schedule_step(placement, events, train=True)
+        self.steps = 0
+        # Per-tile write counter: the in-situ update rewrites every placed
+        # cell each step, so every tile takes exactly one full-array write
+        # per step (uniform aging — the twin has no wear-leveling to model).
+        self.writes_per_tile = 0
+
+    @classmethod
+    def for_training(cls, params, batch, model_cfg, *,
+                     geom: TileGeometry = DEFAULT_GEOMETRY) -> "HwMonitor":
+        """Build from one abstract trace of the loss on a full step's
+        batch. The forward census is expanded with the structural backward
+        (one transposed dx + one outer dW read per linear); per-step read
+        totals are set by the step's token count, so grad-accumulation
+        microbatching does not change them."""
+        from repro.hw.mapper import map_params
+        from repro.models import model as model_lib
+
+        placement = map_params(params, model_cfg, geom=geom)
+        events = capture_census(
+            lambda p, b: model_lib.loss_fn(p, b, model_cfg), params, batch)
+        return cls(placement, timefloats.backward_census(events))
+
+    def resume_at(self, step: int) -> None:
+        """Fast-forward the wear/energy books to an absolute step count —
+        called by the training loop after a checkpoint restore, so the
+        cumulative writes/endurance reflect every step the modeled arrays
+        were actually programmed, not just this process's."""
+        self.steps = max(self.steps, int(step))
+        self.writes_per_tile = max(self.writes_per_tile, int(step))
+
+    def on_step(self) -> Dict[str, float]:
+        self.steps += 1
+        self.writes_per_tile += 1
+        s = self.step_schedule
+        return {
+            "hw_step_energy_uj": s.energy_pj * 1e-6,
+            "hw_step_read_uj": s.read.energy_pj * 1e-6,
+            "hw_step_write_uj": s.write_energy_pj * 1e-6,
+            "hw_cum_energy_mj": self.steps * s.energy_pj * 1e-9,
+            "hw_cum_cell_writes": float(self.steps * s.cells_written),
+            "hw_writes_per_tile": float(self.writes_per_tile),
+            "hw_endurance_frac": (self.writes_per_tile
+                                  / hw_energy.ENDURANCE_WRITES),
+            "hw_tops_per_watt": s.read.hardware_tops_per_watt,
+        }
+
+    def summary(self) -> Dict[str, float]:
+        s = self.step_schedule
+        return {
+            "steps": self.steps,
+            "tiles": self.placement.tiles,
+            "macros": self.placement.macros,
+            "utilization": self.placement.utilization,
+            "total_energy_j": self.steps * s.energy_pj * 1e-12,
+            "total_cell_writes": self.steps * s.cells_written,
+            "writes_per_tile": self.writes_per_tile,
+            "endurance_frac": (self.writes_per_tile
+                               / hw_energy.ENDURANCE_WRITES),
+            "step_latency_us_lower_bound": s.latency_ns * 1e-3,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Serving telemetry.
+# ---------------------------------------------------------------------------
+
+
+class ServeEnergyModel:
+    """Per-request crossbar-energy attribution for `serve/engine.Engine`.
+
+    Reads only (serving never writes the arrays). The decode batch runs
+    all `slots` rows through every projection whether or not a slot holds
+    a request, and the census energy of a dense-family decode step is
+    exactly linear in the batch dim — so the per-slot decode cost is
+    ``cost(slots) / slots`` and attribution is additive and independent of
+    which slot a request landed in (pinned by tests/test_serve.py). The
+    idle-slot remainder is NOT attributed to any request; it surfaces as
+    the engine's slot-utilization telemetry instead. MoE capacity padding
+    makes the per-slot share approximate for MoE families (documented in
+    DESIGN.md §6).
+    """
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.decode_step_pj: Optional[float] = None   # full-batch decode
+        self._prefill_pj: Dict[int, float] = {}       # prompt len -> pJ
+        self.attributed_pj = 0.0
+        self.total_pj = 0.0
+        self.decode_steps = 0
+        self.active_slot_steps = 0
+
+    # -- census capture (engine calls these with its jitted fns) ----------
+    def observe_decode(self, decode_fn, params, cache, tokens) -> None:
+        if self.decode_step_pj is None:
+            ev = capture_census(decode_fn, params, cache, tokens)
+            self.decode_step_pj = census_cost(ev).energy_pj
+
+    def prefill_pj(self, prefill_fn, params, cache, batch, length: int
+                   ) -> float:
+        if length not in self._prefill_pj:
+            ev = capture_census(prefill_fn, params, cache, batch)
+            self._prefill_pj[length] = census_cost(ev).energy_pj
+        return self._prefill_pj[length]
+
+    # -- accounting -------------------------------------------------------
+    @property
+    def decode_pj_per_slot(self) -> float:
+        return (self.decode_step_pj or 0.0) / self.slots
+
+    def on_prefill(self, pj: float) -> float:
+        self.attributed_pj += pj
+        self.total_pj += pj
+        return pj
+
+    def on_decode_step(self, active_slots: int) -> float:
+        """Book one full-batch decode; returns the per-active-slot share."""
+        self.decode_steps += 1
+        self.active_slot_steps += active_slots
+        self.total_pj += self.decode_step_pj or 0.0
+        share = self.decode_pj_per_slot
+        self.attributed_pj += share * active_slots
+        return share
+
+    def telemetry(self) -> Dict[str, float]:
+        return {
+            "attributed_pj": self.attributed_pj,
+            "total_pj": self.total_pj,
+            "idle_pj": self.total_pj - self.attributed_pj,
+            "decode_steps": float(self.decode_steps),
+            "slot_utilization": (self.active_slot_steps
+                                 / (self.decode_steps * self.slots)
+                                 if self.decode_steps else 0.0),
+            "decode_pj_per_token": self.decode_pj_per_slot,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Shape-only projections (no tracing) — used by launch/hw_report.py for
+# configs too large to trace on this container.
+# ---------------------------------------------------------------------------
+
+
+def per_token_forward_cost(placement: Placement,
+                           cfg: Optional[Any] = None) -> CensusCost:
+    """Analytic forward-read census for ONE token through every placed
+    array: each copy of each leaf is one (1, rows, cols) read, except MoE
+    expert stacks where a token reads only its routed top_k experts (per
+    layer), and shared experts/dense leaves read every copy."""
+    top_k = num_experts = None
+    if cfg is not None and getattr(cfg, "moe", None) is not None:
+        top_k, num_experts = cfg.moe.top_k, cfg.moe.num_experts
+    events = []
+    for lp in placement.leaves:
+        copies = lp.copies
+        if lp.rule == "expert" and top_k is not None:
+            copies = max(copies // num_experts, 1) * top_k  # layers x top_k
+        events.append(timefloats.OpRecord("fwd", 1, lp.rows, lp.cols, copies))
+    return census_cost(events, block=placement.geometry.rows)

@@ -1,0 +1,196 @@
+"""Fleet hardware report: crossbar sizing + energy for every config.
+
+    PYTHONPATH=src python -m repro.launch.hw_report              # all configs
+    PYTHONPATH=src python -m repro.launch.hw_report --arch qwen3-0.6b
+    PYTHONPATH=src python -m repro.launch.hw_report --smoke      # CI gate
+    PYTHONPATH=src python -m repro.launch.hw_report --json out.json
+
+For each architecture in the pool the report is shape-only (the mapper
+walks the `ParamSpec` tree — no parameter allocation, so the 1T-param
+configs take milliseconds): tiles/macros/utilization of the placement,
+what stays off-chip and why, and the per-token forward-read projection
+(pJ/token, effective TOPS/W including chunk-padding waste; MoE counts the
+routed top_k experts only). The paper-scale `timefloats_mlp` config
+additionally gets a census-driven train-step projection whose
+hardware-throughput TOPS/W must reproduce the paper's 22.1 headline within
+1% — checked on EVERY run (this is the acceptance gate `--smoke` exists
+for; smoke mode only trims the per-leaf detail output).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+
+def _check_placement(pl) -> None:
+    """The mapper's invariants (also pinned by tests/test_hw.py)."""
+    assert pl.leaves, f"{pl.name}: nothing mapped"
+    for lp in pl.leaves:
+        assert lp.cells_used_per_copy == lp.rows * lp.cols
+        u = lp.utilization(pl.geometry)
+        assert 0.0 < u <= 1.0, (pl.name, lp.key, u)
+    assert 0.0 < pl.utilization <= 1.0, (pl.name, pl.utilization)
+
+
+def report_for_arch(arch: str, geom=None) -> Dict[str, Any]:
+    import jax  # noqa: F401  (defer heavy imports until needed)
+
+    from repro.configs import get_config
+    from repro.hw import schedule as sched
+    from repro.hw.arrays import DEFAULT_GEOMETRY
+    from repro.hw.mapper import map_model
+
+    geom = geom or DEFAULT_GEOMETRY
+    cfg = get_config(arch)
+    pl = map_model(cfg, geom=geom)
+    _check_placement(pl)
+    tok = sched.per_token_forward_cost(pl, cfg)
+    return {
+        "arch": arch,
+        "tiles": pl.tiles,
+        "macros": pl.macros,
+        "utilization": pl.utilization,
+        "mapped_params": pl.cells_used,
+        "unmapped_leaves": len(pl.unmapped),
+        "unmapped": [list(u) for u in pl.unmapped],
+        "cells_written_per_update": pl.cells_written_per_update,
+        "token_fwd_pj": tok.energy_pj,
+        "token_fwd_uj": tok.energy_pj * 1e-6,
+        "effective_tops_per_watt": tok.effective_tops_per_watt,
+        "hardware_tops_per_watt": tok.hardware_tops_per_watt,
+        "tiles_by_rule": pl.by_rule(),
+    }
+
+
+def mlp_report(geom=None) -> Dict[str, Any]:
+    """Census-driven projection of the paper-scale edge MLP training step:
+    forward reads + structural backward (transposed dx, outer dW) + the
+    in-situ write cost. Validates the 22.1 TOPS/W headline."""
+    import jax
+
+    from repro.configs.timefloats_mlp import CONFIG as mlp_cfg
+    from repro.core import timefloats as tf
+    from repro.hw import energy as hw_energy
+    from repro.hw import schedule as sched
+    from repro.hw.arrays import DEFAULT_GEOMETRY
+    from repro.hw.mapper import map_edge_mlp
+
+    geom = geom or DEFAULT_GEOMETRY
+    pl = map_edge_mlp(mlp_cfg, geom=geom)
+    _check_placement(pl)
+    dims = (mlp_cfg.in_dim, *mlp_cfg.hidden, mlp_cfg.n_classes)
+
+    def fwd(ws, x):
+        h = x
+        for i in range(len(ws)):
+            h = tf.linear(h, ws[i], mlp_cfg.tf)
+        return h
+
+    ws = [jax.ShapeDtypeStruct((k, n), "float32")
+          for k, n in zip(dims[:-1], dims[1:])]
+    x = jax.ShapeDtypeStruct((mlp_cfg.batch, mlp_cfg.in_dim), "float32")
+    events = tf.backward_census(sched.capture_census(fwd, ws, x))
+    step = sched.schedule_step(pl, events, train=True)
+    tok = sched.per_token_forward_cost(pl)
+    tops = step.read.hardware_tops_per_watt
+    assert abs(tops - 22.1) / 22.1 < 0.01, (
+        f"timefloats_mlp census projects {tops:.3f} TOPS/W; "
+        "paper headline is 22.1 (±1%)")
+    return {
+        "arch": mlp_cfg.name,
+        "tiles": pl.tiles,
+        "macros": pl.macros,
+        "utilization": pl.utilization,
+        "mapped_params": pl.cells_used,
+        "unmapped_leaves": 0,
+        "hardware_tops_per_watt": tops,
+        "effective_tops_per_watt": step.read.effective_tops_per_watt,
+        "token_fwd_pj": tok.energy_pj,
+        "step_energy_uj": step.energy_pj * 1e-6,
+        "step_read_uj": step.read.energy_pj * 1e-6,
+        "step_write_uj": step.write_energy_pj * 1e-6,
+        "cells_written_per_update": step.cells_written,
+        "step_latency_us_lower_bound": step.latency_ns * 1e-3,
+        "endurance_steps": int(hw_energy.ENDURANCE_WRITES),
+    }
+
+
+def fleet_report(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
+    tiles = sum(r["tiles"] for r in rows)
+    # utilization weighted by tiles (every tile has the same cell count)
+    util = (sum(r["utilization"] * r["tiles"] for r in rows) / tiles
+            if tiles else 0.0)
+    return {
+        "configs": len(rows),
+        "tiles": tiles,
+        "macros": sum(r["macros"] for r in rows),
+        "mean_utilization": util,
+        "mapped_params": sum(r["mapped_params"] for r in rows),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="single architecture (default: the whole pool)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: all configs, terse output, hard asserts")
+    ap.add_argument("--json", default=None, help="write the report as JSON")
+    ap.add_argument("--duplication", type=int, default=1,
+                    help="read-bandwidth copies of every placement")
+    ap.add_argument("--tile-cols", type=int, default=128)
+    ap.add_argument("--tiles-per-macro", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCHS
+    from repro.hw.arrays import TileGeometry
+
+    geom = TileGeometry(cols=args.tile_cols,
+                        tiles_per_macro=args.tiles_per_macro,
+                        duplication=args.duplication)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    rows = []
+    for arch in archs:
+        rows.append(report_for_arch(arch, geom))
+    rows.append(mlp_report(geom))
+
+    hdr = (f"{'config':22s} {'tiles':>12s} {'macros':>10s} {'util':>6s} "
+           f"{'params':>14s} {'off-chip':>8s} {'pJ/tok fwd':>12s} "
+           f"{'TOPS/W eff':>10s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:22s} {r['tiles']:>12,d} {r['macros']:>10,d} "
+              f"{r['utilization']:>6.1%} {r['mapped_params']:>14,d} "
+              f"{r['unmapped_leaves']:>8d} "
+              f"{r.get('token_fwd_pj', float('nan')):>12,.0f} "
+              f"{r['effective_tops_per_watt']:>10.2f}")
+    mlp = rows[-1]
+    print(f"\ntimefloats_mlp train-step projection: "
+          f"{mlp['hardware_tops_per_watt']:.2f} TOPS/W "
+          f"(paper 22.1, ±1% checked), {mlp['step_energy_uj']:.2f} uJ/step "
+          f"({mlp['step_write_uj']:.3f} uJ writes), "
+          f"{mlp['cells_written_per_update']:,d} cell writes/step")
+    fleet = fleet_report(rows)
+    print(f"fleet: {fleet['configs']} configs, {fleet['tiles']:,d} tiles / "
+          f"{fleet['macros']:,d} macros, mean util "
+          f"{fleet['mean_utilization']:.1%}, "
+          f"{fleet['mapped_params']:,d} mapped params")
+    if not args.smoke:
+        for r in rows:
+            if r.get("unmapped"):
+                print(f"\n{r['arch']} off-chip leaves:")
+                for key, reason in r["unmapped"]:
+                    print(f"  {key}: {reason}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "fleet": fleet}, f, indent=1)
+        print(f"wrote {args.json}")
+    print("hw_report OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -55,6 +55,13 @@ def main(argv=None):
     new_tokens = sum(len(f.tokens) for f in done)
     print(f"served {len(done)}/{args.requests} requests, {new_tokens} tokens "
           f"in {dt:.1f}s ({new_tokens / max(dt, 1e-9):.1f} tok/s)")
+    hw = eng.hw_telemetry()
+    if hw is not None:  # §6 twin: projected crossbar energy + utilization
+        per_tok = [f.pj_per_token for f in done]
+        p50 = f"{float(np.median(per_tok)):.0f}" if per_tok else "n/a"
+        print(f"hw twin: {hw['total_pj'] / 1e6:.2f} uJ total "
+              f"({hw['idle_pj'] / 1e6:.2f} uJ idle), slot utilization "
+              f"{hw['slot_utilization']:.1%}, pJ/token p50 {p50}")
     return 0 if len(done) == args.requests else 1
 
 

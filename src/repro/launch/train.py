@@ -105,19 +105,39 @@ def main(argv=None):
     jitted = jax.jit(fn, in_shardings=(s_shard, b_shard),
                      donate_argnums=(0,))
 
+    # Digital-twin telemetry (DESIGN.md §6): placement + trace census once,
+    # then per-step energy/write counters ride the metrics stream.
+    hw_monitor = None
+    if args.quant == "timefloats":
+        from repro.hw.schedule import HwMonitor
+
+        hw_monitor = HwMonitor.for_training(state.params, b0, cfg)
+        pl = hw_monitor.placement
+        print(f"hw twin: {pl.tiles} tiles / {pl.macros} macros "
+              f"(util {pl.utilization:.1%}), "
+              f"{hw_monitor.step_schedule.energy_pj / 1e6:.2f} uJ/step, "
+              f"{hw_monitor.step_schedule.cells_written} cell writes/step")
+
     def on_metrics(step, m):
+        hw = (f" hw {m['hw_step_energy_uj']:.2f}uJ"
+              if "hw_step_energy_uj" in m else "")
         print(f"step {step:5d} loss {m['loss']:.4f} gnorm "
-              f"{m['grad_norm']:.2f}", flush=True)
+              f"{m['grad_norm']:.2f}{hw}", flush=True)
 
     loop = LoopConfig(total_steps=args.steps, log_every=args.log_every,
                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
     with mesh:
         state, report = run_loop(state, jitted, pipe.batch_at, loop,
                                  restore_shardings=s_shard,
-                                 on_metrics=on_metrics)
+                                 on_metrics=on_metrics,
+                                 hw_monitor=hw_monitor)
     print(f"done: steps={report.steps_run} resumed_from="
           f"{report.resumed_from} stragglers={report.straggler_events} "
           f"final_loss={report.losses[-1]:.4f}")
+    if report.hw is not None:
+        print(f"hw twin totals: {report.hw['total_energy_j']:.3e} J, "
+              f"{report.hw['total_cell_writes']:.3g} cell writes, "
+              f"endurance used {report.hw['endurance_frac']:.2e}")
     return 0
 
 

@@ -135,21 +135,34 @@ def _leaf_name(path) -> str:
     return ""
 
 
-def _leaf_rule(path, ndim: int, dtype) -> Optional[str]:
-    """Preparation rule for a leaf consumed at `ndim` dims (the per-layer
-    slice ndim for stacked group leaves), or None if not dense-eligible."""
-    if ndim < 2 or not jnp.issubdtype(dtype, jnp.floating):
-        return None
+def leaf_rule_with_reason(path, ndim: int, dtype) -> tuple:
+    """(rule, reason) for a leaf consumed at `ndim` dims (the per-layer
+    slice ndim for stacked group leaves). ``rule`` is one of
+    "dense"/"dense_in"/"expert" or None when the leaf is not
+    dense-eligible, in which case ``reason`` says why — shared between the
+    §3 weight cache and the §6 crossbar mapper so the two can never
+    disagree about what lives in the arrays."""
+    if ndim < 2:
+        return None, "sub-2D (bias/scale vectors are digital)"
+    if not jnp.issubdtype(dtype, jnp.floating):
+        return None, "non-float"
     name = _leaf_name(path)
     if any(t in name for t in ("embed", "meta")):
-        return None
-    if name == "router" or name.startswith("conv"):
-        return None
+        return None, "embedding/meta table (gather-read, not a matmul)"
+    if name == "router":
+        return None, "f32 MoE router (precision-critical plain matmul)"
+    if name.startswith("conv"):
+        return None, "depthwise conv kernel (not a dense() operand)"
     if name in _EXPERT_LEAVES and ndim == 3:
-        return "expert"
+        return "expert", ""
     if name in _DENSE_IN_LEAVES:
-        return "dense_in"
-    return "dense"
+        return "dense_in", ""
+    return "dense", ""
+
+
+def _leaf_rule(path, ndim: int, dtype) -> Optional[str]:
+    """Preparation rule for a leaf (None if not dense-eligible)."""
+    return leaf_rule_with_reason(path, ndim, dtype)[0]
 
 
 def _prepare_by_rule(leaf: Array, rule: str, cfg: ModelConfig

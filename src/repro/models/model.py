@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import timefloats
 from repro.models import attention as attn_mod
 from repro.models import hybrid as hybrid_mod
 from repro.models import mla as mla_mod
@@ -269,7 +270,7 @@ def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
     group_meta = layer_groups(cfg)
     aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_ZERO}
     new_caches = []
-    for gi, (kind, _count) in enumerate(group_meta):
+    for gi, (kind, count) in enumerate(group_meta):
         gparams = params["groups"][gi]["params"]
         gcache = caches[gi] if caches is not None else None
         # Stacked weight cache (DESIGN.md §3): when a step-level
@@ -302,8 +303,11 @@ def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
                       if cfg.remat == "dots" else None)
             body = jax.checkpoint(body, policy=policy,
                                   prevent_cse=False)
-        (x, aux_tot), nc = jax.lax.scan(body, (x, aux_tot),
-                                        (gparams, gcache, gprep))
+        # Op-census weighting (DESIGN.md §6): the scan body traces once for
+        # `count` layer executions.
+        with timefloats.census_scale(count):
+            (x, aux_tot), nc = jax.lax.scan(body, (x, aux_tot),
+                                            (gparams, gcache, gprep))
         new_caches.append(nc)
     return x, aux_tot, (new_caches if caches is not None else None)
 

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import timefloats
 from repro.models.common import ParamSpec, cached_weight, expert_mlp_apply
 from repro.parallel.sharding import constrain
 
@@ -111,7 +112,8 @@ def moe_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig
             yi, auxi = _moe_tokens(params, xi, cfg)
             return None, (yi, auxi)
 
-        _, (yc, auxc) = jax.lax.scan(body, None, xc)
+        with timefloats.census_scale(t // ck):  # §6 op-census weighting
+            _, (yc, auxc) = jax.lax.scan(body, None, xc)
         aux = {k: jnp.mean(v) for k, v in auxc.items()}
         y = yc.reshape(t, d)
         return y.reshape(b, s, d).astype(cfg.activation_dtype), aux
@@ -148,14 +150,18 @@ def _moe_tokens(params: Dict[str, Array], xf: Array, cfg: ModelConfig
     # batch tracers, so the entries are looked up HERE and vmapped in
     # alongside the weights (each expert's crossbar codes ride with it).
     pws = tuple(cached_weight(params[k]) for k in ("wg", "wu", "wd"))
-    if all(p is not None for p in pws):
-        ye = jax.vmap(
-            lambda wg, wu, wd, pg, pu, pd, xi: expert_mlp_apply(
-                wg, wu, wd, xi, cfg, pws=(pg, pu, pd))
-        )(params["wg"], params["wu"], params["wd"], *pws, xe)
-    else:
-        ye = jax.vmap(lambda wg, wu, wd, xi: expert_mlp_apply(
-            wg, wu, wd, xi, cfg))(params["wg"], params["wu"], params["wd"], xe)
+    # §6 op-census weighting: the vmapped expert body traces once with
+    # per-expert shapes; every expert's crossbars run it.
+    with timefloats.census_scale(mo.num_experts):
+        if all(p is not None for p in pws):
+            ye = jax.vmap(
+                lambda wg, wu, wd, pg, pu, pd, xi: expert_mlp_apply(
+                    wg, wu, wd, xi, cfg, pws=(pg, pu, pd))
+            )(params["wg"], params["wu"], params["wd"], *pws, xe)
+        else:
+            ye = jax.vmap(lambda wg, wu, wd, xi: expert_mlp_apply(
+                wg, wu, wd, xi, cfg))(params["wg"], params["wu"],
+                                      params["wd"], xe)
     if mo.ep_mode == "constrained":
         ye = constrain(ye, ("experts", None, None))
 

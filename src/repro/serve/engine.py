@@ -7,6 +7,14 @@ each `step()` — the standard TPU serving shape (decode batch is the unit of
 work; finished slots are recycled without disturbing others).
 
 Sampling: greedy or temperature. Stop: EOS token or per-request max tokens.
+
+Energy telemetry (DESIGN.md §6): with TimeFloats quantization on, the
+engine books projected crossbar read energy per request — prefill at the
+request's prompt length plus a per-slot share of every decode step it was
+active for — via `hw.schedule.ServeEnergyModel` (one abstract trace per
+distinct shape, no per-step overhead). `Finished` carries the totals;
+`Engine.hw_telemetry()` reports fleet-style aggregates including the
+idle-slot energy and slot utilization.
 """
 from __future__ import annotations
 
@@ -30,18 +38,21 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     generated: List[int] = dataclasses.field(default_factory=list)
+    energy_pj: float = 0.0        # attributed crossbar read energy
 
 
 @dataclasses.dataclass
 class Finished:
     uid: int
     tokens: np.ndarray
+    energy_pj: float = 0.0        # prefill + attributed decode shares
+    pj_per_token: float = 0.0     # energy / (prompt + generated tokens)
 
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, track_energy: bool = True):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -59,6 +70,11 @@ class Engine:
             lambda p, c, t: model_lib.decode_step(p, c, t, cfg))
         self._prefill1 = jax.jit(
             lambda p, c, b: model_lib.prefill(p, b, cfg, c))
+        self._hw = None
+        if track_energy and cfg.quant == "timefloats":
+            from repro.hw.schedule import ServeEnergyModel
+
+            self._hw = ServeEnergyModel(slots)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
@@ -77,6 +93,9 @@ class Engine:
             batch["patches"] = jnp.zeros(
                 (1, self.cfg.num_prefix_tokens, self.cfg.d_model),
                 jnp.bfloat16)
+        if self._hw is not None:
+            req.energy_pj += self._hw.on_prefill(self._hw.prefill_pj(
+                self._prefill1, self.params, one_cache, batch, s))
         logits, one_cache = self._prefill1(self.params, one_cache, batch)
 
         def splice(full, one):
@@ -106,8 +125,14 @@ class Engine:
         if not self.active:
             return []
         # 2) one decode step for every slot
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(self.last_token))
+        tokens = jnp.asarray(self.last_token)
+        if self._hw is not None:
+            self._hw.observe_decode(self._decode, self.params, self.cache,
+                                    tokens)
+            share = self._hw.on_decode_step(len(self.active))
+            for req in self.active.values():
+                req.energy_pj += share
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
         logits = logits[:, 0]  # (slots, [K,] V)
         finished: List[Finished] = []
         for slot, req in list(self.active.items()):
@@ -125,10 +150,19 @@ class Engine:
                     or (self.eos_id is not None and first == self.eos_id)
                     or int(self.cache.lengths[slot]) >= self.max_len - 1)
             if done:
-                finished.append(Finished(uid=req.uid,
-                                         tokens=np.asarray(req.generated)))
+                n_tok = len(req.prompt) + len(req.generated)
+                finished.append(Finished(
+                    uid=req.uid, tokens=np.asarray(req.generated),
+                    energy_pj=req.energy_pj,
+                    pj_per_token=req.energy_pj / max(n_tok, 1)))
                 del self.active[slot]
         return finished
+
+    def hw_telemetry(self) -> Optional[Dict[str, float]]:
+        """Fleet-style energy/utilization aggregates (None when the twin is
+        off): attributed vs total crossbar energy, the idle-slot remainder,
+        and decode slot utilization."""
+        return self._hw.telemetry() if self._hw is not None else None
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Finished]:
         out: List[Finished] = []

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import timefloats
 from repro.models import common, model as model_lib
 from repro.optim.optimizers import (OptimizerConfig, clip_by_global_norm,
                                     make_optimizer)
@@ -130,7 +131,8 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
                         for k in msum}
                 return (gsum, msum), None
 
-            (gsum, msum), _ = jax.lax.scan(body, (g0, m0), micro)
+            with timefloats.census_scale(a):  # §6: body trace = a microbatches
+                (gsum, msum), _ = jax.lax.scan(body, (g0, m0), micro)
             grads = jax.tree.map(lambda g: (g / a).astype(jnp.float32), gsum)
             metrics = {k: v / a for k, v in msum.items()}
             metrics["tokens"] = msum["tokens"]

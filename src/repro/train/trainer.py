@@ -7,7 +7,12 @@
   single-controller analogue of straggler mitigation (on a real multi-host
   deployment the same hook would trigger the backup-worker/elastic-restart
   path, see DESIGN.md §5);
-- deterministic data: batch = f(seed, step), so restarts are bit-identical.
+- deterministic data: batch = f(seed, step), so restarts are bit-identical;
+- digital-twin telemetry (DESIGN.md §6): pass ``hw_monitor`` (an
+  `hw.schedule.HwMonitor`, built from the step's trace census and the
+  model's crossbar placement) and every logged step carries projected
+  crossbar energy, cumulative in-situ cell writes and per-tile endurance;
+  the loop report gains the run totals.
 """
 from __future__ import annotations
 
@@ -43,6 +48,7 @@ class LoopReport:
     losses: List[float]
     straggler_events: int
     resumed_from: Optional[int]
+    hw: Optional[Dict[str, float]] = None   # HwMonitor.summary() totals
 
 
 def run_loop(
@@ -53,6 +59,7 @@ def run_loop(
     *,
     restore_shardings: Optional[PyTree] = None,
     on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    hw_monitor: Optional[Any] = None,
 ) -> tuple[TrainState, LoopReport]:
     mgr = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
            if cfg.ckpt_dir else None)
@@ -67,6 +74,10 @@ def run_loop(
     durations: List[float] = []
     stragglers = 0
     start = int(state.step)
+    if hw_monitor is not None and start:
+        # Resumed run: the modeled arrays were already programmed `start`
+        # times — fast-forward the wear/energy books.
+        hw_monitor.resume_at(start)
     for step in range(start, cfg.total_steps):
         batch = batch_fn(step)
         t0 = time.monotonic()
@@ -74,6 +85,9 @@ def run_loop(
         loss = float(metrics["loss"])  # blocks; acceptable at loop cadence
         dt = time.monotonic() - t0
         losses.append(loss)
+        if hw_monitor is not None:  # §6 twin: energy + write telemetry
+            metrics = dict(metrics)
+            metrics.update(hw_monitor.on_step())
 
         if len(durations) >= cfg.min_median_window:
             med = statistics.median(durations)
@@ -96,4 +110,6 @@ def run_loop(
     return state, LoopReport(steps_run=cfg.total_steps - start,
                              final_step=int(state.step), losses=losses,
                              straggler_events=stragglers,
-                             resumed_from=resumed_from)
+                             resumed_from=resumed_from,
+                             hw=(hw_monitor.summary()
+                                 if hw_monitor is not None else None))
