@@ -18,8 +18,8 @@ import time
 import traceback
 
 from benchmarks import (ablation_formats, fig3_linearity, fig7_variability,
-                        hw_projection, kernel_bench, roofline, table1_energy,
-                        table2_comparison)
+                        hw_projection, kernel_bench, roofline, serve_bench,
+                        table1_energy, table2_comparison)
 
 MODULES = {
     "table1": table1_energy,
@@ -30,6 +30,7 @@ MODULES = {
     "formats": ablation_formats,
     "roofline": roofline,
     "hw": hw_projection,
+    "serve": serve_bench,
 }
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernel.json")
@@ -44,6 +45,8 @@ SUMMARY_KEYS = (
     "hw/mlp_hardware_tops_per_watt",
     "hw/mlp_step_energy_uj",
     "hw/qwen3-0p6b_token_fwd_uj",
+    "serve/fused_tok_per_s",
+    "serve/speedup_x",
 )
 
 

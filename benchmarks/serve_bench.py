@@ -1,0 +1,130 @@
+"""Serving-engine benchmark: legacy host-driven path vs the fused
+device-resident engine (DESIGN.md §7) on the same synthetic mixed-length
+request stream (reduced config).
+
+Measures a full drain wall-clock — including compiles, because the legacy
+engine's per-prompt-length prefill recompiles ARE its serving cost — plus
+step counts, recompile counts, and the §6 twin's pJ/token attribution.
+Writes ``BENCH_serve.json`` next to ``BENCH_kernel.json`` so the serving
+trajectory is tracked across PRs; also registered as the ``serve`` module
+of ``benchmarks/run.py``.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+SLOTS = 4
+MAX_LEN = 128
+N_REQUESTS = 24
+MAX_NEW = 16
+
+
+def _requests(cfg, seed=0):
+    import numpy as np
+
+    from repro.serve.request import Request
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for uid in range(N_REQUESTS):
+        # Mixed traffic: many distinct prompt lengths across the 8/16/32/64
+        # buckets — the legacy engine recompiles prefill for each distinct
+        # length, the fused engine once per bucket.
+        plen = int(rng.integers(4, 64))
+        out.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=MAX_NEW))
+    return out
+
+
+def _drain(make_engine, cfg):
+    from repro.serve.request import percentile as _pct
+    eng = make_engine()
+    for r in _requests(cfg):
+        eng.submit(dataclasses.replace(r, generated=[]))
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    assert len(done) == N_REQUESTS
+    new_tokens = sum(len(f.tokens) for f in done)
+    traces = eng.compile_cache_stats()
+    return {
+        "wall_s": dt,
+        "tok_per_s": new_tokens / max(dt, 1e-9),
+        "new_tokens": new_tokens,
+        "steps": int(getattr(eng, "steps", 0)),
+        "prefill_compiles": int(traces.get("prefill_total",
+                                           traces.get("prefill", 0))),
+        "decode_compiles": int(traces.get("decode_and_sample",
+                                          traces.get("decode", 0))),
+        "pj_per_token_p50": _pct([f.pj_per_token for f in done], 50),
+        "tokens": {f.uid: [int(t) for t in f.tokens] for f in done},
+    }
+
+
+def run(report) -> None:
+    import jax
+
+    from repro.configs import get_config, reduced_for_smoke
+    from repro.core.timefloats import TFConfig
+    from repro.models import model as M
+    from repro.serve.engine import Engine
+    from repro.serve.legacy import LegacyEngine
+
+    cfg = reduced_for_smoke(get_config("qwen3-0.6b"))
+    cfg = dataclasses.replace(cfg, n_layers=2, quant="timefloats",
+                              tf=TFConfig(mode="separable"))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+
+    legacy = _drain(lambda: LegacyEngine(params, cfg, slots=SLOTS,
+                                         max_len=MAX_LEN), cfg)
+    fused = _drain(lambda: Engine(params, cfg, slots=SLOTS,
+                                  max_len=MAX_LEN), cfg)
+    # greedy parity on the same stream is part of the benchmark contract
+    assert fused["tokens"] == legacy["tokens"], \
+        "fused engine diverged from the legacy token streams"
+
+    speedup = fused["tok_per_s"] / max(legacy["tok_per_s"], 1e-9)
+    for name, r in (("legacy", legacy), ("fused", fused)):
+        report(f"serve/{name}_tok_per_s", r["tok_per_s"],
+               f"{r['new_tokens']} tokens, {r['steps']} steps")
+        report(f"serve/{name}_prefill_compiles", float(r["prefill_compiles"]),
+               "one per length bucket" if name == "fused"
+               else "one per distinct prompt length")
+        report(f"serve/{name}_pj_per_token_p50", r["pj_per_token_p50"],
+               "hw-twin attribution")
+    report("serve/speedup_x", speedup, "fused vs legacy drain wall-clock")
+
+    payload = {
+        "schema": "timefloats-serve-bench/v1",
+        "config": {"arch": "qwen3-0.6b", "n_layers": cfg.n_layers,
+                   "slots": SLOTS, "max_len": MAX_LEN,
+                   "requests": N_REQUESTS, "max_new": MAX_NEW},
+        "legacy": {k: v for k, v in legacy.items() if k != "tokens"},
+        "fused": {k: v for k, v in fused.items() if k != "tokens"},
+        "speedup_x": speedup,
+        "greedy_parity": True,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    report("serve/json_written", 1.0, os.path.normpath(JSON_PATH))
+
+
+def main() -> None:
+    def report(key, value, note=""):
+        print(f"{key},{value:.6g},{note}" if isinstance(value, float)
+              else f"{key},{value},{note}")
+
+    run(report)
+
+
+if __name__ == "__main__":
+    main()

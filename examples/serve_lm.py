@@ -1,6 +1,8 @@
-"""Batched serving example: continuous batching over fixed decode slots with
-a TimeFloats-quantized model — prefill on admission, all slots decode in
-lockstep, finished slots recycle.
+"""Batched serving example: device-resident continuous batching with a
+TimeFloats-quantized model (DESIGN.md §7) — admitted prompts prefill in
+length-bucketed batched calls straight into their slot rows, then every
+step is one fused decode_and_sample device call; the host only sees new
+tokens and a done mask (one transfer per step).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -13,7 +15,8 @@ import numpy as np
 from repro.configs import get_config, reduced_for_smoke
 from repro.core.timefloats import TFConfig
 from repro.models import model as M
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine
+from repro.serve.request import Request
 
 
 def main():
@@ -32,18 +35,26 @@ def main():
                               size=rng.integers(4, 24)).astype(np.int32)
         eng.submit(Request(uid=uid, prompt=prompt,
                            max_new_tokens=int(rng.integers(8, 32)),
-                           temperature=0.0))
+                           # mix greedy and sampled requests in one batch:
+                           # temperature is a per-slot vector on device
+                           temperature=0.0 if uid % 2 else 0.8))
 
     t0 = time.time()
     done = eng.run_until_drained()
     dt = time.time() - t0
     total_new = sum(len(f.tokens) for f in done)
+    s = eng.stats()
     print(f"served {len(done)} requests, {total_new} new tokens "
           f"in {dt:.1f}s ({total_new / dt:.1f} tok/s on CPU, "
           f"{cfg.n_layers}L x d{cfg.d_model}, 4 slots)")
+    print(f"steps={int(s['steps'])} host_transfers={int(s['host_transfers'])}"
+          f" prefill_compiles={int(s['prefill_compiles'])} "
+          f"decode_compiles={int(s['decode_compiles'])} "
+          f"latency p50={s['latency_p50_s']:.2f}s p95={s['latency_p95_s']:.2f}s")
     for f in done[:4]:
         print(f"  uid={f.uid:2d} tokens={f.tokens[:10]}...")
     assert len(done) == n_requests
+    assert int(s["host_transfers"]) == int(s["steps"])
 
 
 if __name__ == "__main__":

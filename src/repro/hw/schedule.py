@@ -242,7 +242,7 @@ class HwMonitor:
 
 
 class ServeEnergyModel:
-    """Per-request crossbar-energy attribution for `serve/engine.Engine`.
+    """Per-request crossbar-energy attribution for the serving engines.
 
     Reads only (serving never writes the arrays). The decode batch runs
     all `slots` rows through every projection whether or not a slot holds
@@ -250,25 +250,41 @@ class ServeEnergyModel:
     exactly linear in the batch dim — so the per-slot decode cost is
     ``cost(slots) / slots`` and attribution is additive and independent of
     which slot a request landed in (pinned by tests/test_serve.py). The
-    idle-slot remainder is NOT attributed to any request; it surfaces as
-    the engine's slot-utilization telemetry instead. MoE capacity padding
+    idle remainder is NOT attributed to any request; it surfaces as the
+    engine's slot-utilization telemetry instead. MoE capacity padding
     makes the per-slot share approximate for MoE families (documented in
     DESIGN.md §6).
+
+    Two prefill modes share the same books:
+
+    - **bucket-aware** (the fused engine, DESIGN.md §7): one abstract
+      trace per (bucket, batch) shape key (`prefill_bucket_pj`), then
+      `on_prefill_wave` books the whole padded batched call and hands
+      each REAL admitted request a ``cost / slots`` row share. A request
+      is charged its full bucket-length row (admitting it caused that
+      padded read — so pJ/token runs higher than the legacy engine's
+      exact-length attribution for the same prompt); only DUMMY rows
+      (admission-wave padding) stay unattributed, exactly like empty
+      decode slots.
+    - **per-length** (the legacy engine): one trace per distinct prompt
+      length (`prefill_pj` + `on_prefill`), fully attributed.
     """
 
     def __init__(self, slots: int):
         self.slots = slots
         self.decode_step_pj: Optional[float] = None   # full-batch decode
-        self._prefill_pj: Dict[int, float] = {}       # prompt len -> pJ
+        self._prefill_pj: Dict[Any, float] = {}       # shape key -> pJ
         self.attributed_pj = 0.0
         self.total_pj = 0.0
         self.decode_steps = 0
         self.active_slot_steps = 0
+        self.prefill_waves = 0
 
-    # -- census capture (engine calls these with its jitted fns) ----------
-    def observe_decode(self, decode_fn, params, cache, tokens) -> None:
+    # -- census capture (engines pass their UNJITTED callables so the
+    # abstract trace never bumps their compile counters) -------------------
+    def observe_decode(self, decode_fn, *args) -> None:
         if self.decode_step_pj is None:
-            ev = capture_census(decode_fn, params, cache, tokens)
+            ev = capture_census(decode_fn, *args)
             self.decode_step_pj = census_cost(ev).energy_pj
 
     def prefill_pj(self, prefill_fn, params, cache, batch, length: int
@@ -277,6 +293,14 @@ class ServeEnergyModel:
             ev = capture_census(prefill_fn, params, cache, batch)
             self._prefill_pj[length] = census_cost(ev).energy_pj
         return self._prefill_pj[length]
+
+    def prefill_bucket_pj(self, key, prefill_fn, *args) -> float:
+        """Total pJ of one batched bucketed prefill call, traced at most
+        once per shape ``key`` (the engine uses (bucket, batch))."""
+        if key not in self._prefill_pj:
+            ev = capture_census(prefill_fn, *args)
+            self._prefill_pj[key] = census_cost(ev).energy_pj
+        return self._prefill_pj[key]
 
     # -- accounting -------------------------------------------------------
     @property
@@ -287,6 +311,18 @@ class ServeEnergyModel:
         self.attributed_pj += pj
         self.total_pj += pj
         return pj
+
+    def on_prefill_wave(self, pj_total: float, n_real: int) -> float:
+        """Book one padded batched prefill (`pj_total` covers all `slots`
+        rows at the bucket length); returns the per-request row share
+        (bucket padding included — see the class docstring). The census
+        is linear in the batch dim for dense families, so the share is
+        independent of the engine's slot count."""
+        self.prefill_waves += 1
+        self.total_pj += pj_total
+        share = pj_total / max(self.slots, 1)
+        self.attributed_pj += share * n_real
+        return share
 
     def on_decode_step(self, active_slots: int) -> float:
         """Book one full-batch decode; returns the per-active-slot share."""
@@ -303,9 +339,11 @@ class ServeEnergyModel:
             "total_pj": self.total_pj,
             "idle_pj": self.total_pj - self.attributed_pj,
             "decode_steps": float(self.decode_steps),
+            "prefill_waves": float(self.prefill_waves),
             "slot_utilization": (self.active_slot_steps
                                  / (self.decode_steps * self.slots)
-                                 if self.decode_steps else 0.0),
+                                 if self.decode_steps and self.slots
+                                 else 0.0),
             "decode_pj_per_token": self.decode_pj_per_slot,
         }
 

@@ -1,8 +1,12 @@
 """Serving launcher: bring up the batched engine on a model config and
-drain a synthetic request stream.
+drain a synthetic request stream, then print the latency/throughput report
+(tok/s, p50/p95 per-request latency, recompile counts, §6 pJ/token).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --slots 4 --requests 16
+
+``--engine legacy`` runs the seed host-driven engine on the same stream
+(the A/B the serve benchmark automates).
 """
 import argparse
 import dataclasses
@@ -17,6 +21,8 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--quant", default="timefloats",
                     choices=["timefloats", "none"])
+    ap.add_argument("--engine", default="fused",
+                    choices=["fused", "legacy"])
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
@@ -30,18 +36,21 @@ def main(argv=None):
 
     from repro.configs import get_config, reduced_for_smoke
     from repro.models import model as M
-    from repro.serve.engine import Engine, Request
+    from repro.serve.engine import Engine
+    from repro.serve.legacy import LegacyEngine
+    from repro.serve.request import Request, percentile as _pct
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_for_smoke(cfg)
     cfg = dataclasses.replace(cfg, quant=args.quant)
-    print(f"arch={args.arch} reduced={args.reduced} "
+    print(f"arch={args.arch} reduced={args.reduced} engine={args.engine} "
           f"params={cfg.param_count() / 1e6:.1f}M slots={args.slots}")
 
     params = M.init(cfg, jax.random.PRNGKey(args.seed))
-    eng = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
-                 seed=args.seed)
+    cls = Engine if args.engine == "fused" else LegacyEngine
+    eng = cls(params, cfg, slots=args.slots, max_len=args.max_len,
+              seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         plen = int(rng.integers(4, min(64, args.max_len // 2)))
@@ -55,10 +64,18 @@ def main(argv=None):
     new_tokens = sum(len(f.tokens) for f in done)
     print(f"served {len(done)}/{args.requests} requests, {new_tokens} tokens "
           f"in {dt:.1f}s ({new_tokens / max(dt, 1e-9):.1f} tok/s)")
+    lats = [f.latency_s for f in done if f.latency_s > 0]
+    traces = eng.compile_cache_stats()
+    n_prefill = traces.get("prefill_total", traces.get("prefill", 0))
+    n_decode = traces.get("decode_and_sample", traces.get("decode", 0))
+    print(f"latency p50 {_pct(lats, 50):.2f}s p95 {_pct(lats, 95):.2f}s | "
+          f"steps {getattr(eng, 'steps', 0)} | "
+          f"compiles: prefill {n_prefill}, decode {n_decode} | "
+          f"host transfers {getattr(eng, 'host_transfers', 'n/a')}")
     hw = eng.hw_telemetry()
     if hw is not None:  # §6 twin: projected crossbar energy + utilization
         per_tok = [f.pj_per_token for f in done]
-        p50 = f"{float(np.median(per_tok)):.0f}" if per_tok else "n/a"
+        p50 = f"{_pct(per_tok, 50):.0f}" if per_tok else "n/a"
         print(f"hw twin: {hw['total_pj'] / 1e6:.2f} uJ total "
               f"({hw['idle_pj'] / 1e6:.2f} uJ idle), slot utilization "
               f"{hw['slot_utilization']:.1%}, pJ/token p50 {p50}")

@@ -65,7 +65,8 @@ def hybrid_apply(
         cache=cache.kv if cache else None, lengths=lengths,
         q_offset=q_offset)
     s_out, sc = ssm_mod.ssm_apply(params["ssm"], x, cfg,
-                                  cache=cache.ssm if cache else None)
+                                  cache=cache.ssm if cache else None,
+                                  lengths=lengths)
     y = 0.5 * (rms_norm(a_out, params["attn_out_norm"])
                + rms_norm(s_out, params["ssm_out_norm"]))
     new_cache = HybridCache(kv=kv, ssm=sc) if cache is not None else None

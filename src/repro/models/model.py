@@ -102,7 +102,8 @@ def block_apply(
     aux = dict(AUX_ZERO)
     h = norm_apply(params["norm1"], x, cfg)
     if kind == "ssm":
-        y, new_cache = ssm_mod.ssm_apply(params["mixer"], h, cfg, cache=cache)
+        y, new_cache = ssm_mod.ssm_apply(params["mixer"], h, cfg, cache=cache,
+                                         lengths=lengths)
         return x + y, new_cache, aux
     if kind in ("hybrid_swa", "hybrid_global"):
         y, new_cache = hybrid_mod.hybrid_apply(
@@ -458,15 +459,25 @@ def decode_step(params: PyTree, cache: ModelCache, tokens: Array,
 
 
 def prefill(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig,
-            cache: ModelCache) -> Tuple[Array, ModelCache]:
+            cache: ModelCache, *,
+            lengths: Optional[Array] = None) -> Tuple[Array, ModelCache]:
     """Run the full prompt (incl. prefix) through the model, filling the
-    cache; returns (last-position logits, cache). Cache max_len must be >=
-    prompt length. Attention layers recompute K/V for the prompt and write
-    them at positions [0, S); SSM layers advance their state."""
+    cache; returns (last-valid-position logits, cache). Cache max_len must
+    be >= prompt length. Attention layers recompute K/V for the prompt and
+    write them at positions [0, S); SSM layers advance their state.
+
+    ``lengths`` (B,) enables RAGGED prefill: per-row valid TOTAL length
+    (prefix + prompt tokens) for right-padded batches — attention masks
+    kv beyond each row's length, SSM layers freeze their state over pads
+    (dt=0), and the returned logits are gathered at each row's last valid
+    position. None means every position is valid (the classic path)."""
     x = embed_tokens(params, batch, cfg)
     b, s_total = x.shape[0], x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(s_total)[None, :], (b, s_total))
-    lengths = jnp.full((b,), s_total, jnp.int32)
+    if lengths is None:
+        lengths = jnp.full((b,), s_total, jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
     # Prefill uses the blockwise path per layer but must also write KV into
     # the cache: attention_apply's cache path handles (B, S) writes since
     # cache_update writes S-length slabs at position 0.
@@ -474,5 +485,49 @@ def prefill(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig,
         params, x, cfg, positions=positions, caches=list(cache.groups),
         lengths=lengths, q_offset=0, train=False)
     x = norm_apply(params["final_norm"], x, cfg)
-    logits = _head(params, x[:, -1:], cfg)
+    # Last valid position per row (== x[:, -1:] when nothing is padded).
+    idx = jnp.clip(lengths - 1, 0, s_total - 1)
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to(idx[:, None, None], (b, 1, x.shape[-1])), axis=1)
+    logits = _head(params, last, cfg)
     return logits, ModelCache(groups=tuple(new_groups), lengths=lengths)
+
+
+def scatter_cache_rows(full: ModelCache, rows: ModelCache,
+                       slot_ids: Array) -> ModelCache:
+    """Write per-request cache rows into batch rows of the big slot cache.
+
+    ``rows`` leaves are (L, n, ...) per-group stacks from a throwaway
+    prefill cache; ``full`` leaves are (L, slots, ...). Row j lands in
+    batch row ``slot_ids[j]``; out-of-range ids (>= slots) are dropped, so
+    the engine can pad an admission wave to a fixed batch. Free slots are
+    not contiguous, so this is an indexed scatter rather than a single
+    `lax.dynamic_update_slice` — one fused device op either way."""
+    ids = jnp.asarray(slot_ids, jnp.int32)
+
+    def put(f, r):
+        return f.at[:, ids].set(r, mode="drop")
+
+    groups = tuple(jax.tree.map(put, gf, gr)
+                   for gf, gr in zip(full.groups, rows.groups))
+    lengths = full.lengths.at[ids].set(rows.lengths, mode="drop")
+    return ModelCache(groups=groups, lengths=lengths)
+
+
+def prefill_into_slots(params: PyTree, batch: Dict[str, Array],
+                       cfg: ModelConfig, cache: ModelCache,
+                       lengths: Array, slot_ids: Array, *,
+                       max_len: int) -> Tuple[Array, ModelCache]:
+    """Bucketed batched prefill straight into slot rows (DESIGN.md §7).
+
+    Runs a right-padded batch of prompts through one ragged `prefill` on a
+    throwaway cache, then scatters the resulting rows (and lengths) into
+    `cache` at ``slot_ids`` — replacing the serving engine's old
+    init-one-cache-per-prompt-and-splice dance. ``lengths`` is the per-row
+    valid TOTAL length (prefix + prompt); out-of-range slot ids are padding
+    rows and write nowhere. Returns (last-valid-position logits, updated
+    cache)."""
+    n = batch["tokens"].shape[0]
+    scratch = init_cache(cfg, n, max_len)
+    logits, rows = prefill(params, batch, cfg, scratch, lengths=lengths)
+    return logits, scatter_cache_rows(cache, rows, slot_ids)

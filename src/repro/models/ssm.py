@@ -179,6 +179,8 @@ def ssm_apply(
     cfg: ModelConfig,
     *,
     cache: Optional[SSMCache] = None,
+    lengths: Optional[Array] = None,  # (B,) valid leading positions (ragged
+                                      # prefill); None = every position valid
 ) -> Tuple[Array, Optional[SSMCache]]:
     s_cfg = cfg.ssm
     d_inner, h, conv_dim = _dims(cfg)
@@ -207,7 +209,19 @@ def ssm_apply(
         # prefill-with-cache: conv sees the cached left context
         full = jnp.concatenate([cache.conv, xbc], axis=1)
         xbc = jax.nn.silu(_causal_conv(full, conv_w))[:, -(seq):, :]
-        new_conv = full[:, -(s_cfg.d_conv - 1):, :]
+        if lengths is None:
+            new_conv = full[:, -(s_cfg.d_conv - 1):, :]
+        else:
+            # Ragged prefill: the rolling buffer must hold the last
+            # d_conv-1 inputs ENDING at each row's last valid position
+            # (right-padding would otherwise load pad-token projections).
+            # In `full` the last valid index is (d_conv-1) + lengths - 1,
+            # so the window starts at `lengths`. For lengths == seq this
+            # is exactly the tail slice above.
+            w1 = s_cfg.d_conv - 1
+            idx = lengths[:, None] + jnp.arange(w1)[None, :]  # (B, w1)
+            new_conv = jnp.take_along_axis(
+                full, idx[:, :, None].astype(jnp.int32), axis=1)
 
     xs = xbc[..., :d_inner]
     bs = xbc[..., d_inner: d_inner + g * n]
@@ -215,6 +229,12 @@ def ssm_apply(
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + params["dt_bias"].astype(jnp.float32))
+    if lengths is not None and cache is not None and seq > 1:
+        # Ragged prefill: dt=0 at pad positions gives dA=0 (decay 1) and
+        # x̄=0, so pads contribute nothing to the state or valid outputs —
+        # the same trick ssd_chunked's internal padding relies on.
+        valid = jnp.arange(seq)[None, :] < lengths[:, None]  # (B, S)
+        dt = jnp.where(valid[..., None], dt, 0.0)
     a = -jnp.exp(params["A_log"].astype(jnp.float32))
     xh = xs.reshape(bsz, -1, h, p).astype(jnp.float32)
     bm = bs.reshape(bsz, -1, g, n).astype(jnp.float32)

@@ -1,1 +1,5 @@
-"""serve subpackage."""
+"""serve subpackage: the fused device-resident engine (DESIGN.md §7) plus
+the host-driven legacy baseline it is pinned against."""
+from repro.serve.engine import Engine, EngineState, sample_tokens  # noqa: F401
+from repro.serve.legacy import LegacyEngine  # noqa: F401
+from repro.serve.request import Finished, Request  # noqa: F401

@@ -1,25 +1,42 @@
-"""Batched serving engine: fixed-slot continuous batching.
+"""Device-resident continuous batching: the whole engine step is (at most)
+two jitted device calls (DESIGN.md §7).
 
-`Engine` holds a jitted decode_step over a (slots, max_len) cache. Requests
-queue up; free slots are prefilling prompts (per-request prefill into the
-slot's cache lines) while occupied slots decode. All slots advance together
-each `step()` — the standard TPU serving shape (decode batch is the unit of
-work; finished slots are recycled without disturbing others).
+The seed engine (now `serve/legacy.py`) was host-driven: one prefill
+compile per distinct prompt length, host cache splicing, per-slot Python
+sampling, and a device→host sync per slot per step. TimeFloats' whole
+pitch is avoiding domain-crossing overheads — the serving layer must not
+reintroduce them at the host boundary. This engine keeps everything on
+device:
 
-Sampling: greedy or temperature. Stop: EOS token or per-request max tokens.
+- **EngineState pytree** — cache, per-slot last token, active mask,
+  temperature, steps-remaining budget, and per-slot sampling counters all
+  live on device; the host only mirrors slot→request bookkeeping.
+- **Bucketed batched prefill** — admitted prompts are right-padded to a
+  power-of-two length bucket and prefilled in ONE batched call per bucket
+  (`model.prefill_into_slots`) that writes straight into their slot rows.
+  Prefill compiles at most once per bucket, ever.
+- **Fused `decode_and_sample`** — decode + greedy/temperature sampling
+  for all slots in one jitted call, with per-slot `jax.random.fold_in`
+  keys and done-detection (EOS / budget / cache-full) as a batched mask.
+- **One host transfer per step** — the only device→host traffic is the
+  new tokens and the done mask, fetched with a single `jax.device_get`
+  (`host_transfers` counts them; tests pin one per step).
 
-Energy telemetry (DESIGN.md §6): with TimeFloats quantization on, the
-engine books projected crossbar read energy per request — prefill at the
-request's prompt length plus a per-slot share of every decode step it was
-active for — via `hw.schedule.ServeEnergyModel` (one abstract trace per
-distinct shape, no per-step overhead). `Finished` carries the totals;
-`Engine.hw_telemetry()` reports fleet-style aggregates including the
-idle-slot energy and slot utilization.
+`compile_cache_stats()` exposes per-callable trace counts so tests (and
+the serve benchmark) can assert the recompile contract instead of hoping.
+
+Deviations from the legacy engine (documented in DESIGN.md §7): requests
+can finish at prefill (max_new_tokens=1 yields exactly 1 token where the
+legacy engine overshot to 2; EOS is also checked on the prefill token),
+temperature>0 sampling uses per-slot counter-based keys instead of one
+host-split stream, and MoE prefill routes the padded batch (capacity is
+computed over bucket-padded tokens, so over-capacity drops can differ
+from exact-length prefill).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import time
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,142 +44,304 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
+from repro.serve.request import (Finished, Request, counting_jit,
+                                 percentile)
 
 Array = jax.Array
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (S,) int32 (audio: (S, K))
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    generated: List[int] = dataclasses.field(default_factory=list)
-    energy_pj: float = 0.0        # attributed crossbar read energy
+class EngineState(NamedTuple):
+    """Device-resident engine state (a pytree; one per engine).
+
+    All leaves have a leading (slots,) dim except the cache. ``counter``
+    is the per-slot sampling step fed to `jax.random.fold_in` (0 = the
+    prefill token); ``tag`` is the occupying request's uid, so sampling
+    streams are per-request, not per-slot-reuse."""
+
+    cache: model_lib.ModelCache
+    last_token: Array     # (slots, 1[, K]) int32
+    active: Array         # (slots,) bool
+    temp: Array           # (slots,) float32
+    remaining: Array      # (slots,) int32 — new tokens still allowed
+    counter: Array        # (slots,) int32
+    tag: Array            # (slots,) int32
 
 
-@dataclasses.dataclass
-class Finished:
-    uid: int
-    tokens: np.ndarray
-    energy_pj: float = 0.0        # prefill + attributed decode shares
-    pj_per_token: float = 0.0     # energy / (prompt + generated tokens)
+def sample_tokens(logits: Array, temps: Array, key: Array, tags: Array,
+                  counters: Array) -> Array:
+    """Greedy/temperature sampling for a whole decode batch on device.
+
+    logits (S, V) or (S, K, V) float; temps (S,). Rows with temp<=0 take
+    argmax; rows with temp>0 sample categorically with an independent key
+    ``fold_in(fold_in(fold_in(key, slot), tag), counter)`` — different
+    slots (and different requests in the same slot) get different tokens
+    even on identical logits, and a drain is reproducible given the seed.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.maximum(temps, 1e-6)
+    slots_iota = jnp.arange(logits.shape[0], dtype=jnp.int32)
+
+    def one(lg, t, slot, tag, c):
+        k = jax.random.fold_in(
+            jax.random.fold_in(jax.random.fold_in(key, slot), tag), c)
+        return jax.random.categorical(k, lg / t, axis=-1)
+
+    sampled = jax.vmap(one)(logits.astype(jnp.float32), safe_t, slots_iota,
+                            tags, counters).astype(jnp.int32)
+    use = temps > 0.0
+    if greedy.ndim == 2:  # audio: (S, K)
+        use = use[:, None]
+    return jnp.where(use, sampled, greedy)
+
+
+def bucket_for(plen: int, cap: int, min_bucket: int = 8) -> int:
+    """Length bucket for a prompt: next power of two >= plen, floored at
+    ``min_bucket`` and capped at ``cap``. The engine passes
+    ``max_len - prefix_length`` as the cap so the padded model sequence
+    (bucket + prefix) always fits the cache rows."""
+    b = max(min_bucket, 1 << max(plen - 1, 0).bit_length())
+    return min(b, cap)
 
 
 class Engine:
+    """Fixed-slot continuous batching with a fused device step."""
+
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
-                 seed: int = 0, track_energy: bool = True):
+                 seed: int = 0, track_energy: bool = True,
+                 decode_fn: Optional[Callable] = None,
+                 min_bucket: int = 8):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        self.eos_id = eos_id
-        self.cache = model_lib.init_cache(cfg, slots, max_len)
-        self.active: Dict[int, Request] = {}      # slot -> request
-        self.queue: List[Request] = []
-        self.last_token = np.zeros(
-            (slots, 1) if cfg.family != "audio"
-            else (slots, 1, cfg.num_codebooks), np.int32)
-        self.rng = jax.random.PRNGKey(seed)
-
-        self._decode = jax.jit(
+        self.eos_id = None if eos_id is None else int(eos_id)
+        self.min_bucket = min_bucket
+        self._prefix = model_lib.prefix_length(cfg)
+        self._tok_trail: Tuple[int, ...] = (
+            (cfg.num_codebooks,) if cfg.family == "audio" else ())
+        self._key = jax.random.PRNGKey(seed)
+        # `decode_fn` exists for tests (rigged-logits fake models); it must
+        # match model.decode_step's (params, cache, tokens) -> (logits,
+        # cache) contract.
+        self._decode_fn = decode_fn or (
             lambda p, c, t: model_lib.decode_step(p, c, t, cfg))
-        self._prefill1 = jax.jit(
-            lambda p, c, b: model_lib.prefill(p, b, cfg, c))
+
+        z_i = jnp.zeros((slots,), jnp.int32)
+        self.state = EngineState(
+            cache=model_lib.init_cache(cfg, slots, max_len),
+            last_token=jnp.zeros((slots, 1) + self._tok_trail, jnp.int32),
+            active=jnp.zeros((slots,), bool),
+            temp=jnp.zeros((slots,), jnp.float32),
+            remaining=z_i, counter=z_i, tag=z_i)
+
+        self.active: Dict[int, Request] = {}      # slot -> request (mirror)
+        self.queue: List[Request] = []
+        self.steps = 0
+        self.host_transfers = 0
+        self._finished_count = 0
+        self._new_tokens = 0
+        self._latencies: List[float] = []
+
+        self._traces: Dict[str, int] = {}
+        self._step_raw = self._make_decode_and_sample()
+        self._step = counting_jit(self._step_raw, self._traces,
+                                  "decode_and_sample")
+        self._prefill_raw: Dict[int, Callable] = {}
+        self._prefill: Dict[int, Callable] = {}
+
         self._hw = None
         if track_energy and cfg.quant == "timefloats":
             from repro.hw.schedule import ServeEnergyModel
 
             self._hw = ServeEnergyModel(slots)
 
+    # -- cache compat view ---------------------------------------------------
+    @property
+    def cache(self) -> model_lib.ModelCache:
+        return self.state.cache
+
+    # -- fused device callables ---------------------------------------------
+    def _make_decode_and_sample(self):
+        cfg, eos, max_len = self.cfg, self.eos_id, self.max_len
+        decode_fn, key = self._decode_fn, self._key
+
+        def step(params, state: EngineState):
+            logits, cache = decode_fn(params, state.cache, state.last_token)
+            lg = logits[:, 0]  # (slots, [K,] V)
+            tok = sample_tokens(lg, state.temp, key, state.tag, state.counter)
+            first = tok[..., 0] if tok.ndim == 2 else tok
+            rem = state.remaining - 1
+            done = (rem <= 0) | (cache.lengths >= max_len - 1)
+            if eos is not None:
+                done = done | (first == eos)
+            done = state.active & done
+            tok_b = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
+            act_b = state.active.reshape((-1,) + (1,) * (tok_b.ndim - 1))
+            new = EngineState(
+                cache=cache,
+                last_token=jnp.where(act_b, tok_b, state.last_token),
+                active=state.active & ~done,
+                temp=state.temp,
+                remaining=jnp.where(state.active, rem, state.remaining),
+                counter=state.counter + state.active.astype(jnp.int32),
+                tag=state.tag)
+            return new, {"token": tok, "done": done}
+
+        return step
+
+    def _make_prefill(self, sb: int):
+        cfg, eos, max_len = self.cfg, self.eos_id, self.max_len
+        slots, prefix, key = self.slots, self._prefix, self._key
+
+        def fn(params, state: EngineState, tokens, plens, ids, temps,
+               budgets, tags):
+            batch = {"tokens": tokens}
+            if cfg.family == "vlm":
+                batch["patches"] = jnp.zeros(
+                    (slots, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16)
+            tot = plens + prefix  # per-row valid length incl. prefix
+            logits, cache = model_lib.prefill_into_slots(
+                params, batch, cfg, state.cache, tot, ids, max_len=max_len)
+            lg = logits[:, 0]
+            tok = sample_tokens(lg, temps, key, tags,
+                                jnp.zeros((slots,), jnp.int32))
+            first = tok[..., 0] if tok.ndim == 2 else tok
+            rem = budgets - 1
+            # Admission asserts tot < max_len, so one decode write (at
+            # position tot) always fits: cache-full can only trigger in
+            # decode, exactly like the legacy engine.
+            done = rem <= 0
+            if eos is not None:
+                done = done | (first == eos)
+            tok_b = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
+            new = EngineState(
+                cache=cache,
+                last_token=state.last_token.at[ids].set(tok_b, mode="drop"),
+                active=state.active.at[ids].set(~done, mode="drop"),
+                temp=state.temp.at[ids].set(temps, mode="drop"),
+                remaining=state.remaining.at[ids].set(rem, mode="drop"),
+                counter=state.counter.at[ids].set(1, mode="drop"),
+                tag=state.tag.at[ids].set(tags, mode="drop"))
+            return new, {"token": tok, "done": done}
+
+        return fn
+
+    def _get_prefill(self, sb: int):
+        if sb not in self._prefill:
+            self._prefill_raw[sb] = self._make_prefill(sb)
+            self._prefill[sb] = counting_jit(
+                self._prefill_raw[sb], self._traces, f"prefill[{sb}]")
+        return self._prefill_raw[sb], self._prefill[sb]
+
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _free_slots(self) -> List[int]:
-        return [i for i in range(self.slots) if i not in self.active]
-
-    def _insert_prefill(self, slot: int, req: Request):
-        """Prefill a single prompt and splice its cache lines into `slot`."""
-        s = len(req.prompt)
-        assert s < self.max_len, "prompt longer than cache"
-        one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
-        batch = {"tokens": jnp.asarray(req.prompt)[None]}
-        if self.cfg.family == "vlm":
-            batch["patches"] = jnp.zeros(
-                (1, self.cfg.num_prefix_tokens, self.cfg.d_model),
-                jnp.bfloat16)
-        if self._hw is not None:
-            req.energy_pj += self._hw.on_prefill(self._hw.prefill_pj(
-                self._prefill1, self.params, one_cache, batch, s))
-        logits, one_cache = self._prefill1(self.params, one_cache, batch)
-
-        def splice(full, one):
-            # group caches: leaves (L, B, ...) — write batch row `slot`
-            return full.at[:, slot].set(one[:, 0])
-
-        groups = tuple(
-            jax.tree.map(splice, gf, g1)
-            for gf, g1 in zip(self.cache.groups, one_cache.groups))
-        lengths = self.cache.lengths.at[slot].set(one_cache.lengths[0])
-        self.cache = model_lib.ModelCache(groups=groups, lengths=lengths)
-        tok = np.asarray(jnp.argmax(logits[0, -1], axis=-1)).reshape(-1)
-        if self.cfg.family == "audio":
-            self.last_token[slot, 0] = tok
-            req.generated.append(int(tok[0]))
-        else:
-            self.last_token[slot, 0] = int(tok[0])
-            req.generated.append(int(tok[0]))
-        self.active[slot] = req
+    def _bucket(self, plen: int) -> int:
+        # cap at max_len - prefix: the model prefill sequence is
+        # bucket + prefix and must fit the cache rows (hybrid meta tokens,
+        # vlm patches).
+        return bucket_for(plen, self.max_len - self._prefix, self.min_bucket)
 
     def step(self) -> List[Finished]:
-        # 1) admit queued requests into free slots
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            self._insert_prefill(slot, self.queue.pop(0))
-        if not self.active:
+        """One engine step: admit (bucketed batched prefill) + one fused
+        decode_and_sample; a single device→host transfer of the new tokens
+        and the done mask at the end."""
+        params = self.params
+        had_active = bool(self.active)
+        # 1) admit queued requests into free slots, grouped by bucket
+        free = [i for i in range(self.slots) if i not in self.active]
+        admits: List[Tuple[int, Request]] = []
+        while free and self.queue:
+            admits.append((free.pop(0), self.queue.pop(0)))
+        waves = []
+        by_bucket: Dict[int, List[Tuple[int, Request]]] = {}
+        for slot, req in admits:
+            assert len(req.prompt) + self._prefix < self.max_len, \
+                "prompt (incl. prefix) longer than cache"
+            by_bucket.setdefault(self._bucket(len(req.prompt)), []).append(
+                (slot, req))
+        for sb in sorted(by_bucket):
+            group = by_bucket[sb]
+            tokens = np.zeros((self.slots, sb) + self._tok_trail, np.int32)
+            plens = np.ones((self.slots,), np.int32)
+            ids = np.full((self.slots,), self.slots, np.int32)  # dummy: drop
+            temps = np.zeros((self.slots,), np.float32)
+            budgets = np.ones((self.slots,), np.int32)
+            tags = np.zeros((self.slots,), np.int32)
+            for r, (slot, req) in enumerate(group):
+                p = np.asarray(req.prompt)
+                tokens[r, : len(p)] = p
+                plens[r] = len(p)
+                ids[r] = slot
+                temps[r] = req.temperature
+                budgets[r] = req.max_new_tokens
+                tags[r] = req.uid & 0x7FFFFFFF
+            fn_raw, fn = self._get_prefill(sb)
+            if self._hw is not None:
+                pj = self._hw.prefill_bucket_pj(
+                    (sb, self.slots), fn_raw, params, self.state, tokens,
+                    plens, ids, temps, budgets, tags)
+                share = self._hw.on_prefill_wave(pj, len(group))
+                for _, req in group:
+                    req.energy_pj += share
+            self.state, pout = fn(params, self.state, tokens, plens, ids,
+                                  temps, budgets, tags)
+            waves.append((group, pout))
+            for slot, req in group:
+                self.active[slot] = req
+        # 2) one fused decode_and_sample over every slot. Skip it when the
+        # host already knows no slot can decode (nothing was active and
+        # every admit exhausts its budget at prefill).
+        dec = None
+        if had_active or any(r.max_new_tokens > 1 for _, r in admits):
+            self.steps += 1
+            self.state, dec = self._step(params, self.state)
+        if not waves and dec is None:
             return []
-        # 2) one decode step for every slot
-        tokens = jnp.asarray(self.last_token)
-        if self._hw is not None:
-            self._hw.observe_decode(self._decode, self.params, self.cache,
-                                    tokens)
-            share = self._hw.on_decode_step(len(self.active))
-            for req in self.active.values():
-                req.energy_pj += share
-        logits, self.cache = self._decode(self.params, self.cache, tokens)
-        logits = logits[:, 0]  # (slots, [K,] V)
+        # 3) the step's single device→host transfer: tokens + done masks
+        got_waves, got_dec = jax.device_get(([o for _, o in waves], dec))
+        self.host_transfers += 1
+        now = time.monotonic()
         finished: List[Finished] = []
-        for slot, req in list(self.active.items()):
-            lg = logits[slot]
-            if req.temperature > 0:
-                self.rng, k = jax.random.split(self.rng)
-                tok = jax.random.categorical(k, lg / req.temperature, axis=-1)
-            else:
-                tok = jnp.argmax(lg, axis=-1)
-            tok = np.asarray(tok).reshape(-1)
-            first = int(tok[0])
-            req.generated.append(first)
-            self.last_token[slot, 0] = tok if self.cfg.family == "audio" else first
-            done = (len(req.generated) >= req.max_new_tokens
-                    or (self.eos_id is not None and first == self.eos_id)
-                    or int(self.cache.lengths[slot]) >= self.max_len - 1)
-            if done:
-                n_tok = len(req.prompt) + len(req.generated)
-                finished.append(Finished(
-                    uid=req.uid, tokens=np.asarray(req.generated),
-                    energy_pj=req.energy_pj,
-                    pj_per_token=req.energy_pj / max(n_tok, 1)))
-                del self.active[slot]
+        for (group, _), out in zip(waves, got_waves):
+            for r, (slot, req) in enumerate(group):
+                self._append_token(req, out["token"][r])
+                if bool(out["done"][r]):
+                    finished.append(self._finish(req, now))
+                    del self.active[slot]
+        if got_dec is not None:
+            # Decode energy books AFTER the prefill done-masks are applied
+            # (pure host arithmetic — order vs the device call is free), so
+            # requests that finished at prefill are never charged a decode
+            # share they didn't use.
+            if self._hw is not None:
+                self._hw.observe_decode(self._step_raw, params, self.state)
+                share = self._hw.on_decode_step(len(self.active))
+                for req in self.active.values():
+                    req.energy_pj += share
+            for slot, req in list(self.active.items()):
+                self._append_token(req, got_dec["token"][slot])
+                if bool(got_dec["done"][slot]):
+                    finished.append(self._finish(req, now))
+                    del self.active[slot]
         return finished
 
-    def hw_telemetry(self) -> Optional[Dict[str, float]]:
-        """Fleet-style energy/utilization aggregates (None when the twin is
-        off): attributed vs total crossbar energy, the idle-slot remainder,
-        and decode slot utilization."""
-        return self._hw.telemetry() if self._hw is not None else None
+    def _append_token(self, req: Request, tok) -> None:
+        req.generated.append(int(tok if np.ndim(tok) == 0 else tok[0]))
+
+    def _finish(self, req: Request, now: float) -> Finished:
+        n_tok = len(req.prompt) + len(req.generated)
+        lat = max(now - req.submit_t, 0.0)
+        self._latencies.append(lat)
+        self._new_tokens += len(req.generated)
+        self._finished_count += 1
+        return Finished(
+            uid=req.uid, tokens=np.asarray(req.generated),
+            energy_pj=req.energy_pj,
+            pj_per_token=req.energy_pj / max(n_tok, 1),
+            latency_s=lat)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Finished]:
         out: List[Finished] = []
@@ -171,3 +350,39 @@ class Engine:
             if not self.active and not self.queue:
                 break
         return out
+
+    # -- introspection -------------------------------------------------------
+    def compile_cache_stats(self) -> Dict[str, int]:
+        """Trace counts per jitted callable. ``prefill[<bucket>]`` entries
+        must each be 1 after any drain (one compile per length bucket —
+        the recompile trap the legacy engine fell into is pinned away by
+        tests asserting exactly this)."""
+        stats = dict(self._traces)
+        stats["prefill_total"] = sum(
+            v for k, v in self._traces.items() if k.startswith("prefill["))
+        return stats
+
+    def stats(self) -> Dict[str, float]:
+        """Throughput/latency aggregates; all guards handle the
+        zero-request / zero-step drain (no division anywhere)."""
+        def pct(p: float) -> float:
+            return percentile(self._latencies, p)
+
+        return {
+            "steps": float(self.steps),
+            "host_transfers": float(self.host_transfers),
+            "finished": float(self._finished_count),
+            "new_tokens": float(self._new_tokens),
+            "latency_p50_s": pct(50),
+            "latency_p95_s": pct(95),
+            "prefill_compiles": float(
+                self.compile_cache_stats()["prefill_total"]),
+            "decode_compiles": float(self._traces.get("decode_and_sample", 0)),
+        }
+
+    def hw_telemetry(self) -> Optional[Dict[str, float]]:
+        """Fleet-style energy/utilization aggregates (None when the twin is
+        off): attributed vs total crossbar energy, the idle remainder
+        (empty decode slots + dummy admission-wave prefill rows), and
+        decode slot utilization."""
+        return self._hw.telemetry() if self._hw is not None else None

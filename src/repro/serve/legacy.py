@@ -1,0 +1,165 @@
+"""The seed host-driven serving engine, kept as the reference baseline.
+
+This is the pre-§7 engine: every admitted request runs its own jitted
+prefill on a throwaway one-slot cache (one XLA recompile per distinct
+prompt length), cache lines are spliced on host, each slot is sampled in a
+Python loop with host `argmax`, and reading ``cache.lengths[slot]`` forces
+a device→host sync per slot per step.  It exists so that
+
+- the fused engine's greedy token streams can be pinned bit-identical to
+  it (tests/test_serve.py), and
+- `benchmarks/serve_bench.py` can measure the fused engine against the
+  old path on the same request stream.
+
+Do not grow features here; `serve/engine.py` is the serving engine.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.serve.request import Finished, Request, counting_jit
+
+Array = jax.Array
+
+
+class LegacyEngine:
+    """Fixed-slot continuous batching, host-driven (the seed engine)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
+                 max_len: int = 512, eos_id: Optional[int] = None,
+                 seed: int = 0, track_energy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model_lib.init_cache(cfg, slots, max_len)
+        self.active: Dict[int, Request] = {}      # slot -> request
+        self.queue: List[Request] = []
+        self.last_token = np.zeros(
+            (slots, 1) if cfg.family != "audio"
+            else (slots, 1, cfg.num_codebooks), np.int32)
+        self.rng = jax.random.PRNGKey(seed)
+        self.steps = 0
+
+        self._traces: Dict[str, int] = {}
+        self._decode_raw = lambda p, c, t: model_lib.decode_step(p, c, t, cfg)
+        self._prefill1_raw = lambda p, c, b: model_lib.prefill(p, b, cfg, c)
+        self._decode = counting_jit(self._decode_raw, self._traces, "decode")
+        self._prefill1 = counting_jit(self._prefill1_raw, self._traces,
+                                      "prefill")
+        self._hw = None
+        if track_energy and cfg.quant == "timefloats":
+            from repro.hw.schedule import ServeEnergyModel
+
+            self._hw = ServeEnergyModel(slots)
+
+    def compile_cache_stats(self) -> Dict[str, int]:
+        """Trace counts of the engine's jitted callables. The legacy
+        prefill re-traces once per distinct prompt length."""
+        return dict(self._traces)
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.slots) if i not in self.active]
+
+    def _insert_prefill(self, slot: int, req: Request):
+        """Prefill a single prompt and splice its cache lines into `slot`."""
+        s = len(req.prompt)
+        assert s < self.max_len, "prompt longer than cache"
+        one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.num_prefix_tokens, self.cfg.d_model),
+                jnp.bfloat16)
+        if self._hw is not None:
+            req.energy_pj += self._hw.on_prefill(self._hw.prefill_pj(
+                self._prefill1_raw, self.params, one_cache, batch, s))
+        logits, one_cache = self._prefill1(self.params, one_cache, batch)
+
+        def splice(full, one):
+            # group caches: leaves (L, B, ...) — write batch row `slot`
+            return full.at[:, slot].set(one[:, 0])
+
+        groups = tuple(
+            jax.tree.map(splice, gf, g1)
+            for gf, g1 in zip(self.cache.groups, one_cache.groups))
+        lengths = self.cache.lengths.at[slot].set(one_cache.lengths[0])
+        self.cache = model_lib.ModelCache(groups=groups, lengths=lengths)
+        tok = np.asarray(jnp.argmax(logits[0, -1], axis=-1)).reshape(-1)
+        if self.cfg.family == "audio":
+            self.last_token[slot, 0] = tok
+            req.generated.append(int(tok[0]))
+        else:
+            self.last_token[slot, 0] = int(tok[0])
+            req.generated.append(int(tok[0]))
+        self.active[slot] = req
+
+    def step(self) -> List[Finished]:
+        # 1) admit queued requests into free slots
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._insert_prefill(slot, self.queue.pop(0))
+        if not self.active:
+            return []
+        self.steps += 1
+        # 2) one decode step for every slot
+        tokens = jnp.asarray(self.last_token)
+        if self._hw is not None:
+            self._hw.observe_decode(self._decode_raw, self.params, self.cache,
+                                    tokens)
+            share = self._hw.on_decode_step(len(self.active))
+            for req in self.active.values():
+                req.energy_pj += share
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        logits = logits[:, 0]  # (slots, [K,] V)
+        finished: List[Finished] = []
+        for slot, req in list(self.active.items()):
+            lg = logits[slot]
+            if req.temperature > 0:
+                self.rng, k = jax.random.split(self.rng)
+                tok = jax.random.categorical(k, lg / req.temperature, axis=-1)
+            else:
+                tok = jnp.argmax(lg, axis=-1)
+            tok = np.asarray(tok).reshape(-1)
+            first = int(tok[0])
+            req.generated.append(first)
+            self.last_token[slot, 0] = tok if self.cfg.family == "audio" else first
+            done = (len(req.generated) >= req.max_new_tokens
+                    or (self.eos_id is not None and first == self.eos_id)
+                    or int(self.cache.lengths[slot]) >= self.max_len - 1)
+            if done:
+                n_tok = len(req.prompt) + len(req.generated)
+                finished.append(Finished(
+                    uid=req.uid, tokens=np.asarray(req.generated),
+                    energy_pj=req.energy_pj,
+                    pj_per_token=req.energy_pj / max(n_tok, 1),
+                    latency_s=max(time.monotonic() - req.submit_t, 0.0)))
+                del self.active[slot]
+        return finished
+
+    def hw_telemetry(self) -> Optional[Dict[str, float]]:
+        """Fleet-style energy/utilization aggregates (None when the twin is
+        off): attributed vs total crossbar energy, the idle-slot remainder,
+        and decode slot utilization."""
+        return self._hw.telemetry() if self._hw is not None else None
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Finished]:
+        out: List[Finished] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.active and not self.queue:
+                break
+        return out

@@ -1,0 +1,58 @@
+"""Shared serving types: request/finished records and the trace-counting
+jit wrapper both engines use for `compile_cache_stats()`."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32 (audio: (S, K))
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    generated: List[int] = dataclasses.field(default_factory=list)
+    energy_pj: float = 0.0        # attributed crossbar read energy
+    submit_t: float = dataclasses.field(default_factory=time.monotonic)
+
+
+@dataclasses.dataclass
+class Finished:
+    uid: int
+    tokens: np.ndarray
+    energy_pj: float = 0.0        # prefill + attributed decode shares
+    pj_per_token: float = 0.0     # energy / (prompt + generated tokens)
+    latency_s: float = 0.0        # submit -> finished wall time
+
+
+def percentile(xs, p: float) -> float:
+    """Nearest-rank percentile with an empty-input guard (zero drained
+    requests must not divide by zero) — shared by Engine.stats(), the
+    serve launcher and the serve benchmark."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
+
+
+def counting_jit(fn, counters: Dict[str, int], name: str, **jit_kwargs):
+    """`jax.jit(fn)` that bumps ``counters[name]`` once per TRACE.
+
+    jit re-traces exactly when its shape/dtype cache misses, so the counter
+    equals the number of distinct compiled programs — the recompile counter
+    behind `Engine.compile_cache_stats()` (the silent per-prompt-length
+    recompile trap this repo's serving layer once had). The increment runs
+    at trace time only; executions of the cached program don't count.
+    """
+    counters.setdefault(name, 0)
+
+    def traced(*args, **kwargs):
+        counters[name] += 1
+        return fn(*args, **kwargs)
+
+    return jax.jit(traced, **jit_kwargs)
