@@ -47,6 +47,9 @@ SUMMARY_KEYS = (
     "hw/qwen3-0p6b_token_fwd_uj",
     "serve/fused_tok_per_s",
     "serve/speedup_x",
+    "serve/prefix_hit_rate",
+    "serve/prefix_paged_speedup_x",
+    "serve/prefix_saved_pj",
 )
 
 

@@ -275,10 +275,18 @@ class ServeEnergyModel:
         self.decode_step_pj: Optional[float] = None   # full-batch decode
         self._prefill_pj: Dict[Any, float] = {}       # shape key -> pJ
         self.attributed_pj = 0.0
+        self.prefill_attributed_pj = 0.0  # prefill share of attributed_pj
         self.total_pj = 0.0
         self.decode_steps = 0
         self.active_slot_steps = 0
         self.prefill_waves = 0
+        # Prefix-reuse credit (paged engine, DESIGN.md §8): crossbar reads
+        # the radix hit let the engine SKIP. Never added to total_pj —
+        # it's energy that did not happen; telemetry reports it so the
+        # savings are visible next to the attributed spend.
+        self.prefix_saved_pj = 0.0
+        self.prefix_hits = 0
+        self.prefix_tokens_saved = 0
 
     # -- census capture (engines pass their UNJITTED callables so the
     # abstract trace never bumps their compile counters) -------------------
@@ -309,8 +317,18 @@ class ServeEnergyModel:
 
     def on_prefill(self, pj: float) -> float:
         self.attributed_pj += pj
+        self.prefill_attributed_pj += pj
         self.total_pj += pj
         return pj
+
+    def on_prefix_hit(self, saved_pj: float, tokens: int) -> None:
+        """Book one radix prefix hit: ``saved_pj`` is the engine-computed
+        cost delta between the bucket the full prompt needed and the
+        executed suffix bucket (0 when pow2 bucketing absorbs the skip);
+        ``tokens`` is the prefill positions skipped."""
+        self.prefix_hits += 1
+        self.prefix_tokens_saved += int(tokens)
+        self.prefix_saved_pj += saved_pj
 
     def on_prefill_wave(self, pj_total: float, n_real: int) -> float:
         """Book one padded batched prefill (`pj_total` covers all `slots`
@@ -322,6 +340,7 @@ class ServeEnergyModel:
         self.total_pj += pj_total
         share = pj_total / max(self.slots, 1)
         self.attributed_pj += share * n_real
+        self.prefill_attributed_pj += share * n_real
         return share
 
     def on_decode_step(self, active_slots: int) -> float:
@@ -336,8 +355,12 @@ class ServeEnergyModel:
     def telemetry(self) -> Dict[str, float]:
         return {
             "attributed_pj": self.attributed_pj,
+            "prefill_attributed_pj": self.prefill_attributed_pj,
             "total_pj": self.total_pj,
             "idle_pj": self.total_pj - self.attributed_pj,
+            "prefix_saved_pj": self.prefix_saved_pj,
+            "prefix_hits": float(self.prefix_hits),
+            "prefix_tokens_saved": float(self.prefix_tokens_saved),
             "decode_steps": float(self.decode_steps),
             "prefill_waves": float(self.prefill_waves),
             "slot_utilization": (self.active_slot_steps

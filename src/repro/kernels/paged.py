@@ -1,0 +1,82 @@
+"""Paged-KV page-table gather: ``out[b, t] = pool[page_table[b, t]]``.
+
+The paged serving cache (DESIGN.md §8) stores K/V in fixed-size pages —
+``pool (P, page, *feat)`` — and each batch row owns a page table
+``pt (B, T)`` of page ids. The attention read path materializes the
+per-row dense view ``(B, T, page, *feat)`` with this gather; on TPU that
+is a DMA-friendly block copy, so it gets a Pallas kernel (one grid cell
+per page-table entry, dynamic-slice load of the referenced page). The
+jnp fallback is plain advanced indexing, which XLA lowers to a gather —
+the default on this CPU container (the Pallas kernel runs in interpret
+mode here, validated against the fallback by tests/test_paged.py).
+
+Set ``TIMEFLOATS_PAGED_PALLAS=1`` (or pass ``use_pallas=True``) to route
+the serving gather through the kernel.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _interpret_default() -> bool:
+    # CPU container: interpret unless explicitly disabled (real TPU).
+    return os.environ.get("PALLAS_INTERPRET", "1") != "0"
+
+
+def _use_pallas_default() -> bool:
+    return os.environ.get("TIMEFLOATS_PAGED_PALLAS", "0") == "1"
+
+
+def gather_pages_ref(pool: Array, page_table: Array) -> Array:
+    """Reference/fallback: ``pool[pt]`` -> (B, T, page, *feat)."""
+    return pool[page_table]
+
+
+def _kernel(pt_ref, pool_ref, out_ref):
+    """One grid cell = one page-table entry: copy the referenced page."""
+    pid = pt_ref[0, 0]
+    out_ref[0, 0, :] = pool_ref[pl.ds(pid, 1), :][0]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_pages_pallas(pool: Array, page_table: Array,
+                        *, interpret: bool | None = None) -> Array:
+    """Pallas page gather; same contract as :func:`gather_pages_ref`."""
+    if interpret is None:
+        interpret = _interpret_default()
+    p = pool.shape[0]
+    feat = pool.shape[1:]
+    m = 1
+    for s in feat:
+        m *= s
+    b, t = page_table.shape
+    pool2 = pool.reshape(p, m)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(b, t),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((p, m), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, m), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, m), pool.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pool2)
+    return out.reshape((b, t) + feat)
+
+
+def gather_pages(pool: Array, page_table: Array,
+                 *, use_pallas: bool | None = None) -> Array:
+    """Dispatch: jnp fallback by default, Pallas when opted in (env/arg)."""
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if use_pallas:
+        return gather_pages_pallas(pool, page_table)
+    return gather_pages_ref(pool, page_table)

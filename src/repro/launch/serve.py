@@ -30,6 +30,13 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged cache pool + radix prefix cache (DESIGN §8;"
+                         " attention/MLA archs)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared system-prompt tokens prepended to every "
+                         "request (exercises the radix prefix cache)")
     args = ap.parse_args(argv)
 
     import jax
@@ -48,13 +55,24 @@ def main(argv=None):
           f"params={cfg.param_count() / 1e6:.1f}M slots={args.slots}")
 
     params = M.init(cfg, jax.random.PRNGKey(args.seed))
-    cls = Engine if args.engine == "fused" else LegacyEngine
-    eng = cls(params, cfg, slots=args.slots, max_len=args.max_len,
-              seed=args.seed)
+    if args.paged and args.engine != "fused":
+        print("--paged requires the fused engine", file=sys.stderr)
+        return 2
+    if args.engine == "fused":
+        eng = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
+                     seed=args.seed, paged=args.paged,
+                     page_size=args.page_size)
+    else:
+        eng = LegacyEngine(params, cfg, slots=args.slots,
+                           max_len=args.max_len, seed=args.seed)
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          size=args.prefix_len).astype(np.int32)
     for uid in range(args.requests):
         plen = int(rng.integers(4, min(64, args.max_len // 2)))
         prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        if args.prefix_len:
+            prompt = np.concatenate([shared, prompt])
         eng.submit(Request(uid=uid, prompt=prompt,
                            max_new_tokens=args.max_new,
                            temperature=args.temperature))
@@ -79,6 +97,25 @@ def main(argv=None):
         print(f"hw twin: {hw['total_pj'] / 1e6:.2f} uJ total "
               f"({hw['idle_pj'] / 1e6:.2f} uJ idle), slot utilization "
               f"{hw['slot_utilization']:.1%}, pJ/token p50 {p50}")
+        if args.paged:
+            print(f"prefix credit: {hw['prefix_saved_pj'] / 1e6:.2f} uJ "
+                  f"saved over {int(hw['prefix_hits'])} hits "
+                  f"({int(hw['prefix_tokens_saved'])} prefill positions)")
+    if args.paged:  # §8 smoke contract: reuse happened, pool conserved
+        st = eng.stats()
+        conserved = (st["pool_pages_in_use"] + st["pool_pages_free"]
+                     == st["pool_pages_total"])
+        print(f"paged: hit rate {st['radix_hit_rate']:.1%} "
+              f"({int(st['radix_hits'])} hits), pool "
+              f"{int(st['pool_pages_in_use'])} used + "
+              f"{int(st['pool_pages_free'])} free / "
+              f"{int(st['pool_pages_total'])} pages, "
+              f"{int(st['radix_evictions'])} evictions, "
+              f"conserved={conserved}")
+        if not conserved:
+            return 1
+        if args.prefix_len and not st["radix_hit_rate"] > 0:
+            return 1
     return 0 if len(done) == args.requests else 1
 
 

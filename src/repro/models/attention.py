@@ -64,6 +64,46 @@ class KVCache(NamedTuple):
     v: Array
 
 
+class PagedKVCache(NamedTuple):
+    """Per-layer PAGED KV cache (DESIGN.md §8): k/v are page pools
+    ``(P, page, Hkv, D)`` shared by every batch row; ``pt (B, T)`` is the
+    per-row page table (``T * page == max_len``). Page 0 is the reserved
+    trash page — unassigned table entries point there, so out-of-range or
+    stale writes land in scratch instead of another row's pages."""
+
+    k: Array
+    v: Array
+    pt: Array
+
+
+def paged_write(pool: Array, new: Array, positions: Array,
+                page_table: Array) -> Array:
+    """Scatter ``new (B, S, *feat)`` into ``pool (P, page, *feat)`` at
+    per-row start ``positions (B,)``; position ``p`` of row ``b`` lands in
+    page ``page_table[b, p // page]`` offset ``p % page``. Positions past
+    the table (or pointing at unassigned entries) hit the trash page."""
+    b, s = new.shape[:2]
+    page = pool.shape[1]
+    n_tab = page_table.shape[1]
+    pos = (positions[:, None].astype(jnp.int32)
+           + jnp.arange(s, dtype=jnp.int32)[None, :])
+    pslot = pos // page
+    pids = jnp.take_along_axis(page_table,
+                               jnp.minimum(pslot, n_tab - 1), axis=1)
+    pids = jnp.where(pslot < n_tab, pids, 0)  # beyond-table -> trash
+    return pool.at[pids, pos % page].set(new)
+
+
+def paged_view(pool: Array, page_table: Array) -> Array:
+    """Dense per-row read view ``(B, T*page, *feat)`` of a page pool via
+    the page-table gather (Pallas kernel or jnp fallback, kernels/paged)."""
+    from repro.kernels.paged import gather_pages
+
+    b, t = page_table.shape
+    gathered = gather_pages(pool, page_table)  # (B, T, page, *feat)
+    return gathered.reshape((b, t * pool.shape[1]) + pool.shape[2:])
+
+
 def _pad_seq(a: Array, mult: int) -> Array:
     pad = (-a.shape[1]) % mult
     if pad == 0:
@@ -258,8 +298,18 @@ def attention_apply(
     if cache is not None:
         assert lengths is not None
         write_pos = positions[:, 0]
-        cache = cache_update(cache, k, v, write_pos)
-        out = decode_attention(q, cache.k, cache.v, positions, lengths, mask)
+        if isinstance(cache, PagedKVCache):
+            cache = PagedKVCache(
+                k=paged_write(cache.k, k, write_pos, cache.pt),
+                v=paged_write(cache.v, v, write_pos, cache.pt),
+                pt=cache.pt)
+            out = decode_attention(q, paged_view(cache.k, cache.pt),
+                                   paged_view(cache.v, cache.pt),
+                                   positions, lengths, mask)
+        else:
+            cache = cache_update(cache, k, v, write_pos)
+            out = decode_attention(q, cache.k, cache.v, positions, lengths,
+                                   mask)
     else:
         out = blockwise_attention(q, k, v, mask, q_block=cfg.q_block,
                                   kv_block=cfg.kv_block, q_offset=q_offset)

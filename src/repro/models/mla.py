@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import MaskSpec, NEG, blockwise_attention, mask_allowed
+from repro.models.attention import (MaskSpec, NEG, blockwise_attention,
+                                    mask_allowed, paged_view, paged_write)
 from repro.models.common import ParamSpec, dense, dense_in, rms_norm, rope
 
 Array = jax.Array
@@ -33,6 +34,16 @@ Array = jax.Array
 class MLACache(NamedTuple):
     c_kv: Array    # (B, S_max, kv_lora_rank) — normalized latent
     k_rope: Array  # (B, S_max, qk_rope_head_dim)
+
+
+class PagedMLACache(NamedTuple):
+    """Paged variant (DESIGN.md §8): latent/rope page pools ``(P, page, R)``
+    shared by all rows + the per-row page table ``pt (B, T)`` — the same
+    layout contract as attention.PagedKVCache (page 0 = trash)."""
+
+    c_kv: Array
+    k_rope: Array
+    pt: Array
 
 
 def mla_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
@@ -107,13 +118,22 @@ def mla_apply(
     assert lengths is not None
     write_pos = positions[:, 0]
 
-    def write(buf, new, pos):
-        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=0)
+    if isinstance(cache, PagedMLACache):
+        cache = PagedMLACache(
+            c_kv=paged_write(cache.c_kv, c_kv, write_pos, cache.pt),
+            k_rope=paged_write(cache.k_rope, k_rope, write_pos, cache.pt),
+            pt=cache.pt)
+        c_kv_all = paged_view(cache.c_kv, cache.pt)      # (B, T*page, R)
+        k_rope_all = paged_view(cache.k_rope, cache.pt)
+    else:
+        def write(buf, new, pos):
+            return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=0)
 
-    cache = MLACache(
-        c_kv=jax.vmap(write)(cache.c_kv, c_kv, write_pos),
-        k_rope=jax.vmap(write)(cache.k_rope, k_rope, write_pos),
-    )
+        cache = MLACache(
+            c_kv=jax.vmap(write)(cache.c_kv, c_kv, write_pos),
+            k_rope=jax.vmap(write)(cache.k_rope, k_rope, write_pos),
+        )
+        c_kv_all, k_rope_all = cache.c_kv, cache.k_rope
     wkv_b = params["wkv_b"]  # (kv_lora, H, nope+v)
     wk_b = wkv_b[..., : m.qk_nope_head_dim]       # (kv_lora, H, nope)
     wv_b = wkv_b[..., m.qk_nope_head_dim:]        # (kv_lora, H, v)
@@ -122,17 +142,17 @@ def mla_apply(
                        wk_b.astype(jnp.float32))
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     s_lat = jnp.einsum("bshc,bjc->bhsj", q_lat,
-                       cache.c_kv.astype(jnp.float32))
+                       c_kv_all.astype(jnp.float32))
     s_rope = jnp.einsum("bshr,bjr->bhsj", q_rope.astype(jnp.float32),
-                        cache.k_rope.astype(jnp.float32))
+                        k_rope_all.astype(jnp.float32))
     scores = (s_lat + s_rope) * scale  # (B, H, Sq, S_max)
-    kv_pos = jnp.arange(cache.c_kv.shape[1])
+    kv_pos = jnp.arange(c_kv_all.shape[1])
     ok = mask_allowed(positions[:, :, None], kv_pos[None, None, :], mask)
     ok = ok & (kv_pos[None, None, :] < lengths[:, None, None])
     scores = jnp.where(ok[:, None], scores, NEG)
     p = jax.nn.softmax(scores, axis=-1)
     p = jnp.where(ok[:, None], p, 0.0)
-    o_lat = jnp.einsum("bhsj,bjc->bshc", p, cache.c_kv.astype(jnp.float32))
+    o_lat = jnp.einsum("bhsj,bjc->bshc", p, c_kv_all.astype(jnp.float32))
     out = jnp.einsum("bshc,chv->bshv", o_lat, wv_b.astype(jnp.float32))
     y = dense_in(out.astype(cfg.activation_dtype), params["wo"], cfg)
     return y, cache

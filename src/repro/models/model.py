@@ -123,7 +123,15 @@ def block_apply(
     x = x + y
     h2 = norm_apply(params["norm2"], x, cfg)
     if kind == "moe":
-        y2, aux_moe = moe_mod.moe_apply(params["ffn"], h2, cfg)
+        # Ragged/suffix prefill: tell the router which positions are real
+        # so capacity is computed over real tokens and pads never consume
+        # expert slots (the PR 4 padded-capacity caveat, now fixed and
+        # pinned by tests). Decode (S == 1) keeps the classic path.
+        tok_valid = None
+        if lengths is not None and x.shape[1] > 1:
+            tok_valid = positions < lengths[:, None]
+        y2, aux_moe = moe_mod.moe_apply(params["ffn"], h2, cfg,
+                                        token_mask=tok_valid)
         aux.update(aux_moe)
     else:
         y2 = mlp_apply(params["ffn"], h2, cfg)
@@ -406,6 +414,67 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> ModelCache:
                       lengths=jnp.zeros((batch,), jnp.int32))
 
 
+def paged_supported(cfg: ModelConfig) -> bool:
+    """The paged pool (DESIGN.md §8) covers the attention/MLA families:
+    K/V at a position is a pure function of the token prefix, so pages are
+    shareable. SSM/hybrid carry constant-size recurrent state — nothing to
+    page — and keep the dense slot cache; audio's multi-codebook tokens
+    and the vlm patch prefix are not token-addressable radix keys."""
+    return (prefix_length(cfg) == 0 and cfg.family != "audio"
+            and all(k in ("dense", "moe") for k in cfg.layer_kinds()))
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     page_size: int, num_pages: int) -> ModelCache:
+    """Paged ModelCache: per-layer page POOLS ``(L, P, page, ...)`` shared
+    by every row + per-row page tables ``(L, B, T)`` (T*page == max_len;
+    the table is replicated over L so it rides the layer scan as an xs
+    leaf like every other cache leaf). Entries start at the trash page."""
+    assert paged_supported(cfg), "paged cache: attention/MLA families only"
+    assert max_len % page_size == 0, "max_len must be a page multiple"
+    dt = cfg.activation_dtype
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    n_tab = max_len // page_size
+    pt0 = jnp.zeros((batch, n_tab), jnp.int32)
+    groups = []
+    for kind, count in layer_groups(cfg):
+        def stack(make):
+            one = make()
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+
+        if _uses_mla(cfg):
+            m = cfg.mla
+            groups.append(stack(lambda: mla_mod.PagedMLACache(
+                c_kv=jnp.zeros((num_pages, page_size, m.kv_lora_rank), dt),
+                k_rope=jnp.zeros((num_pages, page_size, m.qk_rope_head_dim),
+                                 dt),
+                pt=pt0)))
+        else:
+            groups.append(stack(lambda: attn_mod.PagedKVCache(
+                k=jnp.zeros((num_pages, page_size, cfg.n_kv_heads, hd), dt),
+                v=jnp.zeros((num_pages, page_size, cfg.n_kv_heads, hd), dt),
+                pt=pt0)))
+    return ModelCache(groups=tuple(groups),
+                      lengths=jnp.zeros((batch,), jnp.int32))
+
+
+def set_page_rows(cache: ModelCache, slot_ids, rows) -> ModelCache:
+    """Write page-table rows ``rows (n, T)`` for slots ``slot_ids (n,)``
+    into every group's (replicated-over-layers) table; out-of-range ids
+    drop. The engine calls this on admission (assign a slot's pages) and
+    on slot teardown (reset the row to all-trash so a stale slot can
+    never write into a reallocated page)."""
+    ids = jnp.asarray(slot_ids, jnp.int32)
+    rows = jnp.asarray(rows, jnp.int32)
+
+    def upd(g):
+        return g._replace(pt=g.pt.at[:, ids].set(rows[None], mode="drop"))
+
+    return ModelCache(groups=tuple(upd(g) for g in cache.groups),
+                      lengths=cache.lengths)
+
+
 def cache_axes(cfg: ModelConfig) -> ModelCache:
     """Logical-axes tree matching init_cache (for sharding resolution).
     KV seq dim gets the "seq" rule (replicated by default; long-context
@@ -460,7 +529,8 @@ def decode_step(params: PyTree, cache: ModelCache, tokens: Array,
 
 def prefill(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig,
             cache: ModelCache, *,
-            lengths: Optional[Array] = None) -> Tuple[Array, ModelCache]:
+            lengths: Optional[Array] = None,
+            offsets: Optional[Array] = None) -> Tuple[Array, ModelCache]:
     """Run the full prompt (incl. prefix) through the model, filling the
     cache; returns (last-valid-position logits, cache). Cache max_len must
     be >= prompt length. Attention layers recompute K/V for the prompt and
@@ -470,10 +540,22 @@ def prefill(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig,
     (prefix + prompt tokens) for right-padded batches — attention masks
     kv beyond each row's length, SSM layers freeze their state over pads
     (dt=0), and the returned logits are gathered at each row's last valid
-    position. None means every position is valid (the classic path)."""
+    position. None means every position is valid (the classic path).
+
+    ``offsets`` (B,) enables per-row SUFFIX prefill (the radix prefix-hit
+    path, DESIGN.md §8): row b's tokens occupy absolute positions
+    ``offsets[b] + [0, S)`` and attend to the cache content below — the
+    matched prefix K/V is read, not recomputed. Attention/MLA only
+    (offsets require position-addressable cache rows, which is exactly
+    the paged-family boundary)."""
     x = embed_tokens(params, batch, cfg)
     b, s_total = x.shape[0], x.shape[1]
-    positions = jnp.broadcast_to(jnp.arange(s_total)[None, :], (b, s_total))
+    if offsets is None:
+        positions = jnp.broadcast_to(jnp.arange(s_total)[None, :],
+                                     (b, s_total))
+    else:
+        positions = (jnp.asarray(offsets, jnp.int32)[:, None]
+                     + jnp.arange(s_total, dtype=jnp.int32)[None, :])
     if lengths is None:
         lengths = jnp.full((b,), s_total, jnp.int32)
     else:
@@ -485,8 +567,12 @@ def prefill(params: PyTree, batch: Dict[str, Array], cfg: ModelConfig,
         params, x, cfg, positions=positions, caches=list(cache.groups),
         lengths=lengths, q_offset=0, train=False)
     x = norm_apply(params["final_norm"], x, cfg)
-    # Last valid position per row (== x[:, -1:] when nothing is padded).
-    idx = jnp.clip(lengths - 1, 0, s_total - 1)
+    # Last valid position per row (== x[:, -1:] when nothing is padded);
+    # with offsets the gather index is row-local.
+    idx = lengths - 1
+    if offsets is not None:
+        idx = idx - jnp.asarray(offsets, jnp.int32)
+    idx = jnp.clip(idx, 0, s_total - 1)
     last = jnp.take_along_axis(
         x, jnp.broadcast_to(idx[:, None, None], (b, 1, x.shape[-1])), axis=1)
     logits = _head(params, last, cfg)
@@ -531,3 +617,39 @@ def prefill_into_slots(params: PyTree, batch: Dict[str, Array],
     scratch = init_cache(cfg, n, max_len)
     logits, rows = prefill(params, batch, cfg, scratch, lengths=lengths)
     return logits, scatter_cache_rows(cache, rows, slot_ids)
+
+
+def prefill_into_pages(params: PyTree, batch: Dict[str, Array],
+                       cfg: ModelConfig, cache: ModelCache,
+                       lengths: Array, offsets: Array, slot_ids: Array
+                       ) -> Tuple[Array, ModelCache]:
+    """Bucketed batched SUFFIX prefill straight into the shared page pool
+    (DESIGN.md §8). Row r holds the tokens of slot ``slot_ids[r]`` from
+    absolute position ``offsets[r]`` (its radix-matched, page-aligned
+    prefix is already resident in shared pages) up to total valid length
+    ``lengths[r]``; the row computes only the suffix, attends through its
+    page table (prefix K/V read, never copied), and writes the new K/V
+    into the pages the engine assigned it. Unlike the dense path there is
+    no scratch cache and no row scatter — the pools ARE the slot cache.
+    Out-of-range slot ids are dummy admission rows: their page-table view
+    is all-trash and their lengths are 0, so they write nowhere and (MoE)
+    route no real tokens. Returns (last-valid logits, updated cache)."""
+    slots = cache.lengths.shape[0]
+    ids = jnp.asarray(slot_ids, jnp.int32)
+    safe = jnp.clip(ids, 0, slots - 1)
+    real = (ids >= 0) & (ids < slots)
+
+    def row_view(g):
+        pt = jnp.where(real[None, :, None], g.pt[:, safe], 0)
+        return g._replace(pt=pt)
+
+    rows = ModelCache(groups=tuple(row_view(g) for g in cache.groups),
+                      lengths=jnp.asarray(lengths, jnp.int32))
+    logits, upd = prefill(params, batch, cfg, rows, lengths=lengths,
+                          offsets=offsets)
+    # Keep the full (slots,) page tables; take the updated pools.
+    groups = tuple(ug._replace(pt=g.pt)
+                   for ug, g in zip(upd.groups, cache.groups))
+    new_lengths = cache.lengths.at[ids].set(
+        jnp.asarray(lengths, jnp.int32), mode="drop")
+    return logits, ModelCache(groups=groups, lengths=new_lengths)

@@ -18,7 +18,7 @@ router (same FLOP/communication structure, simpler update rule).
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +59,17 @@ def capacity(n_tokens: int, cfg: ModelConfig) -> int:
     return max(8, -(-c // 8) * 8)  # pad to multiple of 8 for layout sanity
 
 
+def capacity_dynamic(n_tokens: Array, cfg: ModelConfig) -> Array:
+    """Traced mirror of :func:`capacity` for a runtime token count —
+    serving prefill computes the effective capacity over the REAL (valid)
+    tokens of a padded admission batch while the dispatch buffer keeps
+    its static shape (capacity over the padded count, an upper bound)."""
+    mo = cfg.moe
+    c = jnp.ceil(n_tokens.astype(jnp.float32) * mo.top_k / mo.num_experts
+                 * mo.capacity_factor).astype(jnp.int32)
+    return jnp.maximum(8, ((c + 7) // 8) * 8)
+
+
 def route(logits: Array, cfg: ModelConfig) -> Tuple[Array, Array, Dict[str, Array]]:
     """logits (T, E) -> (weights (T,k), idx (T,k) int32, aux losses)."""
     mo = cfg.moe
@@ -76,52 +87,74 @@ def route(logits: Array, cfg: ModelConfig) -> Tuple[Array, Array, Dict[str, Arra
     return weights, idx, {"lb_loss": lb, "z_loss": z}
 
 
-def dispatch_indices(idx: Array, n_tokens: int, cap: int, n_experts: int):
+def dispatch_indices(idx: Array, n_tokens: int, cap: int, n_experts: int,
+                     cap_eff: Optional[Array] = None):
     """Sort-based dispatch bookkeeping.
 
     Returns (slot (T*k,), order (T*k,), keep (T*k,)) where slot is the
     destination row in the (E*C) expert buffer for the a-th sorted
     assignment; dropped (over-capacity) assignments get slot E*C (overflow
     row). `order` maps sorted position -> original assignment index.
+
+    ``idx`` may carry the SENTINEL expert id ``n_experts`` for masked
+    (pad) tokens: sentinels sort behind every real expert, count toward
+    no expert's occupancy, and are never kept — pads can't displace real
+    tokens. ``cap_eff`` (traced int32, <= cap) optionally tightens the
+    keep threshold to the real-token capacity while buffer shapes stay
+    static at ``cap``.
     """
     flat = idx.reshape(-1)  # (T*k,)
     order = jnp.argsort(flat, stable=True)
     sorted_e = flat[order]
-    counts = jnp.zeros((n_experts,), jnp.int32).at[flat].add(1)
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat].add(
+        1, mode="drop")  # sentinel assignments count nowhere
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(counts)[:-1]])
+                               jnp.cumsum(counts)[:-1], jnp.zeros((1,),
+                                                                  jnp.int32)])
     pos = jnp.arange(flat.shape[0], dtype=jnp.int32) - offsets[sorted_e]
-    keep = pos < cap
+    limit = cap if cap_eff is None else jnp.minimum(cap_eff, cap)
+    keep = (pos < limit) & (sorted_e < n_experts)
     slot = jnp.where(keep, sorted_e * cap + pos, n_experts * cap)
     return slot, order, keep
 
 
-def moe_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig
+def moe_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig,
+              token_mask: Optional[Array] = None
               ) -> Tuple[Array, Dict[str, Array]]:
     """x (B, S, D) -> (y, aux). Dispatch is over the flattened token dim,
-    optionally scanned in chunks (MoEConfig.dispatch_chunk, §Perf I-5)."""
+    optionally scanned in chunks (MoEConfig.dispatch_chunk, §Perf I-5).
+
+    ``token_mask`` (B, S) bool marks REAL tokens in a padded serving
+    batch: masked-out tokens are routed to a sentinel expert (they never
+    consume capacity) and the effective capacity is computed over the
+    real count — prefill routing is invariant to admission padding."""
     mo = cfg.moe
     b, s, d = x.shape
     t = b * s
     xf = x.reshape(t, d)
+    mf = None if token_mask is None else token_mask.reshape(t)
     ck = mo.dispatch_chunk
     if ck and t > ck and t % ck == 0:
         xc = xf.reshape(t // ck, ck, d)
+        mc = None if mf is None else mf.reshape(t // ck, ck)
 
-        def body(_, xi):
-            yi, auxi = _moe_tokens(params, xi, cfg)
+        def body(_, xs):
+            xi, mi = xs if mf is not None else (xs, None)
+            yi, auxi = _moe_tokens(params, xi, cfg, token_mask=mi)
             return None, (yi, auxi)
 
         with timefloats.census_scale(t // ck):  # §6 op-census weighting
-            _, (yc, auxc) = jax.lax.scan(body, None, xc)
+            _, (yc, auxc) = jax.lax.scan(
+                body, None, xc if mf is None else (xc, mc))
         aux = {k: jnp.mean(v) for k, v in auxc.items()}
         y = yc.reshape(t, d)
         return y.reshape(b, s, d).astype(cfg.activation_dtype), aux
-    y, aux = _moe_tokens(params, xf, cfg)
+    y, aux = _moe_tokens(params, xf, cfg, token_mask=mf)
     return y.reshape(b, s, d).astype(cfg.activation_dtype), aux
 
 
-def _moe_tokens(params: Dict[str, Array], xf: Array, cfg: ModelConfig
+def _moe_tokens(params: Dict[str, Array], xf: Array, cfg: ModelConfig,
+                token_mask: Optional[Array] = None
                 ) -> Tuple[Array, Dict[str, Array]]:
     """(T, D) tokens -> (T, D) output + aux; one dispatch buffer."""
     mo = cfg.moe
@@ -131,7 +164,16 @@ def _moe_tokens(params: Dict[str, Array], xf: Array, cfg: ModelConfig
     weights, idx, aux = route(logits, cfg)
 
     cap = capacity(t, cfg)
-    slot, order, keep = dispatch_indices(idx, t, cap, mo.num_experts)
+    cap_eff = None
+    if token_mask is not None:
+        # Pads route to the sentinel expert (no capacity consumed) and the
+        # keep threshold follows the REAL token count — serving prefill
+        # capacity no longer depends on admission padding (PR 4 caveat).
+        idx = jnp.where(token_mask[:, None], idx, mo.num_experts)
+        n_real = jnp.sum(token_mask.astype(jnp.int32))
+        cap_eff = capacity_dynamic(n_real, cfg)
+    slot, order, keep = dispatch_indices(idx, t, cap, mo.num_experts,
+                                         cap_eff=cap_eff)
     tok_of_sorted = order // mo.top_k
 
     # Gather tokens into the (E, C, D) expert buffer (overflow row dropped).

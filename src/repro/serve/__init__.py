@@ -1,5 +1,8 @@
-"""serve subpackage: the fused device-resident engine (DESIGN.md §7) plus
+"""serve subpackage: the fused device-resident engine (DESIGN.md §7), the
+paged pool + radix prefix cache it can virtualize memory with (§8), plus
 the host-driven legacy baseline it is pinned against."""
 from repro.serve.engine import Engine, EngineState, sample_tokens  # noqa: F401
+from repro.serve.kvpool import TRASH_PAGE, PagePool  # noqa: F401
 from repro.serve.legacy import LegacyEngine  # noqa: F401
+from repro.serve.radix import RadixCache  # noqa: F401
 from repro.serve.request import Finished, Request  # noqa: F401

@@ -1,5 +1,6 @@
 """Device-resident continuous batching: the whole engine step is (at most)
-two jitted device calls (DESIGN.md §7).
+two jitted device calls (DESIGN.md §7), with an optional memory-virtualized
+paged cache + radix prefix reuse on top (DESIGN.md §8).
 
 The seed engine (now `serve/legacy.py`) was host-driven: one prefill
 compile per distinct prompt length, host cache splicing, per-slot Python
@@ -22,6 +23,23 @@ device:
   new tokens and the done mask, fetched with a single `jax.device_get`
   (`host_transfers` counts them; tests pin one per step).
 
+**Paged mode** (`paged=True`, attention/MLA families): the dense
+(slots, max_len) cache rows are replaced by a fixed inventory of
+``page_size``-token pages (`serve/kvpool.PagePool`) addressed through
+per-slot page tables inside the same EngineState cache pytree. Admission
+consults a host radix tree over token prefixes (`serve/radix.RadixCache`):
+the longest page-aligned cached prefix is BORROWED (page-table entries
+point at the shared pages — nothing is copied) and prefill runs only the
+suffix, bucketed by suffix length. The hardware twin charges only the
+executed suffix call and credits the skipped crossbar reads
+(`prefix_saved_pj` in `hw_telemetry()`); pool occupancy / hit-rate /
+eviction counters ride `stats()`. Greedy token streams stay bit-identical
+to the dense engine, which remains the A/B baseline. (MoE scope note:
+expert-capacity drops depend on the whole wave's routing, so the
+identity holds for MoE configs only while routing stays drop-free —
+suffix prefill sees a different dispatch batch than a full re-prefill
+would; DESIGN.md §8.)
+
 `compile_cache_stats()` exposes per-callable trace counts so tests (and
 the serve benchmark) can assert the recompile contract instead of hoping.
 
@@ -29,9 +47,9 @@ Deviations from the legacy engine (documented in DESIGN.md §7): requests
 can finish at prefill (max_new_tokens=1 yields exactly 1 token where the
 legacy engine overshot to 2; EOS is also checked on the prefill token),
 temperature>0 sampling uses per-slot counter-based keys instead of one
-host-split stream, and MoE prefill routes the padded batch (capacity is
-computed over bucket-padded tokens, so over-capacity drops can differ
-from exact-length prefill).
+host-split stream. MoE prefill routes the padded batch but computes
+capacity over the REAL tokens (dummy admission rows carry length 0 and
+route nothing — the PR 4 padded-capacity caveat is fixed and pinned).
 """
 from __future__ import annotations
 
@@ -103,14 +121,44 @@ def bucket_for(plen: int, cap: int, min_bucket: int = 8) -> int:
     return min(b, cap)
 
 
+def _admit_update(state: EngineState, cache, logits, ids, temps, budgets,
+                  tags, *, key, eos, slots):
+    """Shared tail of every prefill wave (dense and paged): sample the
+    first token, apply the admission state updates at ``ids`` (dummy rows
+    drop), and report per-row done masks."""
+    lg = logits[:, 0]
+    tok = sample_tokens(lg, temps, key, tags,
+                        jnp.zeros((slots,), jnp.int32))
+    first = tok[..., 0] if tok.ndim == 2 else tok
+    rem = budgets - 1
+    # Admission asserts tot < max_len, so one decode write (at position
+    # tot) always fits: cache-full can only trigger in decode, exactly
+    # like the legacy engine.
+    done = rem <= 0
+    if eos is not None:
+        done = done | (first == eos)
+    tok_b = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
+    new = EngineState(
+        cache=cache,
+        last_token=state.last_token.at[ids].set(tok_b, mode="drop"),
+        active=state.active.at[ids].set(~done, mode="drop"),
+        temp=state.temp.at[ids].set(temps, mode="drop"),
+        remaining=state.remaining.at[ids].set(rem, mode="drop"),
+        counter=state.counter.at[ids].set(1, mode="drop"),
+        tag=state.tag.at[ids].set(tags, mode="drop"))
+    return new, {"token": tok, "done": done}
+
+
 class Engine:
-    """Fixed-slot continuous batching with a fused device step."""
+    """Fixed-slot continuous batching with a fused device step; optional
+    paged cache pool + radix prefix reuse (``paged=True``)."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
                  seed: int = 0, track_energy: bool = True,
                  decode_fn: Optional[Callable] = None,
-                 min_bucket: int = 8):
+                 min_bucket: int = 8, paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -127,9 +175,35 @@ class Engine:
         self._decode_fn = decode_fn or (
             lambda p, c, t: model_lib.decode_step(p, c, t, cfg))
 
+        self.paged = paged
+        if paged:
+            from repro.serve.kvpool import PagePool
+            from repro.serve.radix import RadixCache
+
+            assert model_lib.paged_supported(cfg), \
+                "paged cache covers the attention/MLA families (DESIGN §8)"
+            assert max_len % page_size == 0
+            self.page_size = page_size
+            self.n_ptab = max_len // page_size
+            if num_pages is None:
+                # Dense-equivalent capacity (+ the reserved trash page);
+                # the virtualization win is allocation by NEED, not rows.
+                num_pages = slots * self.n_ptab + 1
+            self.pool = PagePool(num_pages, page_size)
+            self.radix = RadixCache(self.pool)
+            self._slot_pages: Dict[int, List[int]] = {}
+            self._prefix_hits = 0
+            self._prefix_tokens = 0
+            self._prompt_tokens = 0
+            cache = model_lib.init_paged_cache(
+                cfg, slots, max_len, page_size=page_size,
+                num_pages=num_pages)
+        else:
+            cache = model_lib.init_cache(cfg, slots, max_len)
+
         z_i = jnp.zeros((slots,), jnp.int32)
         self.state = EngineState(
-            cache=model_lib.init_cache(cfg, slots, max_len),
+            cache=cache,
             last_token=jnp.zeros((slots, 1) + self._tok_trail, jnp.int32),
             active=jnp.zeros((slots,), bool),
             temp=jnp.zeros((slots,), jnp.float32),
@@ -203,33 +277,30 @@ class Engine:
             tot = plens + prefix  # per-row valid length incl. prefix
             logits, cache = model_lib.prefill_into_slots(
                 params, batch, cfg, state.cache, tot, ids, max_len=max_len)
-            lg = logits[:, 0]
-            tok = sample_tokens(lg, temps, key, tags,
-                                jnp.zeros((slots,), jnp.int32))
-            first = tok[..., 0] if tok.ndim == 2 else tok
-            rem = budgets - 1
-            # Admission asserts tot < max_len, so one decode write (at
-            # position tot) always fits: cache-full can only trigger in
-            # decode, exactly like the legacy engine.
-            done = rem <= 0
-            if eos is not None:
-                done = done | (first == eos)
-            tok_b = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
-            new = EngineState(
-                cache=cache,
-                last_token=state.last_token.at[ids].set(tok_b, mode="drop"),
-                active=state.active.at[ids].set(~done, mode="drop"),
-                temp=state.temp.at[ids].set(temps, mode="drop"),
-                remaining=state.remaining.at[ids].set(rem, mode="drop"),
-                counter=state.counter.at[ids].set(1, mode="drop"),
-                tag=state.tag.at[ids].set(tags, mode="drop"))
-            return new, {"token": tok, "done": done}
+            return _admit_update(state, cache, logits, ids, temps, budgets,
+                                 tags, key=key, eos=eos, slots=slots)
+
+        return fn
+
+    def _make_prefill_paged(self, sb: int):
+        cfg, eos = self.cfg, self.eos_id
+        slots, key = self.slots, self._key
+
+        def fn(params, state: EngineState, tokens, tots, offsets, ids,
+               temps, budgets, tags):
+            batch = {"tokens": tokens}
+            logits, cache = model_lib.prefill_into_pages(
+                params, batch, cfg, state.cache, tots, offsets, ids)
+            return _admit_update(state, cache, logits, ids, temps, budgets,
+                                 tags, key=key, eos=eos, slots=slots)
 
         return fn
 
     def _get_prefill(self, sb: int):
         if sb not in self._prefill:
-            self._prefill_raw[sb] = self._make_prefill(sb)
+            maker = (self._make_prefill_paged if self.paged
+                     else self._make_prefill)
+            self._prefill_raw[sb] = maker(sb)
             self._prefill[sb] = counting_jit(
                 self._prefill_raw[sb], self._traces, f"prefill[{sb}]")
         return self._prefill_raw[sb], self._prefill[sb]
@@ -244,58 +315,148 @@ class Engine:
         # vlm patches).
         return bucket_for(plen, self.max_len - self._prefix, self.min_bucket)
 
+    # -- paged bookkeeping ---------------------------------------------------
+    def _try_reserve(self, req: Request):
+        """Radix-match the prompt (pins shared pages) and allocate the
+        non-shared remainder, evicting LRU tree leaves on shortfall.
+        Returns (skip, pages) or None (leave the request queued)."""
+        ps = self.page_size
+        plen = len(req.prompt)
+        pages, skip = self.radix.match(req.prompt)
+        last_write = min(plen + req.max_new_tokens - 2, self.max_len - 1)
+        need = last_write // ps + 1
+        assert need > len(pages)  # >=1 suffix token always prefills
+        # all_or_nothing: an admission that fails anyway must not destroy
+        # cached prefixes the next requests would have reused.
+        fresh = self.pool.alloc(
+            need - len(pages),
+            evict=lambda k: self.radix.evict(k, all_or_nothing=True))
+        if fresh is None:
+            self.radix.release(pages)
+            return None
+        return skip, pages + fresh
+
+    def _assign_page_tables(self, admits) -> None:
+        rows = np.zeros((len(admits), self.n_ptab), np.int32)
+        ids = np.zeros((len(admits),), np.int32)
+        for r, (slot, _req, _skip, pages) in enumerate(admits):
+            ids[r] = slot
+            rows[r, : len(pages)] = pages
+        self.state = self.state._replace(
+            cache=model_lib.set_page_rows(self.state.cache, ids, rows))
+
+    def _teardown_slots(self, freed: List[int]) -> None:
+        """Reset freed slots' page tables to all-trash BEFORE the next
+        decode (a stale slot keeps writing; its pages may be reallocated)
+        and drop their page references."""
+        rows = np.zeros((len(freed), self.n_ptab), np.int32)
+        self.state = self.state._replace(
+            cache=model_lib.set_page_rows(
+                self.state.cache, np.asarray(freed, np.int32), rows))
+        for slot in freed:
+            for p in self._slot_pages.pop(slot, []):
+                self.pool.release(p)
+
+    def _register_admit(self, req: Request, skip: int, pages) -> None:
+        ps = self.page_size
+        self._prompt_tokens += len(req.prompt)
+        self._prefix_tokens += skip
+        if skip:
+            self._prefix_hits += 1
+        n_full = len(req.prompt) // ps
+        if n_full:
+            self.radix.insert(req.prompt[: n_full * ps], pages[:n_full])
+
+    def _zero_wave_args(self, sb: int):
+        """Host-side zero argument set for one paged bucket shape — used
+        only to trace the no-prefix-hit cost of a bucket (energy credit)."""
+        z = np.zeros((self.slots,), np.int32)
+        return (np.zeros((self.slots, sb) + self._tok_trail, np.int32),
+                z, z, np.full((self.slots,), self.slots, np.int32),
+                np.zeros((self.slots,), np.float32),
+                np.ones((self.slots,), np.int32), z)
+
     def step(self) -> List[Finished]:
         """One engine step: admit (bucketed batched prefill) + one fused
         decode_and_sample; a single device→host transfer of the new tokens
         and the done mask at the end."""
         params = self.params
         had_active = bool(self.active)
+        freed_slots: List[int] = []
         # 1) admit queued requests into free slots, grouped by bucket
         free = [i for i in range(self.slots) if i not in self.active]
-        admits: List[Tuple[int, Request]] = []
+        admits: List[Tuple[int, Request, int, Optional[List[int]]]] = []
         while free and self.queue:
-            admits.append((free.pop(0), self.queue.pop(0)))
+            req = self.queue[0]
+            if self.paged:
+                grant = self._try_reserve(req)
+                if grant is None:
+                    if not had_active and not admits:
+                        raise ValueError(
+                            "request needs more pages than the pool holds "
+                            f"(prompt {len(req.prompt)} + budget "
+                            f"{req.max_new_tokens}, "
+                            f"{self.pool.total_pages} pages)")
+                    break  # pool exhausted: head-of-line waits for frees
+                skip, pages = grant
+            else:
+                skip, pages = 0, None
+            self.queue.pop(0)
+            admits.append((free.pop(0), req, skip, pages))
         waves = []
-        by_bucket: Dict[int, List[Tuple[int, Request]]] = {}
-        for slot, req in admits:
+        by_bucket: Dict[int, list] = {}
+        for slot, req, skip, pages in admits:
             assert len(req.prompt) + self._prefix < self.max_len, \
                 "prompt (incl. prefix) longer than cache"
-            by_bucket.setdefault(self._bucket(len(req.prompt)), []).append(
-                (slot, req))
+            sb = self._bucket(len(req.prompt) - skip)
+            by_bucket.setdefault(sb, []).append((slot, req, skip, pages))
+        if self.paged and admits:
+            self._assign_page_tables(admits)
         for sb in sorted(by_bucket):
             group = by_bucket[sb]
             tokens = np.zeros((self.slots, sb) + self._tok_trail, np.int32)
-            plens = np.ones((self.slots,), np.int32)
+            plens = np.zeros((self.slots,), np.int32)   # dummy rows: len 0
+            offs = np.zeros((self.slots,), np.int32)
             ids = np.full((self.slots,), self.slots, np.int32)  # dummy: drop
             temps = np.zeros((self.slots,), np.float32)
             budgets = np.ones((self.slots,), np.int32)
             tags = np.zeros((self.slots,), np.int32)
-            for r, (slot, req) in enumerate(group):
+            for r, (slot, req, skip, _pages) in enumerate(group):
                 p = np.asarray(req.prompt)
-                tokens[r, : len(p)] = p
+                tokens[r, : len(p) - skip] = p[skip:]
                 plens[r] = len(p)
+                offs[r] = skip
                 ids[r] = slot
                 temps[r] = req.temperature
                 budgets[r] = req.max_new_tokens
                 tags[r] = req.uid & 0x7FFFFFFF
             fn_raw, fn = self._get_prefill(sb)
+            if self.paged:
+                args = (tokens, plens, offs, ids, temps, budgets, tags)
+            else:
+                args = (tokens, plens, ids, temps, budgets, tags)
             if self._hw is not None:
+                mode = "paged" if self.paged else "dense"
                 pj = self._hw.prefill_bucket_pj(
-                    (sb, self.slots), fn_raw, params, self.state, tokens,
-                    plens, ids, temps, budgets, tags)
+                    (sb, self.slots, mode), fn_raw, params, self.state,
+                    *args)
                 share = self._hw.on_prefill_wave(pj, len(group))
-                for _, req in group:
+                for _, req, _, _ in group:
                     req.energy_pj += share
-            self.state, pout = fn(params, self.state, tokens, plens, ids,
-                                  temps, budgets, tags)
+                if self.paged:
+                    self._credit_prefix_hits(group, sb, pj)
+            self.state, pout = fn(params, self.state, *args)
             waves.append((group, pout))
-            for slot, req in group:
+            for slot, req, skip, pages in group:
                 self.active[slot] = req
+                if self.paged:
+                    self._slot_pages[slot] = list(pages)
+                    self._register_admit(req, skip, pages)
         # 2) one fused decode_and_sample over every slot. Skip it when the
         # host already knows no slot can decode (nothing was active and
         # every admit exhausts its budget at prefill).
         dec = None
-        if had_active or any(r.max_new_tokens > 1 for _, r in admits):
+        if had_active or any(r.max_new_tokens > 1 for _, r, _, _ in admits):
             self.steps += 1
             self.state, dec = self._step(params, self.state)
         if not waves and dec is None:
@@ -306,11 +467,12 @@ class Engine:
         now = time.monotonic()
         finished: List[Finished] = []
         for (group, _), out in zip(waves, got_waves):
-            for r, (slot, req) in enumerate(group):
+            for r, (slot, req, _skip, _pages) in enumerate(group):
                 self._append_token(req, out["token"][r])
                 if bool(out["done"][r]):
                     finished.append(self._finish(req, now))
                     del self.active[slot]
+                    freed_slots.append(slot)
         if got_dec is not None:
             # Decode energy books AFTER the prefill done-masks are applied
             # (pure host arithmetic — order vs the device call is free), so
@@ -326,7 +488,28 @@ class Engine:
                 if bool(got_dec["done"][slot]):
                     finished.append(self._finish(req, now))
                     del self.active[slot]
+                    freed_slots.append(slot)
+        if self.paged and freed_slots:
+            self._teardown_slots(freed_slots)
         return finished
+
+    def _credit_prefix_hits(self, group, sb: int, pj_exec: float) -> None:
+        """Energy-credit rule (DESIGN §8): a prefix hit is charged the
+        executed suffix-bucket call only; the credit is the cost delta to
+        the bucket the FULL prompt would have needed (0 when the pow2
+        bucket doesn't shrink — bucketing quantizes real savings)."""
+        for _slot, req, skip, _pages in group:
+            if skip <= 0:
+                continue
+            fsb = self._bucket(len(req.prompt))
+            saved = 0.0
+            if fsb != sb:
+                full_raw, _ = self._get_prefill(fsb)
+                pj_full = self._hw.prefill_bucket_pj(
+                    (fsb, self.slots, "paged"), full_raw, self.params,
+                    self.state, *self._zero_wave_args(fsb))
+                saved = max(pj_full - pj_exec, 0.0) / self.slots
+            self._hw.on_prefix_hit(saved, skip)
 
     def _append_token(self, req: Request, tok) -> None:
         req.generated.append(int(tok if np.ndim(tok) == 0 else tok[0]))
@@ -368,7 +551,7 @@ class Engine:
         def pct(p: float) -> float:
             return percentile(self._latencies, p)
 
-        return {
+        out = {
             "steps": float(self.steps),
             "host_transfers": float(self.host_transfers),
             "finished": float(self._finished_count),
@@ -379,10 +562,22 @@ class Engine:
                 self.compile_cache_stats()["prefill_total"]),
             "decode_compiles": float(self._traces.get("decode_and_sample", 0)),
         }
+        if self.paged:
+            out.update({
+                "pool_pages_total": float(self.pool.total_pages),
+                "pool_pages_in_use": float(self.pool.pages_in_use),
+                "pool_pages_free": float(self.pool.free_pages),
+                "radix_hit_rate": (self._prefix_tokens
+                                   / max(self._prompt_tokens, 1)),
+                "radix_hits": float(self._prefix_hits),
+                "radix_nodes": float(self.radix.nodes),
+                "radix_evictions": float(self.radix.evictions),
+            })
+        return out
 
     def hw_telemetry(self) -> Optional[Dict[str, float]]:
         """Fleet-style energy/utilization aggregates (None when the twin is
         off): attributed vs total crossbar energy, the idle remainder
-        (empty decode slots + dummy admission-wave prefill rows), and
-        decode slot utilization."""
+        (empty decode slots + dummy admission-wave prefill rows), decode
+        slot utilization, and (paged) the prefix-hit pJ credit."""
         return self._hw.telemetry() if self._hw is not None else None

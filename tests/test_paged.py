@@ -1,0 +1,449 @@
+"""Paged cache pool + radix prefix cache (DESIGN.md §8).
+
+Contracts under test:
+
+- **Pool/radix invariants** (hypothesis when installed, deterministic
+  workloads otherwise): pages are conserved (``in_use + free == total``),
+  never double-freed, never leaked; matched prefixes are page-aligned,
+  pinned while borrowed, and eviction only reclaims tree-only pages.
+- **Paged-vs-dense bit-identity**: greedy token streams from the paged
+  engine equal the dense fused engine's on prefix-sharing streams across
+  the qwen3 (attention), MLA, and MoE+MLA families — prefix reuse changes
+  the schedule and the energy, never the tokens.
+- **Gather kernel oracle**: the Pallas page gather (interpret mode on
+  this container) is bit-identical to the jnp fallback.
+- **MoE prefill capacity** (PR 4 caveat, fixed): router capacity is
+  computed over REAL tokens, so real-row prefill logits are invariant to
+  dummy admission rows.
+- **Energy credit**: on a prefix-heavy stream the paged engine's
+  attributed prefill pJ drops vs the dense engine and the skipped reads
+  surface as ``prefix_saved_pj``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dependency (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.configs.base import MLAConfig
+from repro.kernels.paged import gather_pages_pallas, gather_pages_ref
+from repro.models import model as M
+from repro.serve.engine import Engine
+from repro.serve.kvpool import TRASH_PAGE, PagePool
+from repro.serve.radix import RadixCache
+from repro.serve.request import Request
+
+
+def small_cfg(arch="qwen3-0.6b", **over):
+    cfg = reduced_for_smoke(get_config(arch))
+    over = {"quant": "none", "n_layers": 2, **over}
+    return dataclasses.replace(cfg, **over)
+
+
+def mla_cfg():
+    return small_cfg(mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                   qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                   v_head_dim=16))
+
+
+def prefix_stream(cfg, n=6, shared_len=21, seed=1, max_new=4):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, shared_len).astype(np.int32)
+    out = []
+    for uid in range(n):
+        tail = rng.integers(0, cfg.vocab_size, 2 + uid).astype(np.int32)
+        out.append(Request(uid=uid, prompt=np.concatenate([shared, tail]),
+                           max_new_tokens=max_new))
+    return out
+
+
+def drain(params, cfg, reqs, *, paged, slots=2, max_len=64, **kw):
+    eng = Engine(params, cfg, slots=slots, max_len=max_len, paged=paged, **kw)
+    for r in reqs:
+        eng.submit(dataclasses.replace(r, generated=[],
+                                       prompt=r.prompt.copy()))
+    done = {f.uid: f.tokens for f in eng.run_until_drained()}
+    return eng, done
+
+
+# ---------------------------------------------------------------------------
+# Gather kernel oracle.
+# ---------------------------------------------------------------------------
+
+
+def test_gather_pages_pallas_matches_ref():
+    """Pallas page gather (interpret mode) == jnp fallback, bitwise —
+    including repeated and trash (0) page ids."""
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.normal(size=(7, 4, 3, 2)).astype(np.float32))
+    pt = jnp.asarray(rng.integers(0, 7, size=(3, 5)).astype(np.int32))
+    pt = pt.at[0, 0].set(0).at[1, 2].set(pt[2, 3])  # trash + duplicate
+    np.testing.assert_array_equal(
+        np.asarray(gather_pages_pallas(pool, pt)),
+        np.asarray(gather_pages_ref(pool, pt)))
+
+
+# ---------------------------------------------------------------------------
+# Pool / radix invariants.
+# ---------------------------------------------------------------------------
+
+
+def _check_conserved(pool):
+    assert pool.conserved(), (
+        f"in_use {pool.pages_in_use} + free {pool.free_pages} "
+        f"!= total {pool.total_pages}")
+
+
+def test_pool_alloc_release_conservation():
+    pool = PagePool(num_pages=9, page_size=4)
+    assert pool.total_pages == 8 and pool.free_pages == 8
+    a = pool.alloc(3)
+    b = pool.alloc(5)
+    assert pool.alloc(1) is None  # exhausted, no evictor
+    assert pool.pages_in_use == 8 and TRASH_PAGE not in a + b
+    pool.retain(a[0])
+    assert not pool.release(a[0]) and pool.release(a[0])  # ref 2 -> 1 -> 0
+    for p in a[1:] + b:
+        pool.release(p)
+    _check_conserved(pool)
+    assert pool.free_pages == 8
+    with pytest.raises(AssertionError):
+        pool.release(a[0])  # double free
+
+
+def test_radix_match_insert_evict_cycle():
+    pool = PagePool(num_pages=9, page_size=4)
+    tree = RadixCache(pool)
+    toks = np.arange(10, dtype=np.int32)
+    # nothing cached: match pins nothing, caps at len-1 page-aligned
+    pages, skip = tree.match(toks)
+    assert pages == [] and skip == 0
+    own = pool.alloc(3)  # request owns pages for positions [0, 10+]
+    tree.insert(toks[:8], own[:2])  # two FULL pages indexed
+    _check_conserved(pool)
+    # a second identical prompt borrows the shared pages, pinned
+    pages, skip = tree.match(toks)
+    assert pages == own[:2] and skip == 8
+    assert pool.refcount(own[0]) == 3  # owner + tree + borrower
+    tree.release(pages)
+    # owner leaves: tree keeps the indexed pages alive, tail page frees
+    for p in own:
+        pool.release(p)
+    assert pool.refcount(own[0]) == 1 and pool.refcount(own[2]) == 0
+    _check_conserved(pool)
+    # eviction reclaims tree-only pages (deepest-first), LRU order
+    freed = tree.evict(2)
+    assert freed == 2 and tree.nodes == 0
+    _check_conserved(pool)
+    assert pool.free_pages == pool.total_pages
+
+
+def test_radix_match_never_full_prompt():
+    """At least one token always prefills: a fully-cached prompt still
+    matches at most len-1 tokens (page-aligned)."""
+    pool = PagePool(num_pages=9, page_size=2)
+    tree = RadixCache(pool)
+    toks = np.asarray([5, 6, 7, 8], np.int32)
+    own = pool.alloc(2)
+    tree.insert(toks, own)
+    pages, skip = tree.match(toks)
+    assert skip == 2 and pages == own[:1]  # (4-1)//2 = 1 page
+    tree.release(pages)
+    for p in own:
+        pool.release(p)
+
+
+def test_evict_all_or_nothing_preserves_prefix_on_infeasible_admission():
+    """An admission the pool cannot satisfy even after full eviction must
+    not destroy cached prefixes (the engine's evictor is all-or-nothing);
+    best-effort eviction still reclaims when asked directly."""
+    pool = PagePool(num_pages=5, page_size=2)
+    tree = RadixCache(pool)
+    held = pool.alloc(3)  # live slots pin 3 of the 4 usable pages
+    own = pool.alloc(1)
+    tree.insert(np.asarray([1, 2], np.int32), own)
+    pool.release(own[0])  # tree-only page: the evictable set is {own[0]}
+    got = pool.alloc(2, evict=lambda k: tree.evict(k, all_or_nothing=True))
+    assert got is None and tree.nodes == 1  # prefix survived the failure
+    assert pool.alloc(1, evict=lambda k: tree.evict(
+        k, all_or_nothing=True)) == own  # feasible: evicts and reuses
+    assert tree.nodes == 0
+    for p in held + own:
+        pool.release(p)
+    _check_conserved(pool)
+
+
+def test_radix_evictable_pages_respects_pinned_subtrees():
+    """A node above a pinned descendant is not counted evictable — only
+    whole tree-only subtrees can be peeled leaf by leaf."""
+    pool = PagePool(num_pages=9, page_size=2)
+    tree = RadixCache(pool)
+    own = pool.alloc(3)
+    tree.insert(np.asarray([1, 2, 3, 4, 5, 6], np.int32), own)
+    pages, _ = tree.match(np.asarray([1, 2, 3, 4, 9], np.int32))  # pins 2
+    for p in own:
+        pool.release(p)
+    assert tree.evictable_pages() == 1  # only the unpinned deepest node
+    tree.release(pages)
+    assert tree.evictable_pages() == 3
+    assert tree.evict(3) == 3
+    _check_conserved(pool)
+
+
+def test_radix_evict_keeps_borrowed_pages():
+    pool = PagePool(num_pages=5, page_size=2)
+    tree = RadixCache(pool)
+    own = pool.alloc(2)
+    tree.insert(np.asarray([1, 2, 3, 4], np.int32), own)
+    pages, _ = tree.match(np.asarray([1, 2, 3, 4, 9], np.int32))
+    for p in own:
+        pool.release(p)  # owner gone; borrower + tree remain on pages[:2]
+    assert tree.evict(4) == 0  # borrowed pages are not evictable
+    tree.release(pages)
+    assert tree.evict(4) == 2
+    _check_conserved(pool)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(
+    st.tuples(st.lists(st.integers(0, 2), min_size=1, max_size=12),
+              st.integers(1, 4)),
+    min_size=1, max_size=12))
+def test_radix_pool_invariants_random_workload(reqs):
+    """Random request lifecycles over a tiny alphabet (maximal prefix
+    collisions): after every admit/finish and at the end — with LRU
+    eviction pressure — no page leaks, none double-frees, and the pool
+    conserves. Mirrors the engine's _try_reserve/teardown protocol."""
+    ps = 2
+    pool = PagePool(num_pages=8, page_size=ps)
+    tree = RadixCache(pool)
+    live = []
+    for i, (toks, max_new) in enumerate(reqs):
+        toks = np.asarray(toks, np.int32)
+        pages, skip = tree.match(toks)
+        last = len(toks) + max_new - 2
+        need = max(last, len(toks) - 1) // ps + 1
+        fresh = pool.alloc(need - len(pages), evict=tree.evict)
+        if fresh is None:
+            tree.release(pages)  # admission fails; nothing may leak
+        else:
+            pages = pages + fresh
+            n_full = len(toks) // ps
+            if n_full:
+                tree.insert(toks[: n_full * ps], pages[:n_full])
+            live.append(pages)
+        _check_conserved(pool)
+        if i % 2 == 1 and live:  # finish the oldest live request
+            for p in live.pop(0):
+                pool.release(p)
+            _check_conserved(pool)
+    for pages in live:
+        for p in pages:
+            pool.release(p)
+    _check_conserved(pool)
+    # a full eviction pass returns every page to the free list
+    tree.evict(pool.total_pages)
+    assert pool.free_pages == pool.total_pages
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=2, max_size=16),
+       st.lists(st.integers(0, 3), min_size=2, max_size=16))
+def test_radix_match_is_longest_common_page_prefix(a, b):
+    """After inserting prompt A's full pages, matching prompt B returns
+    exactly the page-aligned longest common prefix (capped at len(B)-1)."""
+    ps = 2
+    pool = PagePool(num_pages=32, page_size=ps)
+    tree = RadixCache(pool)
+    a = np.asarray(a, np.int32)
+    b = np.asarray(b, np.int32)
+    n_full = len(a) // ps
+    own = pool.alloc(max(n_full, 1))
+    if n_full:
+        tree.insert(a[: n_full * ps], own[:n_full])
+    common = 0
+    while common < min(len(a), len(b)) and a[common] == b[common]:
+        common += 1
+    want = min(common, n_full * ps, ((len(b) - 1) // ps) * ps) // ps * ps
+    pages, skip = tree.match(b)
+    assert skip == want and len(pages) == want // ps
+    tree.release(pages)
+    for p in own:
+        pool.release(p)
+    _check_conserved(pool)
+
+
+# ---------------------------------------------------------------------------
+# Paged-vs-dense engine bit-identity + pool state.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["attention", "mla", "moe_mla"])
+def test_paged_matches_dense_greedy(family):
+    """Greedy token streams on a prefix-sharing stream: the paged engine
+    (radix reuse + suffix prefill + page-table gather) is bit-identical
+    to the dense fused engine, with a real hit rate and a conserved pool
+    whose tables are all-trash once drained. (moe_mla rides the default
+    capacity floor, i.e. drop-free routing — under capacity pressure the
+    MoE identity is not guaranteed, DESIGN §8.)"""
+    if family == "attention":
+        cfg = small_cfg()
+    elif family == "mla":
+        cfg = mla_cfg()
+    else:
+        cfg = reduced_for_smoke(get_config("deepseek-v3-671b"))
+        cfg = dataclasses.replace(cfg, quant="none", n_layers=2)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    reqs = prefix_stream(cfg)
+    _, want = drain(params, cfg, reqs, paged=False)
+    eng, got = drain(params, cfg, reqs, paged=True, page_size=8)
+    assert sorted(want) == sorted(got)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+    stats = eng.stats()
+    assert stats["radix_hit_rate"] > 0
+    assert eng.pool.conserved()
+    assert (stats["pool_pages_in_use"] + stats["pool_pages_free"]
+            == stats["pool_pages_total"])
+    # drained: only the radix holds pages; every slot table is all-trash
+    assert stats["pool_pages_in_use"] == float(stats["radix_nodes"])
+    for g in eng.state.cache.groups:
+        assert not np.asarray(g.pt).any()
+
+
+def test_paged_compile_once_per_suffix_bucket():
+    """The paged engine keeps the §7 recompile contract: one prefill
+    compile per SUFFIX bucket, one decode compile, one transfer/step."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    eng, done = drain(params, cfg, prefix_stream(cfg, n=6), paged=True,
+                      page_size=8)
+    assert len(done) == 6
+    stats = eng.compile_cache_stats()
+    assert stats["prefill_total"] <= 3  # misses: 32-bucket; hits: 8/16
+    assert stats["decode_and_sample"] == 1
+    assert eng.host_transfers == eng.steps
+
+
+def test_paged_pool_exhaustion_queues_and_drains():
+    """A pool smaller than the stream forces head-of-line waiting (and
+    radix eviction); every request still completes and parity holds."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    reqs = prefix_stream(cfg, n=5, shared_len=15, max_new=3)
+    _, want = drain(params, cfg, reqs, paged=False)
+    # 6 usable pages of 8 tokens: barely two 17-21 token requests in
+    # flight, so admission must evict radix leaves to make room
+    eng, got = drain(params, cfg, reqs, paged=True, page_size=8,
+                     num_pages=7)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+    assert eng.pool.conserved()
+    assert eng.radix.evictions > 0  # reuse pressure actually evicted
+
+
+def test_paged_oversized_request_raises():
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, slots=2, max_len=32, paged=True, page_size=8,
+                 num_pages=3)  # 2 usable pages = 16 positions
+    eng.submit(Request(uid=0, prompt=np.arange(20, dtype=np.int32)
+                       % cfg.vocab_size, max_new_tokens=4))
+    with pytest.raises(ValueError, match="more pages than the pool"):
+        eng.run_until_drained()
+
+
+def test_paged_rejects_unsupported_family():
+    cfg = small_cfg("mamba2-1.3b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(AssertionError, match="attention/MLA"):
+        Engine(params, cfg, slots=2, max_len=32, paged=True, page_size=8)
+
+
+# ---------------------------------------------------------------------------
+# MoE prefill capacity over real tokens (PR 4 caveat, fixed).
+# ---------------------------------------------------------------------------
+
+
+def test_moe_prefill_capacity_over_real_rows():
+    """Real-row ragged-prefill logits are invariant to dummy admission
+    rows: with capacity computed over the padded batch (the old behavior)
+    the extra rows inflate capacity and change over-capacity drops; with
+    capacity over REAL tokens (and pads routed to the sentinel expert)
+    the routing is identical."""
+    cfg = reduced_for_smoke(get_config("deepseek-v3-671b"))
+    cfg = dataclasses.replace(
+        cfg, quant="none", n_layers=2,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))  # force drops
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    rows = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+            rng.integers(0, cfg.vocab_size, 7).astype(np.int32)]
+
+    def ragged_prefill(nrows):
+        toks = np.zeros((nrows, 16), np.int32)
+        lens = np.zeros((nrows,), np.int32)
+        for r, p in enumerate(rows):
+            toks[r, : len(p)] = p
+            lens[r] = len(p)
+        cache = M.init_cache(cfg, nrows, 32)
+        logits, _ = M.prefill(params, {"tokens": jnp.asarray(toks)}, cfg,
+                              cache, lengths=jnp.asarray(lens))
+        return np.asarray(logits[:2])
+
+    np.testing.assert_array_equal(ragged_prefill(2), ragged_prefill(4))
+
+
+def test_moe_training_path_unchanged():
+    """token_mask=None must keep the training dispatch bit-identical to
+    the pre-fix implementation: a masked call with an all-True mask takes
+    the sentinel path yet produces the same output."""
+    from repro.models import moe as moe_mod
+
+    cfg = reduced_for_smoke(get_config("deepseek-v3-671b"))
+    cfg = dataclasses.replace(cfg, quant="none")
+    spec = moe_mod.moe_specs(cfg)
+    from repro.models.common import init_params
+
+    params = init_params(spec, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model),
+                          cfg.activation_dtype)
+    y0, aux0 = moe_mod.moe_apply(params, x, cfg)
+    y1, _ = moe_mod.moe_apply(params, x, cfg,
+                              token_mask=jnp.ones((2, 16), bool))
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    assert float(aux0["lb_loss"]) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Energy credit (hardware twin).
+# ---------------------------------------------------------------------------
+
+
+def test_paged_prefix_hits_cut_attributed_prefill_energy():
+    """Prefix-heavy stream, timefloats quant: the paged engine's
+    attributed prefill pJ is below the dense engine's, the skipped reads
+    are credited (prefix_saved_pj > 0), and attribution stays additive
+    (attributed + idle == total)."""
+    cfg = small_cfg(n_layers=1)
+    cfg = dataclasses.replace(cfg, quant="timefloats")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    reqs = prefix_stream(cfg, n=5, shared_len=40, seed=2, max_new=3)
+    de, dd = drain(params, cfg, reqs, paged=False, max_len=128)
+    pe, pd = drain(params, cfg, reqs, paged=True, max_len=128, page_size=8)
+    for uid in dd:
+        np.testing.assert_array_equal(pd[uid], dd[uid])
+    hd, hp = de.hw_telemetry(), pe.hw_telemetry()
+    assert hp["prefill_attributed_pj"] < hd["prefill_attributed_pj"]
+    assert hp["prefix_saved_pj"] > 0
+    assert hp["prefix_hits"] >= 3 and hp["prefix_tokens_saved"] > 0
+    assert hp["attributed_pj"] + hp["idle_pj"] == pytest.approx(
+        hp["total_pj"])
+    assert pe.stats()["radix_hit_rate"] > 0.5
