@@ -1,0 +1,179 @@
+"""Fused paged-attention decode microbenchmark + split-K autotune sweep
+(DESIGN.md §9).
+
+Measures the PR 6 fused split-K decode path against the PR 5
+gather-then-attend composition (``paged_view``-style dense gather + full
+softmax) on serving-shaped inputs — GQA and absorbed-MLA — plus the
+KV-extent-cap effect (table sliced to the live prefix, the engine's pow2
+cap schedule). On this CPU container both contenders are jnp/XLA (the
+Pallas kernel itself runs in interpret mode and is gated for correctness
+by tests/test_paged_attn.py, not timed here); the fused path's win is
+structural — no (B, max_len, ...) materialized gather, work bounded by
+the cap instead of max_len — which TPU hosts also pay.
+
+Also sweeps the only tunable, ``n_splits``, per (page_size, heads,
+head_dim) with kernels/autotune.tune and reports the winners as
+``kernel/paged_attn_autotune/<shape_key>`` records; benchmarks/run.py
+persists those into BENCH_kernel.json under ``"paged_attn_autotune"``,
+which is exactly the cache ``kernels.autotune.best_n_splits`` consults at
+serve time.
+
+    PYTHONPATH=src python -m benchmarks.run paged_attn
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+B = 4            # decode batch (engine slots)
+MAX_LEN = 512
+PAGE = 16
+T = MAX_LEN // PAGE
+LIVE = 128       # live KV extent per row (the cap the engine would pick)
+HKV, G, DK, DV = 2, 8, 64, 64     # GQA: 16 q heads
+MLA_H, MLA_C, MLA_R = 16, 64, 32  # absorbed MLA
+SPLIT_CANDIDATES = (1, 2, 4, 8)
+
+
+def _med_time(fn, *args, iters=3, reps=5):
+    """Median-of-reps wall time in us (this container is noisy)."""
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) / iters * 1e6)
+    return float(np.median(ts))
+
+
+def _gqa_inputs(rng):
+    n_pages = B * T + 1
+    q = jnp.asarray(rng.standard_normal((B, HKV * G, DK)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, PAGE, HKV, DK)),
+                     jnp.bfloat16)
+    vp = jnp.asarray(rng.standard_normal((n_pages, PAGE, HKV, DV)),
+                     jnp.bfloat16)
+    pt = jnp.asarray(
+        1 + np.arange(B * T, dtype=np.int32).reshape(B, T))
+    lens = jnp.asarray(rng.integers(LIVE // 2, LIVE + 1, B), jnp.int32)
+    return q, kp, vp, pt, lens
+
+
+def _mla_inputs(rng):
+    n_pages = B * T + 1
+    ql = jnp.asarray(rng.standard_normal((B, MLA_H, MLA_C)), jnp.float32)
+    qr = jnp.asarray(rng.standard_normal((B, MLA_H, MLA_R)), jnp.float32)
+    cp = jnp.asarray(rng.standard_normal((n_pages, PAGE, MLA_C)),
+                     jnp.bfloat16)
+    rp = jnp.asarray(rng.standard_normal((n_pages, PAGE, MLA_R)),
+                     jnp.bfloat16)
+    pt = jnp.asarray(
+        1 + np.arange(B * T, dtype=np.int32).reshape(B, T))
+    lens = jnp.asarray(rng.integers(LIVE // 2, LIVE + 1, B), jnp.int32)
+    return ql, qr, cp, rp, pt, lens
+
+
+def _gather_gqa(q, kp, vp, pt, lens):
+    """The PR 5 composition: dense page gather + full masked softmax over
+    all max_len positions (what models/attention.py did pre-fusion)."""
+    b, h, dk = q.shape
+    hkv = kp.shape[2]
+    k = kp[pt].reshape(b, -1, hkv, dk).astype(jnp.float32)
+    v = vp[pt].reshape(b, -1, hkv, vp.shape[-1]).astype(jnp.float32)
+    k = jnp.repeat(k, h // hkv, axis=2)
+    v = jnp.repeat(v, h // hkv, axis=2)
+    s = jnp.einsum("bhd,bjhd->bhj", q, k) / np.sqrt(dk)
+    mask = jnp.arange(k.shape[1])[None] < lens[:, None]
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jnp.where(mask[:, None], jax.nn.softmax(s, axis=-1), 0.0)
+    return jnp.einsum("bhj,bjhd->bhd", p, v)
+
+
+def _gather_mla(ql, qr, cp, rp, pt, lens):
+    b = ql.shape[0]
+    ckv = cp[pt].reshape(b, -1, MLA_C).astype(jnp.float32)
+    kr = rp[pt].reshape(b, -1, MLA_R).astype(jnp.float32)
+    scale = 1.0 / np.sqrt(MLA_C + MLA_R)
+    s = (jnp.einsum("bhc,bjc->bhj", ql, ckv)
+         + jnp.einsum("bhr,bjr->bhj", qr, kr)) * scale
+    mask = jnp.arange(ckv.shape[1])[None] < lens[:, None]
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jnp.where(mask[:, None], jax.nn.softmax(s, axis=-1), 0.0)
+    return jnp.einsum("bhj,bjc->bhc", p, ckv)
+
+
+def run(report) -> None:
+    from repro.kernels import autotune
+    from repro.kernels.paged_attn import (paged_decode_attention,
+                                          paged_decode_mla)
+
+    rng = np.random.default_rng(0)
+    q, kp, vp, pt, lens = _gqa_inputs(rng)
+    t_cap = LIVE // PAGE
+
+    gather = jax.jit(_gather_gqa)
+    fused = lambda *a: paged_decode_attention(*a, n_splits=1)  # noqa: E731
+    t_gather = _med_time(gather, q, kp, vp, pt, lens)
+    t_full = _med_time(fused, q, kp, vp, pt, lens)
+    t_capped = _med_time(fused, q, kp, vp, pt[:, :t_cap], lens)
+    report("kernel/paged_attn_gqa_gather_us", t_gather,
+           f"PR5 paged_view+softmax, {MAX_LEN} kv positions")
+    report("kernel/paged_attn_gqa_fused_us", t_full,
+           "fused split-K, full table")
+    report("kernel/paged_attn_gqa_capped_us", t_capped,
+           f"fused split-K, table capped to live {LIVE} tokens")
+    report("kernel/paged_attn_gqa_speedup_x", t_gather / max(t_capped, 1e-9),
+           "fused+cap vs gather-then-attend")
+
+    ql, qr, cp, rp, mpt, mlens = _mla_inputs(rng)
+    mgather = jax.jit(_gather_mla)
+    scale = 1.0 / np.sqrt(MLA_C + MLA_R)
+    mfused = lambda a, b_, c, d, e, f: paged_decode_mla(  # noqa: E731
+        a, b_, c, d, e, f, scale=scale, n_splits=1)
+    t_mgather = _med_time(mgather, ql, qr, cp, rp, mpt, mlens)
+    t_mfull = _med_time(mfused, ql, qr, cp, rp, mpt, mlens)
+    t_mcapped = _med_time(mfused, ql, qr, cp, rp, mpt[:, :t_cap], mlens)
+    report("kernel/paged_attn_mla_gather_us", t_mgather,
+           f"PR5 latent gather+softmax, {MAX_LEN} kv positions")
+    report("kernel/paged_attn_mla_fused_us", t_mfull,
+           "fused split-K, full table")
+    report("kernel/paged_attn_mla_capped_us", t_mcapped,
+           f"fused split-K, capped to {LIVE} tokens")
+    report("kernel/paged_attn_mla_speedup_x",
+           t_mgather / max(t_mcapped, 1e-9),
+           "fused+cap vs gather-then-attend")
+
+    # -- split-K autotune sweep (persisted via run.py) --------------------
+    for label, heads, head_dim, bench in (
+        ("gqa", HKV * G, DK,
+         lambda ns: jax.block_until_ready(paged_decode_attention(
+             q, kp, vp, pt, lens, n_splits=ns, use_pallas=False))),
+        ("mla", MLA_H, MLA_C + MLA_R,
+         lambda ns: jax.block_until_ready(paged_decode_mla(
+             ql, qr, cp, rp, mpt, mlens, scale=scale, n_splits=ns,
+             use_pallas=False))),
+    ):
+        best, timings = autotune.tune(SPLIT_CANDIDATES, bench, reps=5)
+        autotune.record(PAGE, heads, head_dim, best)
+        key = autotune.shape_key(PAGE, heads, head_dim)
+        note = " ".join(f"ns{c}={timings[c] * 1e6:.0f}us"
+                        for c in SPLIT_CANDIDATES)
+        report(f"kernel/paged_attn_autotune/{key}", float(best),
+               f"{label}: {note}")
+
+
+def main() -> None:
+    def report(key, value, note=""):
+        print(f"{key},{value:.6g},{note}" if isinstance(value, float)
+              else f"{key},{value},{note}")
+
+    run(report)
+
+
+if __name__ == "__main__":
+    main()

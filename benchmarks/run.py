@@ -18,8 +18,9 @@ import time
 import traceback
 
 from benchmarks import (ablation_formats, fig3_linearity, fig7_variability,
-                        hw_projection, kernel_bench, roofline, serve_bench,
-                        table1_energy, table2_comparison)
+                        hw_projection, kernel_bench, paged_attn_bench,
+                        roofline, serve_bench, table1_energy,
+                        table2_comparison)
 
 MODULES = {
     "table1": table1_energy,
@@ -27,6 +28,7 @@ MODULES = {
     "fig3": fig3_linearity,
     "fig7": fig7_variability,
     "kernel": kernel_bench,
+    "paged_attn": paged_attn_bench,
     "formats": ablation_formats,
     "roofline": roofline,
     "hw": hw_projection,
@@ -50,10 +52,50 @@ SUMMARY_KEYS = (
     "serve/prefix_hit_rate",
     "serve/prefix_paged_speedup_x",
     "serve/prefix_saved_pj",
+    "serve/fused_paged_speedup_x",
+    "kernel/paged_attn_gqa_speedup_x",
+    "kernel/paged_attn_mla_speedup_x",
 )
+
+AUTOTUNE_PREFIX = "kernel/paged_attn_autotune/"
+
+# ``--check`` regression gate: (direction, relative slack vs the committed
+# baseline, absolute floor). Ratios only — raw wall-times are too noisy on
+# shared CI boxes to gate; the ratio keys compare two paths measured in
+# the same process, which is what stays stable.
+CHECK_BANDS = {
+    "serve/fused_paged_speedup_x": ("higher", 0.25, 1.3),
+    "serve/prefix_paged_speedup_x": ("higher", 0.25, 0.9),
+    "serve/speedup_x": ("higher", 0.25, 1.0),
+    "kernel/paged_attn_gqa_speedup_x": ("higher", 0.25, 1.0),
+    "kernel/paged_attn_mla_speedup_x": ("higher", 0.25, 1.0),
+    "table1/tops_per_watt": ("higher", 0.05, 20.0),
+}
+
+
+def check_regressions(summary, baseline_summary) -> list:
+    """Compare the fresh summary against the committed baseline: a key
+    regresses when it falls below ``(1 - slack) * baseline`` or below its
+    absolute floor. Keys absent from either side are skipped (a module
+    that didn't run keeps its old record via the merge)."""
+    problems = []
+    for key, (direction, slack, floor) in CHECK_BANDS.items():
+        assert direction == "higher"  # all current gates are higher-better
+        if key not in summary:
+            continue
+        val = float(summary[key])
+        if val < floor:
+            problems.append(f"{key}={val:.4g} below absolute floor {floor}")
+            continue
+        base = baseline_summary.get(key)
+        if base is not None and val < (1.0 - slack) * float(base):
+            problems.append(f"{key}={val:.4g} regressed > {slack:.0%} vs "
+                            f"baseline {float(base):.4g}")
+    return problems
 
 
 def main() -> None:
+    check = "--check" in sys.argv[1:]
     picks = [a for a in sys.argv[1:] if a in MODULES] or list(MODULES)
     failures = []
     records = []
@@ -79,11 +121,15 @@ def main() -> None:
 
     # Merge with any existing file so a partial run (`run.py table1`) only
     # refreshes its own modules' records and never wipes the trajectory
-    # the other modules last wrote.
+    # the other modules last wrote. The pre-merge file is also the
+    # committed baseline the --check gate compares against.
+    baseline_summary = {}
     if os.path.exists(JSON_PATH):
         try:
             with open(JSON_PATH) as f:
-                prev = json.load(f).get("records", [])
+                prev_payload = json.load(f)
+            prev = prev_payload.get("records", [])
+            baseline_summary = dict(prev_payload.get("summary", {}))
             records = [r for r in prev if r.get("module") not in picks] \
                 + records
         except (json.JSONDecodeError, OSError):
@@ -95,6 +141,12 @@ def main() -> None:
         "platform": {"python": platform.python_version(),
                      "machine": platform.machine()},
         "summary": {k: by_name[k] for k in SUMMARY_KEYS if k in by_name},
+        # Split-K winners consumed by repro.kernels.autotune.best_n_splits
+        # (the serve-time cache); rebuilt from the merged records so a run
+        # without the paged_attn module keeps the committed values.
+        "paged_attn_autotune": {
+            r["name"][len(AUTOTUNE_PREFIX):]: int(r["value"])
+            for r in records if r["name"].startswith(AUTOTUNE_PREFIX)},
         "failures": [n for n, _ in failures],
         "records": records,
     }
@@ -102,6 +154,14 @@ def main() -> None:
         json.dump(payload, f, indent=1)
     print(f"# wrote {os.path.normpath(JSON_PATH)} "
           f"({len(records)} records)")
+    if check:
+        problems = check_regressions(payload["summary"], baseline_summary)
+        for p in problems:
+            print(f"# REGRESSION: {p}")
+        if problems:
+            raise SystemExit(1)
+        gated = [k for k in CHECK_BANDS if k in payload["summary"]]
+        print(f"# perf gate passed ({len(gated)} keys checked)")
     if failures:
         print(f"# FAILURES: {[n for n, _ in failures]}")
         raise SystemExit(1)

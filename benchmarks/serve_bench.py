@@ -3,7 +3,11 @@ device-resident engine (DESIGN.md §7) on the same synthetic mixed-length
 request stream, plus a PREFIX-HEAVY scenario (shared system prompt, mixed
 tails) A/B-ing the dense fused engine against the paged pool + radix
 prefix cache (DESIGN.md §8) — reporting radix hit rate, tok/s, and the
-prefill pJ the prefix reuse skips.
+prefill pJ the prefix reuse skips — plus a DECODE-HEAVY scenario
+(DESIGN.md §9) A/B-ing the fused split-K paged decode kernel + pow2
+KV-extent cap against the PR 5 gather-then-attend paged decode on long
+generations (token parity asserted; ``serve/fused_paged_speedup_x`` is
+gated ≥ 1.3 by ``benchmarks/run.py --check``).
 
 Measures a full drain wall-clock — including compiles, because the legacy
 engine's per-prompt-length prefill recompiles ARE its serving cost — plus
@@ -34,6 +38,21 @@ PREFIX_REQUESTS = 16
 PREFIX_MAX_NEW = 8
 PAGE_SIZE = 8
 
+# Decode-heavy scenario (DESIGN.md §9): long context windows, short live
+# prefixes — the A/B where the fused split-K decode kernel + KV-extent cap
+# earns its keep against the PR 5 gather-then-attend paged decode. The
+# gather arm's decode cost scales with max_len (it always materializes the
+# full table extent); the fused arm's scales with the live pow2 prefix, so
+# the gap IS the long-context story. The pool is sized to live demand
+# (~96 pages for 4 slots x ~128 tokens + radix-cached prefixes), not
+# slots*max_len — virtualized memory is the point of paging, and an
+# overgrown pool just adds identical per-step scatter cost to both arms.
+FUSED_MAX_LEN = 2048
+FUSED_PAGE = 16
+FUSED_NUM_PAGES = 96
+FUSED_REQUESTS = 8
+FUSED_MAX_NEW = 40
+
 
 def _requests(cfg, seed=0):
     import numpy as np
@@ -51,6 +70,23 @@ def _requests(cfg, seed=0):
             uid=uid,
             prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=MAX_NEW))
+    return out
+
+
+def _decode_heavy_requests(cfg, seed=2):
+    """Mixed 40..70-token prompts, 40 new tokens each: decode dominates."""
+    import numpy as np
+
+    from repro.serve.request import Request
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for uid in range(FUSED_REQUESTS):
+        plen = int(rng.integers(40, 71))
+        out.append(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=FUSED_MAX_NEW))
     return out
 
 
@@ -76,12 +112,16 @@ def _drain(make_engine, cfg, requests=None, n_expect=N_REQUESTS,
            steady_state=False):
     """Drain the stream and report throughput/energy/token records.
 
-    ``steady_state=True`` drains the same stream twice on one engine and
-    times the SECOND drain (compile caches warm): the right A/B for
-    dense-vs-paged, where both engines have bounded compiles that
-    amortize in production. The legacy-vs-fused comparison deliberately
-    stays cold — the legacy engine's per-length recompiles ARE its cost.
-    Token parity is asserted across both drains either way."""
+    ``steady_state=True`` drains the same stream three times on one
+    engine and times the THIRD drain: the right A/B for dense-vs-paged,
+    where both engines have bounded compiles that amortize in
+    production. Two warm-up drains are needed, not one — on the paged
+    engine the radix cache turns the second drain's prompts into short
+    suffixes, which land in SMALLER prefill buckets and legitimately
+    compile fresh; only from the third drain on is every bucket warm.
+    The legacy-vs-fused comparison deliberately stays cold — the legacy
+    engine's per-length recompiles ARE its cost. Token parity is
+    asserted across all drains either way."""
     from repro.serve.request import percentile as _pct
     eng = make_engine()
     reqs = list(requests if requests is not None else _requests(cfg))
@@ -97,20 +137,23 @@ def _drain(make_engine, cfg, requests=None, n_expect=N_REQUESTS,
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     assert len(done) == n_expect
+    n_drains = 1
     if steady_state:
-        submit_all(1000)
-        t0 = time.perf_counter()
-        done2 = eng.run_until_drained()
-        dt = time.perf_counter() - t0
-        assert len(done2) == n_expect
-        # same prompts, greedy: the warm drain (radix hits on the paged
-        # engine) must reproduce the cold drain's tokens exactly
         t1 = {f.uid: [int(t) for t in f.tokens] for f in done}
-        t2 = {f.uid - 1000: [int(t) for t in f.tokens] for f in done2}
-        assert t1 == t2, "steady-state drain diverged from the cold drain"
-        done = done + done2  # NB: stats/energy records cover both drains
-    new_tokens = sum(len(f.tokens) for f in done) // (2 if steady_state
-                                                      else 1)
+        for rep in (1000, 2000):
+            submit_all(rep)
+            t0 = time.perf_counter()
+            done_rep = eng.run_until_drained()
+            dt = time.perf_counter() - t0
+            assert len(done_rep) == n_expect
+            # same prompts, greedy: warm drains (radix hits on the paged
+            # engine) must reproduce the cold drain's tokens exactly
+            t2 = {f.uid - rep: [int(t) for t in f.tokens]
+                  for f in done_rep}
+            assert t1 == t2, "steady-state drain diverged from cold drain"
+            done = done + done_rep  # stats/energy cover every drain
+        n_drains = 3
+    new_tokens = sum(len(f.tokens) for f in done) // n_drains
     traces = eng.compile_cache_stats()
     hw = eng.hw_telemetry() or {}
     return {
@@ -123,8 +166,9 @@ def _drain(make_engine, cfg, requests=None, n_expect=N_REQUESTS,
         "steps": int(getattr(eng, "steps", 0)),
         "prefill_compiles": int(traces.get("prefill_total",
                                            traces.get("prefill", 0))),
-        "decode_compiles": int(traces.get("decode_and_sample",
-                                          traces.get("decode", 0))),
+        "decode_compiles": int(traces.get(
+            "decode_total", traces.get("decode_and_sample",
+                                       traces.get("decode", 0)))),
         "pj_per_token_p50": _pct([f.pj_per_token for f in done], 50),
         "tokens": {f.uid: [int(t) for t in f.tokens] for f in done},
     }
@@ -204,23 +248,75 @@ def run(report) -> None:
     report("serve/prefix_saved_pj", ppaged["prefix_saved_pj"],
            "crossbar reads skipped by radix hits (hw-twin credit)")
 
+    # -- decode-heavy scenario: fused split-K decode vs gather-then-attend
+    # (DESIGN §9). quant="none" + no twin so the A/B isolates the decode
+    # path itself; steady-state drain (warm compiles) on both arms.
+    # Attention-realistic dims (16 heads x 64, GQA over 2 KV heads — the
+    # split-K microbench shapes): at the smoke config's 4x32 heads the
+    # step is all launch overhead and neither decode path is visible.
+    # f32 activations: bf16's coarse logit grid gives an untrained model
+    # frequent EXACT argmax ties, and the two decode compositions (equal
+    # to tolerance, not bitwise) may break a tie differently — f32 keeps
+    # the greedy parity assert meaningful.
+    dcfg = dataclasses.replace(cfg, quant="none", dtype="float32",
+                               d_model=256, n_heads=16, n_kv_heads=2,
+                               head_dim=64)
+    dparams = M.init(dcfg, jax.random.PRNGKey(0))
+    dreqs = _decode_heavy_requests(dcfg)
+    gather = _drain(lambda: Engine(dparams, dcfg, slots=SLOTS,
+                                   max_len=FUSED_MAX_LEN, paged=True,
+                                   page_size=FUSED_PAGE,
+                                   num_pages=FUSED_NUM_PAGES,
+                                   fused_decode=False),
+                    dcfg, requests=dreqs, n_expect=FUSED_REQUESTS,
+                    steady_state=True)
+    fusedp = _drain(lambda: Engine(dparams, dcfg, slots=SLOTS,
+                                   max_len=FUSED_MAX_LEN, paged=True,
+                                   page_size=FUSED_PAGE,
+                                   num_pages=FUSED_NUM_PAGES),
+                    dcfg, requests=dreqs, n_expect=FUSED_REQUESTS,
+                    steady_state=True)
+    assert fusedp["tokens"] == gather["tokens"], \
+        "fused split-K decode diverged from the gather-then-attend streams"
+    fused_speedup = fusedp["tok_per_s"] / max(gather["tok_per_s"], 1e-9)
+    report("serve/gather_paged_tok_per_s", gather["tok_per_s"],
+           f"PR5 gather+softmax decode, max_len={FUSED_MAX_LEN}, "
+           "steady-state drain")
+    report("serve/fused_paged_tok_per_s", fusedp["tok_per_s"],
+           f"fused split-K + pow2 KV cap, page={FUSED_PAGE}, "
+           "steady-state drain")
+    report("serve/fused_paged_speedup_x", fused_speedup,
+           "fused decode vs gather-then-attend, steady-state")
+    report("serve/fused_paged_decode_compiles",
+           float(fusedp["decode_compiles"]),
+           "one per pow2 KV-cap variant, not per step")
+
     payload = {
-        "schema": "timefloats-serve-bench/v2",
+        "schema": "timefloats-serve-bench/v3",
         "config": {"arch": "qwen3-0.6b", "n_layers": cfg.n_layers,
                    "slots": SLOTS, "max_len": MAX_LEN,
                    "requests": N_REQUESTS, "max_new": MAX_NEW,
                    "prefix_len": PREFIX_LEN,
                    "prefix_requests": PREFIX_REQUESTS,
-                   "page_size": PAGE_SIZE},
+                   "page_size": PAGE_SIZE,
+                   "fused_max_len": FUSED_MAX_LEN,
+                   "fused_page": FUSED_PAGE,
+                   "fused_num_pages": FUSED_NUM_PAGES,
+                   "fused_requests": FUSED_REQUESTS,
+                   "fused_max_new": FUSED_MAX_NEW},
         "legacy": {k: v for k, v in legacy.items() if k != "tokens"},
         "fused": {k: v for k, v in fused.items() if k != "tokens"},
         "prefix_dense": {k: v for k, v in pdense.items() if k != "tokens"},
         "prefix_paged": {k: v for k, v in ppaged.items() if k != "tokens"},
+        "gather_paged": {k: v for k, v in gather.items() if k != "tokens"},
+        "fused_paged": {k: v for k, v in fusedp.items() if k != "tokens"},
         "speedup_x": speedup,
         "prefix_paged_speedup_x": paged_speedup,
+        "fused_paged_speedup_x": fused_speedup,
         "prefix_hit_rate": hit_rate,
         "greedy_parity": True,
         "paged_parity": True,
+        "fused_decode_parity": True,
     }
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=1)

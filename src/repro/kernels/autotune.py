@@ -1,0 +1,84 @@
+"""Split-K autotuner for the fused paged-attention kernel (DESIGN.md §9).
+
+The only tunable in kernels/paged_attn.py is ``n_splits`` — how many grid
+programs share one row's page-table walk. More splits buy parallelism on
+a real accelerator but pay a combine; on this CPU container (jnp ref /
+interpret mode) a single split is essentially always right. Rather than
+hard-coding either, the choice is *measured*: ``benchmarks/paged_attn``
+times the candidate splits per (page_size, heads, head_dim) shape with
+:func:`tune` and benchmarks/run.py persists the winners into
+BENCH_kernel.json under ``"paged_attn_autotune"`` — the committed record
+of what this container measured. At serve time :func:`best_n_splits`
+reads that cache (memoized per process); shapes never benchmarked fall
+back to 1 split.
+
+The cache is keyed by shape only (not batch or table extent): the kernel
+normalizes the cached value down to a divisor of whatever table extent
+the engine's KV cap produces for the step.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+_BENCH_PATH = Path(__file__).resolve().parents[3] / "BENCH_kernel.json"
+_CACHE_KEY = "paged_attn_autotune"
+_memo: Dict[str, int] = {}
+_persisted: Optional[Dict[str, int]] = None
+
+
+def shape_key(page_size: int, heads: int, head_dim: int) -> str:
+    return f"p{page_size}_h{heads}_d{head_dim}"
+
+
+def _load_persisted() -> Dict[str, int]:
+    global _persisted
+    if _persisted is None:
+        _persisted = {}
+        try:
+            payload = json.loads(_BENCH_PATH.read_text())
+            _persisted = {str(k): int(v)
+                          for k, v in payload.get(_CACHE_KEY, {}).items()}
+        except (OSError, ValueError):
+            pass  # no benchmark record yet: heuristic default below
+    return _persisted
+
+
+def best_n_splits(page_size: int, heads: int, head_dim: int) -> int:
+    """Cached split count for a kernel shape (>=1; callers normalize to a
+    divisor of their table extent). Unbenchmarked shapes default to 1."""
+    key = shape_key(page_size, heads, head_dim)
+    if key not in _memo:
+        _memo[key] = _load_persisted().get(key, 1)
+    return max(1, _memo[key])
+
+
+def record(page_size: int, heads: int, head_dim: int, n_splits: int) -> None:
+    """Install a tuned value for this process (the benchmark also persists
+    it via BENCH_kernel.json for future processes)."""
+    _memo[shape_key(page_size, heads, head_dim)] = int(n_splits)
+
+
+def clear_memo() -> None:
+    """Drop in-process state so tests can exercise reload paths."""
+    global _persisted
+    _memo.clear()
+    _persisted = None
+
+
+def tune(candidates: Iterable[int], bench_fn: Callable[[int], None], *,
+         reps: int = 5) -> Tuple[int, Dict[int, float]]:
+    """Time ``bench_fn(n_splits)`` for each candidate (one untimed warmup
+    call first, so compile time never votes) and return
+    (best_n_splits, {n_splits: seconds_per_call})."""
+    timings: Dict[int, float] = {}
+    for cand in candidates:
+        bench_fn(cand)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            bench_fn(cand)
+        timings[cand] = (time.perf_counter() - t0) / reps
+    best = min(timings, key=lambda c: timings[c])
+    return best, timings

@@ -1,0 +1,72 @@
+"""Kernel backend dispatch: ONE place that decides Pallas vs jnp reference.
+
+Every kernel in this package has two interchangeable implementations — a
+Pallas kernel (TPU; interpret mode on this CPU container) and a jnp
+reference that doubles as the differential-testing oracle. Which one runs
+used to be decided by ad-hoc ``os.environ`` reads scattered across
+modules; this config object centralizes the policy so tests and CI can
+flip the whole kernel layer per backend path in one move:
+
+- ``TIMEFLOATS_PAGED_PALLAS=1`` routes the serving kernels (page gather,
+  fused paged attention, fused sampling) through Pallas.
+- ``PALLAS_INTERPRET`` (default ``1``) runs Pallas kernels in interpret
+  mode — the CPU container has no TPU; set ``0`` on real hardware.
+
+``current()`` resolves the active policy (env unless overridden),
+``override(...)`` installs a scoped override (tests / benchmarks), and the
+per-call ``use_pallas=`` / ``interpret=`` kwargs on each kernel entry
+point still win over both. CI runs the kernel test files once per backend
+path (see .github/workflows/ci.yml) so the Pallas route is always
+exercised, never just the fallback.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Iterator, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDispatch:
+    """Resolved kernel-backend policy for one call."""
+
+    use_pallas: bool   # Pallas kernel vs jnp reference
+    interpret: bool    # Pallas interpret mode (CPU) vs compiled (TPU)
+
+
+_OVERRIDE: list = []  # stack of KernelDispatch overrides (innermost last)
+
+
+def _env_dispatch() -> KernelDispatch:
+    return KernelDispatch(
+        use_pallas=os.environ.get("TIMEFLOATS_PAGED_PALLAS", "0") == "1",
+        interpret=os.environ.get("PALLAS_INTERPRET", "1") != "0",
+    )
+
+
+def current() -> KernelDispatch:
+    """The active policy: innermost ``override`` if any, else env flags."""
+    return _OVERRIDE[-1] if _OVERRIDE else _env_dispatch()
+
+
+def resolve(use_pallas: Optional[bool] = None,
+            interpret: Optional[bool] = None) -> KernelDispatch:
+    """Per-call kwargs beat the active policy; None defers to it."""
+    cur = current()
+    return KernelDispatch(
+        use_pallas=cur.use_pallas if use_pallas is None else use_pallas,
+        interpret=cur.interpret if interpret is None else interpret,
+    )
+
+
+@contextlib.contextmanager
+def override(use_pallas: Optional[bool] = None,
+             interpret: Optional[bool] = None) -> Iterator[KernelDispatch]:
+    """Scoped policy override; None fields inherit the surrounding policy."""
+    d = resolve(use_pallas, interpret)
+    _OVERRIDE.append(d)
+    try:
+        yield d
+    finally:
+        _OVERRIDE.pop()

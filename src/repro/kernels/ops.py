@@ -9,7 +9,6 @@ kernel always runs in interpret mode; on TPU set ``interpret=False`` via
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
@@ -29,8 +28,10 @@ Array = jax.Array
 
 
 def _interpret_default() -> bool:
-    # CPU container: interpret unless explicitly disabled (real TPU).
-    return os.environ.get("PALLAS_INTERPRET", "1") != "0"
+    # Centralized policy (kernels/dispatch): interpret unless on real TPU.
+    from repro.kernels import dispatch
+
+    return dispatch.current().interpret
 
 
 def _pad_to(a: Array, mults: tuple[int, ...], pad_value=0) -> Array:

@@ -11,27 +11,20 @@ the default on this CPU container (the Pallas kernel runs in interpret
 mode here, validated against the fallback by tests/test_paged.py).
 
 Set ``TIMEFLOATS_PAGED_PALLAS=1`` (or pass ``use_pallas=True``) to route
-the serving gather through the kernel.
+the serving gather through the kernel; backend policy is resolved by the
+shared kernels/dispatch config object.
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import dispatch
+
 Array = jax.Array
-
-
-def _interpret_default() -> bool:
-    # CPU container: interpret unless explicitly disabled (real TPU).
-    return os.environ.get("PALLAS_INTERPRET", "1") != "0"
-
-
-def _use_pallas_default() -> bool:
-    return os.environ.get("TIMEFLOATS_PAGED_PALLAS", "0") == "1"
 
 
 def gather_pages_ref(pool: Array, page_table: Array) -> Array:
@@ -50,7 +43,7 @@ def gather_pages_pallas(pool: Array, page_table: Array,
                         *, interpret: bool | None = None) -> Array:
     """Pallas page gather; same contract as :func:`gather_pages_ref`."""
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = dispatch.current().interpret
     p = pool.shape[0]
     feat = pool.shape[1:]
     m = 1
@@ -75,8 +68,7 @@ def gather_pages_pallas(pool: Array, page_table: Array,
 def gather_pages(pool: Array, page_table: Array,
                  *, use_pallas: bool | None = None) -> Array:
     """Dispatch: jnp fallback by default, Pallas when opted in (env/arg)."""
-    if use_pallas is None:
-        use_pallas = _use_pallas_default()
-    if use_pallas:
-        return gather_pages_pallas(pool, page_table)
+    d = dispatch.resolve(use_pallas)
+    if d.use_pallas:
+        return gather_pages_pallas(pool, page_table, interpret=d.interpret)
     return gather_pages_ref(pool, page_table)

@@ -1,0 +1,363 @@
+"""Fused split-K flash-decoding over the paged KV pool (DESIGN.md §9).
+
+The PR 5 paged decode path was gather-then-attend: ``paged_view``
+materializes a dense ``(B, T*page, *feat)`` copy of every row's pages and
+the attention family runs a full softmax on top — a round trip through
+HBM that TimeFloats' stay-in-one-domain thesis says to avoid. This module
+fuses the two: the kernel walks the per-slot page table *in-kernel*, one
+grid program per (slot, kv-split). Each program dynamic-slice-loads its
+assigned pages straight from the shared pool (``pl.ds`` on the page id,
+the same idiom as kernels/paged.py), runs one online-softmax block over
+them, and emits partial ``(m, l, acc)`` split state; a final combine
+reduces the splits:
+
+    m* = max_s m_s,   l* = sum_s l_s * exp(m_s - m*),
+    out = sum_s acc_s * exp(m_s - m*) / max(l*, eps).
+
+Two entry points cover the serving families:
+
+- :func:`paged_decode_attention` — GQA/MQA decode: ``q (B, H, Dk)``
+  against pools ``(P, page, Hkv, Dk)/(P, page, Hkv, Dv)``.
+- :func:`paged_decode_mla` — absorbed MLA decode (MQA in latent space):
+  latent/rope queries against the ``(P, page, C)/(P, page, R)`` pools,
+  scores = (q_lat·c_kv + q_rope·k_rope)·scale and values = c_kv.
+
+Both have a jnp *structural reference* that performs the exact same
+per-split block math (shared helpers, identical op order), so in
+interpret mode the Pallas kernel matches it **bitwise** — that is the
+oracle-differential gate in tests/test_paged_attn.py. The reference is
+also the production CPU path (dispatch.use_pallas=False): it is leaner
+than the ``paged_view``+softmax composition and, driven by the engine's
+KV-extent cap (models/model.decode_step ``kv_cap``), only ever touches
+the live prefix of the table instead of all ``max_len`` positions.
+
+Masking contract: a row attends to positions ``pos < lengths[b]``
+(decode append-at-end causal; ``lengths`` includes the new token).
+Length-0 rows return exact zeros. Page-table entries past a row's extent
+point at the trash page 0 — they are loaded but masked, never mixed in.
+
+Split count: ``n_splits`` must divide the table extent; ``None`` asks
+kernels/autotune for the cached per-(page, heads, head_dim) choice.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import autotune, dispatch
+
+Array = jax.Array
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+_EPS = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# Shared per-split block math — used VERBATIM by the Pallas kernel body and
+# (vmapped over the batch) by the jnp reference, so the two agree bitwise.
+# ---------------------------------------------------------------------------
+
+
+def _positions(start, j: int) -> Array:
+    # 2D iota then squeeze: TPU Pallas rejects 1D iota (see pallas guide).
+    return start + jax.lax.broadcasted_iota(jnp.int32, (1, j), 1)[0]
+
+
+def _attend_block_gqa(q, k, v, start, length, scale: float):
+    """One split for one row. q (Hkv, G, Dk); k (J, Hkv, Dk);
+    v (J, Hkv, Dv); all float32. Returns m, l (Hkv, G) and acc
+    (Hkv, G, Dv) — unnormalized online-softmax split state."""
+    j = k.shape[0]
+    valid = _positions(start, j) < length                       # (J,)
+    s = jnp.einsum("kgd,jkd->kgj", q, k,
+                   preferred_element_type=jnp.float32) * scale  # (Hkv, G, J)
+    s = jnp.where(valid[None, None, :], s, NEG)
+    m = jnp.max(s, axis=-1)
+    # Explicit zeroing: a fully-masked split has m == NEG, where exp(s - m)
+    # would be exp(0) = 1 on every masked lane — `valid` must win, not exp.
+    p = jnp.where(valid[None, None, :], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("kgj,jkd->kgd", p, v,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def _attend_block_mla(q_lat, q_rope, ckv, kr, start, length, scale: float):
+    """One MLA split for one row. q_lat (H, C); q_rope (H, R);
+    ckv (J, C); kr (J, R); float32. Values are the latents themselves:
+    returns m, l shaped (H,) and acc (H, C).
+
+    Expressed THROUGH the GQA block as single-group MQA with the latent
+    and rope features concatenated: scores = (q_lat·c_kv + q_rope·k_rope)
+    becomes one fused dot over C+R. Besides being one gemm instead of
+    two, the GQA einsum pattern carries a unit kv-head batch dim, which
+    keeps XLA's lowering identical between the vmapped reference and the
+    per-program kernel — the batchless "hc,jc->hj" form broke bitwise
+    parity at H == 1 (gemv-specialized differently under vmap)."""
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)[None]   # (1, H, C+R)
+    k = jnp.concatenate([ckv, kr], axis=-1)[:, None]      # (J, 1, C+R)
+    v = ckv[:, None]                                      # (J, 1, C)
+    m, l, acc = _attend_block_gqa(q, k, v, start, length, scale)
+    return m[0], l[0], acc[0]
+
+
+@jax.jit
+def _combine(m: Array, l: Array, acc: Array) -> Array:
+    """Reduce split state over axis 1. m, l (B, S, N); acc (B, S, N, Dv).
+    All-masked rows (every split at m == NEG) come out exactly zero.
+
+    A SEPARATE executable on purpose: the partial-producing functions are
+    jitted without it and the public dispatchers call it afterwards, so at
+    top level (the oracle-differential tests) the combine cannot fuse
+    differently with its two producers — XLA's simplifier re-associates
+    the alpha/normalize arithmetic depending on what feeds it, which was
+    observed to break bitwise Pallas-vs-reference parity. Under an outer
+    jit (the serving engine) the boundary dissolves and everything fuses;
+    only token-level parity is promised there."""
+    m_star = jnp.max(m, axis=1)                                 # (B, N)
+    alpha = jnp.exp(m - m_star[:, None])                        # (B, S, N)
+    l_star = jnp.sum(l * alpha, axis=1)
+    acc_star = jnp.sum(acc * alpha[..., None], axis=1)
+    return acc_star / jnp.maximum(l_star, _EPS)[..., None]      # (B, N, Dv)
+
+
+def _norm_splits(n_splits: Optional[int], n_table: int, *, page_size: int,
+                 heads: int, head_dim: int) -> int:
+    if n_splits is None:
+        n_splits = autotune.best_n_splits(page_size, heads, head_dim)
+    n_splits = max(1, min(int(n_splits), n_table))
+    while n_table % n_splits:
+        n_splits -= 1  # largest divisor <= request (pow2 tables: exact)
+    return n_splits
+
+
+# ---------------------------------------------------------------------------
+# GQA/MQA decode
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("scale", "n_splits"))
+def _gqa_ref(q, k_pool, v_pool, pt, lengths, *, scale: float, n_splits: int):
+    b, h, dk = q.shape
+    _, page, hkv, _ = k_pool.shape
+    dv = v_pool.shape[-1]
+    g = h // hkv
+    t = pt.shape[1]
+    ts = t // n_splits
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, dk)
+    lengths = lengths.astype(jnp.int32)
+    block = jax.vmap(_attend_block_gqa,
+                     in_axes=(0, 0, 0, None, 0, None))
+    ms, ls, accs = [], [], []
+    for s in range(n_splits):
+        pts = pt[:, s * ts:(s + 1) * ts]                 # (B, ts)
+        ks = k_pool[pts].astype(jnp.float32).reshape(b, ts * page, hkv, dk)
+        vs = v_pool[pts].astype(jnp.float32).reshape(b, ts * page, hkv, dv)
+        m, l, acc = block(qf, ks, vs, s * ts * page, lengths, scale)
+        ms.append(m.reshape(b, h))
+        ls.append(l.reshape(b, h))
+        accs.append(acc.reshape(b, h, dv))
+    return jnp.stack(ms, 1), jnp.stack(ls, 1), jnp.stack(accs, 1)
+
+
+def _gqa_kernel(ts: int, page: int, hkv: int, g: int, dk: int, dv: int,
+                scale: float):
+    def kernel(pt_ref, q_ref, len_ref, kp_ref, vp_ref, m_ref, l_ref,
+               acc_ref):
+        sidx = pl.program_id(1)
+        # Walk this split's page-table entries; each load is one dynamic
+        # slice of the shared pool at the referenced page id.
+        ks = [kp_ref[pl.ds(pt_ref[0, i], 1), :] for i in range(ts)]
+        vs = [vp_ref[pl.ds(pt_ref[0, i], 1), :] for i in range(ts)]
+        k = jnp.concatenate(ks, axis=0).astype(jnp.float32)
+        v = jnp.concatenate(vs, axis=0).astype(jnp.float32)
+        k = k.reshape(ts * page, hkv, dk)
+        v = v.reshape(ts * page, hkv, dv)
+        q = q_ref[0].astype(jnp.float32).reshape(hkv, g, dk)
+        m, l, acc = _attend_block_gqa(q, k, v, sidx * (ts * page),
+                                      len_ref[0, 0], scale)
+        m_ref[0, 0] = m.reshape(hkv * g)
+        l_ref[0, 0] = l.reshape(hkv * g)
+        acc_ref[0, 0] = acc.reshape(hkv * g, dv)
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("scale", "n_splits", "interpret"))
+def _gqa_pallas(q, k_pool, v_pool, pt, lengths, *, scale: float,
+                n_splits: int, interpret: bool):
+    b, h, dk = q.shape
+    p, page, hkv, _ = k_pool.shape
+    dv = v_pool.shape[-1]
+    g = h // hkv
+    t = pt.shape[1]
+    ts = t // n_splits
+    m, l, acc = pl.pallas_call(
+        _gqa_kernel(ts, page, hkv, g, dk, dv, scale),
+        grid=(b, n_splits),
+        in_specs=[
+            pl.BlockSpec((1, ts), lambda i, j: (i, j)),
+            pl.BlockSpec((1, h * dk), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((p, page * hkv * dk), lambda i, j: (0, 0)),
+            pl.BlockSpec((p, page * hkv * dv), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, h, dv), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_splits, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_splits, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_splits, h, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pt.astype(jnp.int32), q.reshape(b, h * dk),
+      lengths.reshape(b, 1).astype(jnp.int32),
+      k_pool.reshape(p, page * hkv * dk), v_pool.reshape(p, page * hkv * dv))
+    return m, l, acc
+
+
+def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
+                           page_table: Array, lengths: Array, *,
+                           scale: Optional[float] = None,
+                           n_splits: Optional[int] = None,
+                           use_pallas: Optional[bool] = None,
+                           interpret: Optional[bool] = None) -> Array:
+    """Fused paged GQA/MQA decode attention.
+
+    q (B, H, Dk); k_pool (P, page, Hkv, Dk); v_pool (P, page, Hkv, Dv);
+    page_table (B, T) int; lengths (B,) int (valid kv extent, incl. the
+    just-written token; rows attend to ``pos < lengths[b]``). Returns
+    (B, H, Dv) float32. Callers may pass a page-table *prefix* (the
+    engine's KV-extent cap) as long as every row's length fits it.
+    """
+    d = dispatch.resolve(use_pallas, interpret)
+    b, h, dk = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(dk)
+    ns = _norm_splits(n_splits, page_table.shape[1],
+                      page_size=k_pool.shape[1], heads=h, head_dim=dk)
+    fn = _gqa_pallas if d.use_pallas else _gqa_ref
+    kw = {"interpret": d.interpret} if d.use_pallas else {}
+    return _combine(*fn(q, k_pool, v_pool, page_table, lengths,
+                        scale=float(scale), n_splits=ns, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Absorbed-MLA decode (MQA in latent space)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("scale", "n_splits"))
+def _mla_ref(q_lat, q_rope, ckv_pool, kr_pool, pt, lengths, *, scale: float,
+             n_splits: int):
+    b, h, c = q_lat.shape
+    r = q_rope.shape[-1]
+    page = ckv_pool.shape[1]
+    t = pt.shape[1]
+    ts = t // n_splits
+    qlf = q_lat.astype(jnp.float32)
+    qrf = q_rope.astype(jnp.float32)
+    lengths = lengths.astype(jnp.int32)
+    block = jax.vmap(_attend_block_mla,
+                     in_axes=(0, 0, 0, 0, None, 0, None))
+    ms, ls, accs = [], [], []
+    for s in range(n_splits):
+        pts = pt[:, s * ts:(s + 1) * ts]
+        cs = ckv_pool[pts].astype(jnp.float32).reshape(b, ts * page, c)
+        rs = kr_pool[pts].astype(jnp.float32).reshape(b, ts * page, r)
+        m, l, acc = block(qlf, qrf, cs, rs, s * ts * page, lengths, scale)
+        ms.append(m)
+        ls.append(l)
+        accs.append(acc)
+    return jnp.stack(ms, 1), jnp.stack(ls, 1), jnp.stack(accs, 1)
+
+
+def _mla_kernel(ts: int, page: int, h: int, c: int, r: int, scale: float):
+    def kernel(pt_ref, ql_ref, qr_ref, len_ref, cp_ref, rp_ref, m_ref,
+               l_ref, acc_ref):
+        sidx = pl.program_id(1)
+        cs = [cp_ref[pl.ds(pt_ref[0, i], 1), :] for i in range(ts)]
+        rs = [rp_ref[pl.ds(pt_ref[0, i], 1), :] for i in range(ts)]
+        ckv = jnp.concatenate(cs, axis=0).astype(jnp.float32)
+        kr = jnp.concatenate(rs, axis=0).astype(jnp.float32)
+        ckv = ckv.reshape(ts * page, c)
+        kr = kr.reshape(ts * page, r)
+        q_lat = ql_ref[0].astype(jnp.float32).reshape(h, c)
+        q_rope = qr_ref[0].astype(jnp.float32).reshape(h, r)
+        m, l, acc = _attend_block_mla(q_lat, q_rope, ckv, kr,
+                                      sidx * (ts * page), len_ref[0, 0],
+                                      scale)
+        m_ref[0, 0] = m
+        l_ref[0, 0] = l
+        acc_ref[0, 0] = acc
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("scale", "n_splits", "interpret"))
+def _mla_pallas(q_lat, q_rope, ckv_pool, kr_pool, pt, lengths, *,
+                scale: float, n_splits: int, interpret: bool):
+    b, h, c = q_lat.shape
+    r = q_rope.shape[-1]
+    p, page = ckv_pool.shape[:2]
+    t = pt.shape[1]
+    ts = t // n_splits
+    m, l, acc = pl.pallas_call(
+        _mla_kernel(ts, page, h, c, r, scale),
+        grid=(b, n_splits),
+        in_specs=[
+            pl.BlockSpec((1, ts), lambda i, j: (i, j)),
+            pl.BlockSpec((1, h * c), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, h * r), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((p, page * c), lambda i, j: (0, 0)),
+            pl.BlockSpec((p, page * r), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, h, c), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_splits, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_splits, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_splits, h, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pt.astype(jnp.int32), q_lat.reshape(b, h * c), q_rope.reshape(b, h * r),
+      lengths.reshape(b, 1).astype(jnp.int32),
+      ckv_pool.reshape(p, page * c), kr_pool.reshape(p, page * r))
+    return m, l, acc
+
+
+def paged_decode_mla(q_lat: Array, q_rope: Array, ckv_pool: Array,
+                     kr_pool: Array, page_table: Array, lengths: Array, *,
+                     scale: float,
+                     n_splits: Optional[int] = None,
+                     use_pallas: Optional[bool] = None,
+                     interpret: Optional[bool] = None) -> Array:
+    """Fused paged absorbed-MLA decode.
+
+    q_lat (B, H, C) (queries absorbed into the latent space), q_rope
+    (B, H, R); pools (P, page, C) / (P, page, R); page_table (B, T);
+    lengths (B,). scores = (q_lat·c_kv + q_rope·k_rope)·scale, values are
+    the c_kv latents. Returns latent attention output (B, H, C) float32
+    (the caller applies W_v_b). ``scale`` is required: it depends on the
+    pre-absorption head dims (nope+rope), not on C.
+    """
+    d = dispatch.resolve(use_pallas, interpret)
+    b, h, c = q_lat.shape
+    ns = _norm_splits(n_splits, page_table.shape[1],
+                      page_size=ckv_pool.shape[1], heads=h,
+                      head_dim=c + q_rope.shape[-1])
+    fn = _mla_pallas if d.use_pallas else _mla_ref
+    kw = {"interpret": d.interpret} if d.use_pallas else {}
+    return _combine(*fn(q_lat, q_rope, ckv_pool, kr_pool, page_table,
+                        lengths, scale=float(scale), n_splits=ns, **kw))

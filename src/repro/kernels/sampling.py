@@ -1,0 +1,106 @@
+"""Fused sample-from-logits for the serving decode step (DESIGN.md §9).
+
+The engine's greedy/temperature sampling used one `jax.random.categorical`
+per slot under vmap. This module keeps the exact same sampling law but
+restructures it Gumbel-max style so the per-slot decision is ONE masked
+argmax — the shape a Pallas kernel wants (grid over slots, each program
+reads its logit row once):
+
+    categorical(k, lg / t)  ==  argmax(lg / t + gumbel(k, (V,)))
+
+bitwise, because `jax.random.categorical` is defined as exactly that
+argmax. The Gumbel noise is still drawn with the engine's per-slot key
+chain ``fold_in(fold_in(fold_in(key, slot), tag), counter)`` — streams
+are per-request and reproducible given the seed, and greedy rows
+(temp <= 0) take a plain argmax, so token streams are bit-identical to
+the pre-fusion engine (pinned by tests/test_paged_attn.py).
+
+Audio (S, K, V) logits keep the legacy vmapped-categorical formulation —
+multi-codebook rows are not on the paged serving path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import dispatch
+
+Array = jax.Array
+
+
+def _fold3(key: Array, slot: Array, tag: Array, counter: Array) -> Array:
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(key, slot), tag), counter)
+
+
+def _sample_kernel(lg_ref, noise_ref, t_ref, out_ref):
+    """One grid program = one slot: masked argmax over its logit row."""
+    t = t_ref[0, 0]
+    lg = lg_ref[0]
+    hot = lg / jnp.maximum(t, 1e-6) + noise_ref[0]
+    pick = jnp.where(t > 0.0, jnp.argmax(hot, axis=-1),
+                     jnp.argmax(lg, axis=-1))
+    out_ref[0, 0] = pick.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _sample_pallas(lg: Array, noise: Array, temps: Array, *,
+                   interpret: bool) -> Array:
+    s, v = lg.shape
+    out = pl.pallas_call(
+        _sample_kernel,
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((1, v), lambda i: (i, 0)),
+            pl.BlockSpec((1, v), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, 1), jnp.int32),
+        interpret=interpret,
+    )(lg, noise, temps.reshape(s, 1).astype(jnp.float32))
+    return out[:, 0]
+
+
+def sample_tokens(logits: Array, temps: Array, key: Array, tags: Array,
+                  counters: Array, *, use_pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> Array:
+    """Greedy/temperature sampling for a decode batch on device.
+
+    logits (S, V) or (S, K, V) float; temps (S,). Rows with temp <= 0
+    take argmax; rows with temp > 0 sample categorically with the
+    independent per-slot key chain (see module docstring). Returns (S,)
+    (audio: (S, K)) int32.
+    """
+    d = dispatch.resolve(use_pallas, interpret)
+    lg = logits.astype(jnp.float32)
+    safe_t = jnp.maximum(temps, 1e-6)
+    slots_iota = jnp.arange(logits.shape[0], dtype=jnp.int32)
+
+    if logits.ndim == 3:  # audio (S, K, V): legacy formulation
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def one(lgr, t, slot, tag, c):
+            return jax.random.categorical(_fold3(key, slot, tag, c),
+                                          lgr / t, axis=-1)
+
+        sampled = jax.vmap(one)(lg, safe_t, slots_iota, tags,
+                                counters).astype(jnp.int32)
+        return jnp.where((temps > 0.0)[:, None], sampled, greedy)
+
+    def noise_one(slot, tag, c):
+        # gumbel(k, (V,), f32): the exact draw categorical(k, (V,)-logits)
+        # makes internally, so the fused argmax reproduces it bitwise.
+        return jax.random.gumbel(_fold3(key, slot, tag, c),
+                                 (logits.shape[-1],), jnp.float32)
+
+    noise = jax.vmap(noise_one)(slots_iota, tags, counters)
+    if d.use_pallas:
+        return _sample_pallas(lg, noise, temps, interpret=d.interpret)
+    hot = lg / safe_t[:, None] + noise
+    return jnp.where(temps > 0.0, jnp.argmax(hot, axis=-1),
+                     jnp.argmax(lg, axis=-1)).astype(jnp.int32)

@@ -85,7 +85,9 @@ def main(argv=None):
     lats = [f.latency_s for f in done if f.latency_s > 0]
     traces = eng.compile_cache_stats()
     n_prefill = traces.get("prefill_total", traces.get("prefill", 0))
-    n_decode = traces.get("decode_and_sample", traces.get("decode", 0))
+    n_decode = traces.get("decode_total",
+                          traces.get("decode_and_sample",
+                                     traces.get("decode", 0)))
     print(f"latency p50 {_pct(lats, 50):.2f}s p95 {_pct(lats, 95):.2f}s | "
           f"steps {getattr(eng, 'steps', 0)} | "
           f"compiles: prefill {n_prefill}, decode {n_decode} | "

@@ -104,6 +104,28 @@ def paged_view(pool: Array, page_table: Array) -> Array:
     return gathered.reshape((b, t * pool.shape[1]) + pool.shape[2:])
 
 
+def fused_paged_ok(mask: MaskSpec, seq: int) -> bool:
+    """The fused split-K kernel (kernels/paged_attn, DESIGN.md §9) covers
+    single-token decode under the plain causal mask — exactly the paged
+    serving families (model.paged_supported excludes prefix/window
+    configs). Anything else falls back to the gather+softmax composition,
+    which doubles as the kernel's semantic oracle."""
+    return (seq == 1 and mask.causal and mask.window is None
+            and not mask.prefix_len)
+
+
+def _capped_pt(page_table: Array, page: int, kv_cap: Optional[int]) -> Array:
+    """Static prefix of the page table covering ``kv_cap`` positions — the
+    engine's KV-extent cap (DESIGN.md §9): the host guarantees every live
+    row's length fits inside it, so attending past the prefix would only
+    ever see masked lanes. None (or an oversized cap) keeps the table."""
+    if kv_cap is None:
+        return page_table
+    assert kv_cap % page == 0, "kv_cap must be a page multiple"
+    t_cap = max(1, min(kv_cap // page, page_table.shape[1]))
+    return page_table[:, :t_cap]
+
+
 def _pad_seq(a: Array, mult: int) -> Array:
     pad = (-a.shape[1]) % mult
     if pad == 0:
@@ -283,6 +305,8 @@ def attention_apply(
     cache: Optional[KVCache] = None,
     lengths: Optional[Array] = None,  # (B,) post-update cache lengths
     q_offset: int = 0,
+    kv_cap: Optional[int] = None,     # paged decode: KV-extent cap (tokens)
+    fused: bool = True,               # paged decode: fused split-K kernel
 ) -> tuple[Array, Optional[KVCache]]:
     """Self-attention; cache!=None selects the decode path."""
     q = dense(x, params["wq"], cfg)   # (B, S, H, hd)
@@ -303,9 +327,18 @@ def attention_apply(
                 k=paged_write(cache.k, k, write_pos, cache.pt),
                 v=paged_write(cache.v, v, write_pos, cache.pt),
                 pt=cache.pt)
-            out = decode_attention(q, paged_view(cache.k, cache.pt),
-                                   paged_view(cache.v, cache.pt),
-                                   positions, lengths, mask)
+            if fused and fused_paged_ok(mask, q.shape[1]):
+                # Fused split-K walk of the page table (DESIGN.md §9);
+                # the composition below stays as its semantic oracle.
+                from repro.kernels.paged_attn import paged_decode_attention
+
+                pt = _capped_pt(cache.pt, cache.k.shape[1], kv_cap)
+                out = paged_decode_attention(
+                    q[:, 0], cache.k, cache.v, pt, lengths)[:, None]
+            else:
+                out = decode_attention(q, paged_view(cache.k, cache.pt),
+                                       paged_view(cache.v, cache.pt),
+                                       positions, lengths, mask)
         else:
             cache = cache_update(cache, k, v, write_pos)
             out = decode_attention(q, cache.k, cache.v, positions, lengths,

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import (MaskSpec, NEG, blockwise_attention,
+from repro.models.attention import (MaskSpec, NEG, _capped_pt,
+                                    blockwise_attention, fused_paged_ok,
                                     mask_allowed, paged_view, paged_write)
 from repro.models.common import ParamSpec, dense, dense_in, rms_norm, rope
 
@@ -93,6 +94,8 @@ def mla_apply(
     cache: Optional[MLACache] = None,
     lengths: Optional[Array] = None,
     q_offset: int = 0,
+    kv_cap: Optional[int] = None,     # paged decode: KV-extent cap (tokens)
+    fused: bool = True,               # paged decode: fused split-K kernel
 ) -> tuple[Array, Optional[MLACache]]:
     m = cfg.mla
     b, s, _ = x.shape
@@ -117,12 +120,33 @@ def mla_apply(
     # Absorbed decode path.
     assert lengths is not None
     write_pos = positions[:, 0]
+    wkv_b = params["wkv_b"]  # (kv_lora, H, nope+v)
+    wk_b = wkv_b[..., : m.qk_nope_head_dim]       # (kv_lora, H, nope)
+    wv_b = wkv_b[..., m.qk_nope_head_dim:]        # (kv_lora, H, v)
+    # Absorb: q_lat[b,s,h,c] = Σ_n q_nope[b,s,h,n] wk_b[c,h,n]
+    q_lat = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
 
     if isinstance(cache, PagedMLACache):
         cache = PagedMLACache(
             c_kv=paged_write(cache.c_kv, c_kv, write_pos, cache.pt),
             k_rope=paged_write(cache.k_rope, k_rope, write_pos, cache.pt),
             pt=cache.pt)
+        if fused and fused_paged_ok(mask, s):
+            # Fused split-K latent MQA over the page pool (DESIGN.md §9);
+            # the gather+softmax composition below is its semantic oracle.
+            from repro.kernels.paged_attn import paged_decode_mla
+
+            pt = _capped_pt(cache.pt, cache.c_kv.shape[1], kv_cap)
+            o_lat = paged_decode_mla(
+                q_lat[:, 0], q_rope[:, 0], cache.c_kv, cache.k_rope, pt,
+                lengths, scale=scale)[:, None]  # (B, 1, H, kv_lora)
+            out = jnp.einsum("bshc,chv->bshv", o_lat,
+                             wv_b.astype(jnp.float32))
+            y = dense_in(out.astype(cfg.activation_dtype), params["wo"],
+                         cfg)
+            return y, cache
         c_kv_all = paged_view(cache.c_kv, cache.pt)      # (B, T*page, R)
         k_rope_all = paged_view(cache.k_rope, cache.pt)
     else:
@@ -134,13 +158,6 @@ def mla_apply(
             k_rope=jax.vmap(write)(cache.k_rope, k_rope, write_pos),
         )
         c_kv_all, k_rope_all = cache.c_kv, cache.k_rope
-    wkv_b = params["wkv_b"]  # (kv_lora, H, nope+v)
-    wk_b = wkv_b[..., : m.qk_nope_head_dim]       # (kv_lora, H, nope)
-    wv_b = wkv_b[..., m.qk_nope_head_dim:]        # (kv_lora, H, v)
-    # Absorb: q_lat[b,s,h,c] = Σ_n q_nope[b,s,h,n] wk_b[c,h,n]
-    q_lat = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
-                       wk_b.astype(jnp.float32))
-    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     s_lat = jnp.einsum("bshc,bjc->bhsj", q_lat,
                        c_kv_all.astype(jnp.float32))
     s_rope = jnp.einsum("bshr,bjr->bhsj", q_rope.astype(jnp.float32),

@@ -98,6 +98,8 @@ def block_apply(
     cache: Optional[PyTree],
     lengths: Optional[Array],
     q_offset: int = 0,
+    kv_cap: Optional[int] = None,
+    fused_paged: bool = True,
 ) -> Tuple[Array, Optional[PyTree], Dict[str, Array]]:
     aux = dict(AUX_ZERO)
     h = norm_apply(params["norm1"], x, cfg)
@@ -114,12 +116,12 @@ def block_apply(
         y, new_cache = mla_mod.mla_apply(
             params["mixer"], h, cfg, mask=default_mask(cfg),
             positions=positions, cache=cache, lengths=lengths,
-            q_offset=q_offset)
+            q_offset=q_offset, kv_cap=kv_cap, fused=fused_paged)
     else:
         y, new_cache = attn_mod.attention_apply(
             params["mixer"], h, cfg, mask=default_mask(cfg),
             positions=positions, cache=cache, lengths=lengths,
-            q_offset=q_offset)
+            q_offset=q_offset, kv_cap=kv_cap, fused=fused_paged)
     x = x + y
     h2 = norm_apply(params["norm2"], x, cfg)
     if kind == "moe":
@@ -275,7 +277,8 @@ def _head(params: PyTree, x: Array, cfg: ModelConfig) -> Array:
 
 
 def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
-                train: bool):
+                train: bool, kv_cap: Optional[int] = None,
+                fused_paged: bool = True):
     group_meta = layer_groups(cfg)
     aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_ZERO}
     new_caches = []
@@ -302,7 +305,8 @@ def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
             with common.weight_cache_scope(lp, lprep):
                 y, nc, aux_l = block_apply(
                     kind, lp, x_c, cfg, positions=positions, cache=lc,
-                    lengths=lengths, q_offset=q_offset)
+                    lengths=lengths, q_offset=q_offset, kv_cap=kv_cap,
+                    fused_paged=fused_paged)
             aux_c = {k: aux_c[k] + jnp.asarray(aux_l[k], jnp.float32)
                      for k in aux_c}
             return (y, aux_c), nc
@@ -502,12 +506,22 @@ def cache_axes(cfg: ModelConfig) -> ModelCache:
 
 def decode_step(params: PyTree, cache: ModelCache, tokens: Array,
                 cfg: ModelConfig,
-                patches: Optional[Array] = None) -> Tuple[Array, ModelCache]:
+                patches: Optional[Array] = None, *,
+                kv_cap: Optional[int] = None,
+                fused_paged: bool = True) -> Tuple[Array, ModelCache]:
     """One decode step. tokens (B, 1) (audio: (B, 1, K)).
 
     Positions are cache.lengths (append-at-end semantics); lengths advance
     by 1. Prefix content (meta/patches) is assumed already prefetched into
     the cache by `prefill`.
+
+    Paged caches route attention through the fused split-K kernel
+    (kernels/paged_attn; ``fused_paged=False`` keeps the PR 5
+    gather+softmax composition, the kernel's semantic oracle). ``kv_cap``
+    is the engine's static KV-extent cap in tokens (a page multiple):
+    attention walks only that prefix of each page table — the CALLER
+    guarantees every row's post-step length fits, or tail positions are
+    silently truncated. Dense caches ignore both knobs.
     """
     b = tokens.shape[0]
     batch = {"tokens": tokens}
@@ -521,7 +535,8 @@ def decode_step(params: PyTree, cache: ModelCache, tokens: Array,
     lengths = cache.lengths + 1
     x, _aux, new_groups = _run_groups(
         params, x, cfg, positions=positions, caches=list(cache.groups),
-        lengths=lengths, q_offset=0, train=False)
+        lengths=lengths, q_offset=0, train=False, kv_cap=kv_cap,
+        fused_paged=fused_paged)
     x = norm_apply(params["final_norm"], x, cfg)
     logits = _head(params, x, cfg)
     return logits, ModelCache(groups=tuple(new_groups), lengths=lengths)

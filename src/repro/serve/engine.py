@@ -61,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import sampling as sampling_kernel
 from repro.models import model as model_lib
 from repro.serve.request import (Finished, Request, counting_jit,
                                  percentile)
@@ -94,22 +95,13 @@ def sample_tokens(logits: Array, temps: Array, key: Array, tags: Array,
     ``fold_in(fold_in(fold_in(key, slot), tag), counter)`` — different
     slots (and different requests in the same slot) get different tokens
     even on identical logits, and a drain is reproducible given the seed.
+
+    Since PR 6 this delegates to the fused Gumbel-max formulation in
+    kernels/sampling (one masked argmax per slot; bit-identical streams,
+    pinned by tests/test_paged_attn.py), which routes through the Pallas
+    sampling kernel when the kernel dispatch opts in.
     """
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    safe_t = jnp.maximum(temps, 1e-6)
-    slots_iota = jnp.arange(logits.shape[0], dtype=jnp.int32)
-
-    def one(lg, t, slot, tag, c):
-        k = jax.random.fold_in(
-            jax.random.fold_in(jax.random.fold_in(key, slot), tag), c)
-        return jax.random.categorical(k, lg / t, axis=-1)
-
-    sampled = jax.vmap(one)(logits.astype(jnp.float32), safe_t, slots_iota,
-                            tags, counters).astype(jnp.int32)
-    use = temps > 0.0
-    if greedy.ndim == 2:  # audio: (S, K)
-        use = use[:, None]
-    return jnp.where(use, sampled, greedy)
+    return sampling_kernel.sample_tokens(logits, temps, key, tags, counters)
 
 
 def bucket_for(plen: int, cap: int, min_bucket: int = 8) -> int:
@@ -158,7 +150,8 @@ class Engine:
                  seed: int = 0, track_energy: bool = True,
                  decode_fn: Optional[Callable] = None,
                  min_bucket: int = 8, paged: bool = False,
-                 page_size: int = 16, num_pages: Optional[int] = None):
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 fused_decode: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -169,13 +162,21 @@ class Engine:
         self._tok_trail: Tuple[int, ...] = (
             (cfg.num_codebooks,) if cfg.family == "audio" else ())
         self._key = jax.random.PRNGKey(seed)
+        self.paged = paged
+        # Fused split-K paged decode (DESIGN.md §9): default ON for paged
+        # engines; ``fused_decode=False`` keeps the PR 5 gather+softmax
+        # composition (the kernel's semantic oracle and the benchmark
+        # baseline). Dense engines have no paged kernel to fuse.
+        self.fused_decode = bool(paged) if fused_decode is None \
+            else bool(fused_decode)
         # `decode_fn` exists for tests (rigged-logits fake models); it must
         # match model.decode_step's (params, cache, tokens) -> (logits,
-        # cache) contract.
+        # cache) contract. The default model fn additionally takes the
+        # static per-step KV-extent cap.
+        self._decode_takes_cap = decode_fn is None
         self._decode_fn = decode_fn or (
-            lambda p, c, t: model_lib.decode_step(p, c, t, cfg))
-
-        self.paged = paged
+            lambda p, c, t, cap=None: model_lib.decode_step(
+                p, c, t, cfg, kv_cap=cap, fused_paged=self.fused_decode))
         if paged:
             from repro.serve.kvpool import PagePool
             from repro.serve.radix import RadixCache
@@ -218,9 +219,13 @@ class Engine:
         self._latencies: List[float] = []
 
         self._traces: Dict[str, int] = {}
-        self._step_raw = self._make_decode_and_sample()
-        self._step = counting_jit(self._step_raw, self._traces,
-                                  "decode_and_sample")
+        # decode_and_sample variants, keyed by the static KV-extent cap
+        # (None = uncapped). Dense / non-fused engines only ever use None;
+        # fused paged engines compile one variant per pow2 page cap the
+        # drain actually reaches (≤ log2(n_ptab)+1 of them, ever).
+        self._step_variants: Dict[Optional[int],
+                                  Tuple[Callable, Callable]] = {}
+        self.decode_launches = 0
         self._prefill_raw: Dict[int, Callable] = {}
         self._prefill: Dict[int, Callable] = {}
 
@@ -236,12 +241,18 @@ class Engine:
         return self.state.cache
 
     # -- fused device callables ---------------------------------------------
-    def _make_decode_and_sample(self):
+    def _make_decode_and_sample(self, kv_cap: Optional[int] = None):
         cfg, eos, max_len = self.cfg, self.eos_id, self.max_len
         decode_fn, key = self._decode_fn, self._key
+        takes_cap = self._decode_takes_cap
 
         def step(params, state: EngineState):
-            logits, cache = decode_fn(params, state.cache, state.last_token)
+            if takes_cap:
+                logits, cache = decode_fn(params, state.cache,
+                                          state.last_token, kv_cap)
+            else:
+                logits, cache = decode_fn(params, state.cache,
+                                          state.last_token)
             lg = logits[:, 0]  # (slots, [K,] V)
             tok = sample_tokens(lg, state.temp, key, state.tag, state.counter)
             first = tok[..., 0] if tok.ndim == 2 else tok
@@ -295,6 +306,33 @@ class Engine:
                                  tags, key=key, eos=eos, slots=slots)
 
         return fn
+
+    def _get_step(self, cap: Optional[int]):
+        if cap not in self._step_variants:
+            raw = self._make_decode_and_sample(cap)
+            name = ("decode_and_sample" if cap is None
+                    else f"decode_and_sample[c{cap}]")
+            self._step_variants[cap] = (
+                raw, counting_jit(raw, self._traces, name))
+        return self._step_variants[cap]
+
+    def _decode_cap(self) -> Optional[int]:
+        """Static KV-extent cap (tokens) for this step's decode launch, or
+        None (uncapped). Host-side arithmetic only: the largest live extent
+        any active slot touches this step is ``prefix + prompt + generated``
+        (the decode writes at that extent's last position), rounded up to a
+        pow2 page count so the variant set stays logarithmic. Bitwise-safe:
+        pages past a row's length are masked to exact zero contribution, so
+        a capped launch equals the uncapped one on every live row."""
+        if not (self.paged and self.fused_decode and self._decode_takes_cap):
+            return None
+        need = 1
+        for req in self.active.values():
+            need = max(need, self._prefix + len(req.prompt)
+                       + max(len(req.generated), 1))
+        pages = -(-need // self.page_size)
+        t = 1 << max(pages - 1, 0).bit_length()
+        return min(t, self.n_ptab) * self.page_size
 
     def _get_prefill(self, sb: int):
         if sb not in self._prefill:
@@ -456,9 +494,12 @@ class Engine:
         # host already knows no slot can decode (nothing was active and
         # every admit exhausts its budget at prefill).
         dec = None
+        step_raw = None
         if had_active or any(r.max_new_tokens > 1 for _, r, _, _ in admits):
             self.steps += 1
-            self.state, dec = self._step(params, self.state)
+            self.decode_launches += 1
+            step_raw, step_fn = self._get_step(self._decode_cap())
+            self.state, dec = step_fn(params, self.state)
         if not waves and dec is None:
             return []
         # 3) the step's single device→host transfer: tokens + done masks
@@ -479,7 +520,7 @@ class Engine:
             # requests that finished at prefill are never charged a decode
             # share they didn't use.
             if self._hw is not None:
-                self._hw.observe_decode(self._step_raw, params, self.state)
+                self._hw.observe_decode(step_raw, params, self.state)
                 share = self._hw.on_decode_step(len(self.active))
                 for req in self.active.values():
                     req.energy_pj += share
@@ -543,6 +584,11 @@ class Engine:
         stats = dict(self._traces)
         stats["prefill_total"] = sum(
             v for k, v in self._traces.items() if k.startswith("prefill["))
+        # Cap-variant decode compiles roll up here: ``decode_and_sample``
+        # plus any ``decode_and_sample[c<cap>]`` entries.
+        stats["decode_total"] = sum(
+            v for k, v in self._traces.items()
+            if k.startswith("decode_and_sample"))
         return stats
 
     def stats(self) -> Dict[str, float]:
@@ -560,7 +606,9 @@ class Engine:
             "latency_p95_s": pct(95),
             "prefill_compiles": float(
                 self.compile_cache_stats()["prefill_total"]),
-            "decode_compiles": float(self._traces.get("decode_and_sample", 0)),
+            "decode_compiles": float(
+                self.compile_cache_stats()["decode_total"]),
+            "decode_launches": float(self.decode_launches),
         }
         if self.paged:
             out.update({

@@ -320,7 +320,9 @@ def test_paged_matches_dense_greedy(family):
 
 def test_paged_compile_once_per_suffix_bucket():
     """The paged engine keeps the §7 recompile contract: one prefill
-    compile per SUFFIX bucket, one decode compile, one transfer/step."""
+    compile per SUFFIX bucket, one decode compile per KV-extent cap
+    variant (PR 6: a handful of pow2 page caps, not one per step), one
+    transfer/step."""
     cfg = small_cfg()
     params = M.init(cfg, jax.random.PRNGKey(0))
     eng, done = drain(params, cfg, prefix_stream(cfg, n=6), paged=True,
@@ -328,7 +330,8 @@ def test_paged_compile_once_per_suffix_bucket():
     assert len(done) == 6
     stats = eng.compile_cache_stats()
     assert stats["prefill_total"] <= 3  # misses: 32-bucket; hits: 8/16
-    assert stats["decode_and_sample"] == 1
+    assert 1 <= stats["decode_total"] <= 3  # pow2 cap variants, not steps
+    assert stats["decode_total"] < eng.decode_launches
     assert eng.host_transfers == eng.steps
 
 
