@@ -53,6 +53,9 @@ SUMMARY_KEYS = (
     "serve/prefix_paged_speedup_x",
     "serve/prefix_saved_pj",
     "serve/fused_paged_speedup_x",
+    "serve/chunked_p95_ratio_x",
+    "serve/chunked_tok_per_s_ratio",
+    "serve/bursty_chunked_ttft_p95_s",
     "kernel/paged_attn_gqa_speedup_x",
     "kernel/paged_attn_mla_speedup_x",
 )
@@ -65,6 +68,11 @@ AUTOTUNE_PREFIX = "kernel/paged_attn_autotune/"
 # the same process, which is what stays stable.
 CHECK_BANDS = {
     "serve/fused_paged_speedup_x": ("higher", 0.25, 1.3),
+    # The stall-kill ratio is structurally ~10x but its magnitude is the
+    # big-wave/chunk-step wall ratio, which moves with the host — a wide
+    # relative band plus the PR's absolute 1.25x/0.9x acceptance floors.
+    "serve/chunked_p95_ratio_x": ("higher", 0.6, 1.25),
+    "serve/chunked_tok_per_s_ratio": ("higher", 0.3, 0.9),
     "serve/prefix_paged_speedup_x": ("higher", 0.25, 0.9),
     "serve/speedup_x": ("higher", 0.25, 1.0),
     "kernel/paged_attn_gqa_speedup_x": ("higher", 0.25, 1.0),

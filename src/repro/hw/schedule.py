@@ -377,6 +377,83 @@ class ServeEnergyModel:
 # ---------------------------------------------------------------------------
 
 
+# ---------------------------------------------------------------------------
+# Admission cost + per-step budget (serve/sched.py, DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBudget:
+    """Per-engine-step prefill admission budget (DESIGN.md §10).
+
+    ``prefill_tokens`` bounds the prefill positions launched per step (the
+    latency knob: one chunk wave of `slots * chunk_tokens` is the natural
+    setting); ``prefill_pj`` bounds the projected crossbar read energy of
+    those positions (the energy knob the TimeFloats twin prices). None
+    disables that axis. Chunk CONTINUATIONS are pre-charged before any new
+    admission — a request mid-prefill always makes progress."""
+
+    prefill_tokens: Optional[int] = None
+    prefill_pj: Optional[float] = None
+
+    def tracker(self) -> "BudgetTracker":
+        return BudgetTracker(self)
+
+
+class BudgetTracker:
+    """Mutable within-step remainder of a `StepBudget`."""
+
+    def __init__(self, budget: Optional[StepBudget]):
+        b = budget or StepBudget()
+        self.tokens_left = (float("inf") if b.prefill_tokens is None
+                            else int(b.prefill_tokens))
+        self.pj_left = (float("inf") if b.prefill_pj is None
+                        else float(b.prefill_pj))
+
+    def fits(self, tokens: int, pj: float) -> bool:
+        return tokens <= self.tokens_left and pj <= self.pj_left
+
+    def spend(self, tokens: int, pj: float) -> None:
+        self.tokens_left -= tokens
+        self.pj_left -= pj
+
+
+class AdmissionCost:
+    """Host-side per-chunk prefill pJ + projected decode occupancy used by
+    `serve/sched.Scheduler` to score queued requests. Built from the
+    analytic per-token forward census (`per_token_forward_cost` over the
+    mapped placement — shape-only, no tracing), so scoring a deep queue is
+    pure arithmetic. Without a placement (quant != "timefloats") the costs
+    fall back to 1.0 pJ/token: scores degrade gracefully to token counts,
+    and the budget's pJ axis becomes a token bound."""
+
+    def __init__(self, token_pj: float = 1.0, decode_token_pj: float = 1.0):
+        self.token_pj = float(token_pj)
+        self.decode_token_pj = float(decode_token_pj)
+
+    @classmethod
+    def for_model(cls, params, cfg) -> "AdmissionCost":
+        if getattr(cfg, "quant", None) != "timefloats":
+            return cls()
+        from repro.hw.mapper import map_params
+
+        c = per_token_forward_cost(map_params(params, cfg), cfg)
+        return cls(token_pj=c.energy_pj, decode_token_pj=c.energy_pj)
+
+    def prefill_pj(self, tokens: int) -> float:
+        """Projected crossbar pJ of prefilling ``tokens`` positions (one
+        chunk, one bucket row — the census is linear in positions)."""
+        return tokens * self.token_pj
+
+    def request_score(self, remaining_prompt: int, max_new: int) -> float:
+        """Total projected cost of finishing a request from here: the
+        un-prefilled prompt remainder plus its decode-slot occupancy
+        (max_new decode reads). Lower = cheaper to serve = admitted first
+        under the "cost" policy."""
+        return (remaining_prompt * self.token_pj
+                + max_new * self.decode_token_pj)
+
+
 def per_token_forward_cost(placement: Placement,
                            cfg: Optional[Any] = None) -> CensusCost:
     """Analytic forward-read census for ONE token through every placed

@@ -37,13 +37,38 @@ def _fold3(key: Array, slot: Array, tag: Array, counter: Array) -> Array:
         jax.random.fold_in(jax.random.fold_in(key, slot), tag), counter)
 
 
+def argmax_low(x: Array, axis: int = -1) -> Array:
+    """Argmax with EXPLICIT lowest-index tie-breaking.
+
+    bf16 activations quantize logits onto a coarse grid, so exact argmax
+    ties are common on real rows — and a compiled `jnp.argmax`'s tie
+    winner is a property of the XLA reduction order, i.e. of the program
+    it is fused into. Two compositions with bitwise-equal logits (the
+    fused sampler vs its reference) can then emit different tokens. This
+    spells the tie rule out — min index among the maxima — so every
+    program agrees, and greedy parity pins survive bf16 (DESIGN.md §10).
+    """
+    m = jnp.max(x, axis=axis, keepdims=True)
+    n = x.shape[axis]
+    shape = [1] * x.ndim
+    shape[axis] = n
+    iota = jnp.arange(n, dtype=jnp.int32).reshape(shape)
+    return jnp.min(jnp.where(x == m, iota, n), axis=axis).astype(jnp.int32)
+
+
 def _sample_kernel(lg_ref, noise_ref, t_ref, out_ref):
-    """One grid program = one slot: masked argmax over its logit row."""
+    """One grid program = one slot: masked argmax over its logit row
+    (lowest-index tie-break, matching the jnp oracle's `argmax_low`)."""
     t = t_ref[0, 0]
     lg = lg_ref[0]
+    v = lg.shape[0]
     hot = lg / jnp.maximum(t, 1e-6) + noise_ref[0]
-    pick = jnp.where(t > 0.0, jnp.argmax(hot, axis=-1),
-                     jnp.argmax(lg, axis=-1))
+    iota = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+
+    def low(x):
+        return jnp.min(jnp.where(x == jnp.max(x), iota, v))
+
+    pick = jnp.where(t > 0.0, low(hot), low(lg))
     out_ref[0, 0] = pick.astype(jnp.int32)
 
 
@@ -82,7 +107,7 @@ def sample_tokens(logits: Array, temps: Array, key: Array, tags: Array,
     slots_iota = jnp.arange(logits.shape[0], dtype=jnp.int32)
 
     if logits.ndim == 3:  # audio (S, K, V): legacy formulation
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        greedy = argmax_low(logits, axis=-1)
 
         def one(lgr, t, slot, tag, c):
             return jax.random.categorical(_fold3(key, slot, tag, c),
@@ -102,5 +127,5 @@ def sample_tokens(logits: Array, temps: Array, key: Array, tags: Array,
     if d.use_pallas:
         return _sample_pallas(lg, noise, temps, interpret=d.interpret)
     hot = lg / safe_t[:, None] + noise
-    return jnp.where(temps > 0.0, jnp.argmax(hot, axis=-1),
-                     jnp.argmax(lg, axis=-1)).astype(jnp.int32)
+    return jnp.where(temps > 0.0, argmax_low(hot, axis=-1),
+                     argmax_low(lg, axis=-1)).astype(jnp.int32)

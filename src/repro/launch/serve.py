@@ -37,6 +37,12 @@ def main(argv=None):
     ap.add_argument("--prefix-len", type=int, default=0,
                     help="shared system-prompt tokens prepended to every "
                          "request (exercises the radix prefix cache)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="chunked prefill: pow2 chunk size (DESIGN §10; "
+                         "0 = whole-prompt waves; attention/MLA archs)")
+    ap.add_argument("--sched", default="fcfs", choices=["fcfs", "cost"],
+                    help="admission policy: arrival order or pJ-scored "
+                         "cost-aware (hw twin Table-I costs)")
     args = ap.parse_args(argv)
 
     import jax
@@ -55,13 +61,17 @@ def main(argv=None):
           f"params={cfg.param_count() / 1e6:.1f}M slots={args.slots}")
 
     params = M.init(cfg, jax.random.PRNGKey(args.seed))
-    if args.paged and args.engine != "fused":
-        print("--paged requires the fused engine", file=sys.stderr)
+    if args.engine != "fused" and (args.paged or args.chunk_tokens
+                                   or args.sched != "fcfs"):
+        print("--paged/--chunk-tokens/--sched require the fused engine",
+              file=sys.stderr)
         return 2
     if args.engine == "fused":
         eng = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
                      seed=args.seed, paged=args.paged,
-                     page_size=args.page_size)
+                     page_size=args.page_size,
+                     chunk_tokens=args.chunk_tokens or None,
+                     sched=args.sched)
     else:
         eng = LegacyEngine(params, cfg, slots=args.slots,
                            max_len=args.max_len, seed=args.seed)
@@ -88,10 +98,16 @@ def main(argv=None):
     n_decode = traces.get("decode_total",
                           traces.get("decode_and_sample",
                                      traces.get("decode", 0)))
+    ttfts = [f.ttft_s for f in done if f.ttft_s > 0]
     print(f"latency p50 {_pct(lats, 50):.2f}s p95 {_pct(lats, 95):.2f}s | "
+          f"ttft p50 {_pct(ttfts, 50):.2f}s p95 {_pct(ttfts, 95):.2f}s | "
           f"steps {getattr(eng, 'steps', 0)} | "
           f"compiles: prefill {n_prefill}, decode {n_decode} | "
           f"host transfers {getattr(eng, 'host_transfers', 'n/a')}")
+    if args.chunk_tokens:
+        print(f"chunked: {getattr(eng, 'chunk_waves', 0)} chunk waves "
+              f"(chunk_tokens={args.chunk_tokens}, sched={args.sched}), "
+              f"{getattr(eng, 'decode_stall_steps', 0)} stalled steps")
     hw = eng.hw_telemetry()
     if hw is not None:  # §6 twin: projected crossbar energy + utilization
         per_tok = [f.pj_per_token for f in done]

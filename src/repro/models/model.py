@@ -615,10 +615,25 @@ def scatter_cache_rows(full: ModelCache, rows: ModelCache,
     return ModelCache(groups=groups, lengths=lengths)
 
 
+def gather_cache_rows(cache: ModelCache, slot_ids: Array) -> ModelCache:
+    """Read per-slot cache rows out of the big slot cache into a
+    (L, n, ...) per-group stack — the inverse of `scatter_cache_rows`.
+    Out-of-range ids clip to row 0: those rows are dummy padding whose
+    scatter later drops, and the chunked prefill runs them with length 0
+    so the copied content is never attended."""
+    ids = jnp.clip(jnp.asarray(slot_ids, jnp.int32), 0,
+                   cache.lengths.shape[0] - 1)
+    groups = tuple(jax.tree.map(lambda f: f[:, ids], g)
+                   for g in cache.groups)
+    return ModelCache(groups=groups, lengths=cache.lengths[ids])
+
+
 def prefill_into_slots(params: PyTree, batch: Dict[str, Array],
                        cfg: ModelConfig, cache: ModelCache,
                        lengths: Array, slot_ids: Array, *,
-                       max_len: int) -> Tuple[Array, ModelCache]:
+                       max_len: int,
+                       offsets: Optional[Array] = None
+                       ) -> Tuple[Array, ModelCache]:
     """Bucketed batched prefill straight into slot rows (DESIGN.md §7).
 
     Runs a right-padded batch of prompts through one ragged `prefill` on a
@@ -627,10 +642,24 @@ def prefill_into_slots(params: PyTree, batch: Dict[str, Array],
     init-one-cache-per-prompt-and-splice dance. ``lengths`` is the per-row
     valid TOTAL length (prefix + prompt); out-of-range slot ids are padding
     rows and write nowhere. Returns (last-valid-position logits, updated
-    cache)."""
+    cache).
+
+    ``offsets`` (B,) makes the prefill RESUMABLE (the chunked-prefill
+    path, DESIGN.md §10), mirroring `prefill_into_pages`' absolute-offset
+    contract: instead of a zeroed scratch, the slots' CURRENT rows are
+    gathered back out, row r's tokens land at absolute positions
+    ``offsets[r] + [0, S)`` on top of the K/V earlier chunks already
+    wrote, and the updated rows (with lengths = ``lengths``) scatter
+    back. Attention/MLA families only — the same boundary as the paged
+    path (SSM/hybrid recurrent state is not position-addressable, so a
+    mid-sequence resume has no meaning for it)."""
     n = batch["tokens"].shape[0]
-    scratch = init_cache(cfg, n, max_len)
-    logits, rows = prefill(params, batch, cfg, scratch, lengths=lengths)
+    if offsets is None:
+        scratch = init_cache(cfg, n, max_len)
+    else:
+        scratch = gather_cache_rows(cache, slot_ids)
+    logits, rows = prefill(params, batch, cfg, scratch, lengths=lengths,
+                           offsets=offsets)
     return logits, scatter_cache_rows(cache, rows, slot_ids)
 
 

@@ -1,6 +1,6 @@
 """Device-resident continuous batching: the whole engine step is (at most)
-two jitted device calls (DESIGN.md §7), with an optional memory-virtualized
-paged cache + radix prefix reuse on top (DESIGN.md §8).
+three jitted device calls (DESIGN.md §7/§10), with an optional
+memory-virtualized paged cache + radix prefix reuse on top (DESIGN.md §8).
 
 The seed engine (now `serve/legacy.py`) was host-driven: one prefill
 compile per distinct prompt length, host cache splicing, per-slot Python
@@ -23,6 +23,31 @@ device:
   new tokens and the done mask, fetched with a single `jax.device_get`
   (`host_transfers` counts them; tests pin one per step).
 
+**Chunked prefill** (`chunk_tokens=C`, DESIGN.md §10): a prompt longer
+than C no longer monopolizes a step — its prefill is split into C-token
+chunks, at most ONE fixed-shape chunk wave per step, interleaved with the
+fused decode, so decoding slots never stall more than one chunk behind a
+long prompt (the mixed-traffic p95 killer). The chunk state machine is
+device-minimal: a mid-prefill slot's progress IS its ``cache.lengths``
+entry (each chunk resumes at absolute offset `Request.prefilled` via the
+models' offsets contract), its ``active`` mask stays False so decode
+effects never persist for it, and the host mirrors slot→request in
+``_chunking``. Sampling/admission updates run only on a request's FINAL
+chunk, which makes greedy streams bit-identical to the un-chunked engine:
+per-position K/V is a pure function of the prefix, and ragged prefill
+always attends through the same masked full-extent view regardless of
+how many query positions a wave carries. Attention/MLA families only —
+the same boundary as paging (SSM/hybrid recurrence has no
+position-addressable resume point).
+
+**Cost-aware admission** (`sched="cost"`, `budget=`): a host scheduler
+(`serve/sched.Scheduler`) replaces strict FCFS — it scores the queue
+front with `hw/schedule.AdmissionCost` (per-chunk crossbar pJ from the
+TimeFloats Table-I read census + projected decode occupancy) and admits
+against a per-step `StepBudget` (prefill tokens / pJ), with bounded
+skip-ahead past pool-blocked requests and a starvation guard (a request
+passed over ``starve_after`` times regains strict priority).
+
 **Paged mode** (`paged=True`, attention/MLA families): the dense
 (slots, max_len) cache rows are replaced by a fixed inventory of
 ``page_size``-token pages (`serve/kvpool.PagePool`) addressed through
@@ -38,7 +63,7 @@ to the dense engine, which remains the A/B baseline. (MoE scope note:
 expert-capacity drops depend on the whole wave's routing, so the
 identity holds for MoE configs only while routing stays drop-free —
 suffix prefill sees a different dispatch batch than a full re-prefill
-would; DESIGN.md §8.)
+would; DESIGN.md §8. The same caveat bounds the chunked identity.)
 
 `compile_cache_stats()` exposes per-callable trace counts so tests (and
 the serve benchmark) can assert the recompile contract instead of hoping.
@@ -54,19 +79,28 @@ route nothing — the PR 4 padded-capacity caveat is fixed and pinned).
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+from collections import deque
+from typing import (Callable, Deque, Dict, List, NamedTuple, Optional,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.hw.schedule import StepBudget
 from repro.kernels import sampling as sampling_kernel
 from repro.models import model as model_lib
 from repro.serve.request import (Finished, Request, counting_jit,
                                  percentile)
+from repro.serve.sched import Scheduler
 
 Array = jax.Array
+
+# Prefill waves longer than this count as decode stalls when launched
+# beside active decode slots (`decode_stall_steps`); a chunked engine's
+# own chunk_tokens overrides it.
+STALL_REF_TOKENS = 64
 
 
 class EngineState(NamedTuple):
@@ -75,7 +109,11 @@ class EngineState(NamedTuple):
     All leaves have a leading (slots,) dim except the cache. ``counter``
     is the per-slot sampling step fed to `jax.random.fold_in` (0 = the
     prefill token); ``tag`` is the occupying request's uid, so sampling
-    streams are per-request, not per-slot-reuse."""
+    streams are per-request, not per-slot-reuse.
+
+    A slot mid-chunked-prefill needs no extra leaf: its resume offset is
+    its ``cache.lengths`` entry and ``active`` stays False until the
+    final chunk admits it (DESIGN.md §10)."""
 
     cache: model_lib.ModelCache
     last_token: Array     # (slots, 1[, K]) int32
@@ -97,9 +135,10 @@ def sample_tokens(logits: Array, temps: Array, key: Array, tags: Array,
     even on identical logits, and a drain is reproducible given the seed.
 
     Since PR 6 this delegates to the fused Gumbel-max formulation in
-    kernels/sampling (one masked argmax per slot; bit-identical streams,
-    pinned by tests/test_paged_attn.py), which routes through the Pallas
-    sampling kernel when the kernel dispatch opts in.
+    kernels/sampling (one masked argmax per slot with an explicit
+    lowest-index tie rule; bit-identical streams, pinned by
+    tests/test_paged_attn.py), which routes through the Pallas sampling
+    kernel when the kernel dispatch opts in.
     """
     return sampling_kernel.sample_tokens(logits, temps, key, tags, counters)
 
@@ -115,9 +154,9 @@ def bucket_for(plen: int, cap: int, min_bucket: int = 8) -> int:
 
 def _admit_update(state: EngineState, cache, logits, ids, temps, budgets,
                   tags, *, key, eos, slots):
-    """Shared tail of every prefill wave (dense and paged): sample the
-    first token, apply the admission state updates at ``ids`` (dummy rows
-    drop), and report per-row done masks."""
+    """Shared tail of every prefill wave (dense, paged, and chunked):
+    sample the first token, apply the admission state updates at ``ids``
+    (dummy — and mid-chunk — rows drop), and report per-row done masks."""
     lg = logits[:, 0]
     tok = sample_tokens(lg, temps, key, tags,
                         jnp.zeros((slots,), jnp.int32))
@@ -143,7 +182,8 @@ def _admit_update(state: EngineState, cache, logits, ids, temps, budgets,
 
 class Engine:
     """Fixed-slot continuous batching with a fused device step; optional
-    paged cache pool + radix prefix reuse (``paged=True``)."""
+    chunked prefill (``chunk_tokens``), cost-aware admission (``sched``,
+    ``budget``), and paged cache pool + radix prefix reuse (``paged``)."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
@@ -151,7 +191,10 @@ class Engine:
                  decode_fn: Optional[Callable] = None,
                  min_bucket: int = 8, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 fused_decode: Optional[bool] = None):
+                 fused_decode: Optional[bool] = None,
+                 chunk_tokens: Optional[int] = None,
+                 sched: str = "fcfs",
+                 budget: Optional[StepBudget] = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -177,6 +220,17 @@ class Engine:
         self._decode_fn = decode_fn or (
             lambda p, c, t, cap=None: model_lib.decode_step(
                 p, c, t, cfg, kv_cap=cap, fused_paged=self.fused_decode))
+        # Chunked prefill (DESIGN.md §10): pow2 chunk size or None (off).
+        self.chunk_tokens = int(chunk_tokens) if chunk_tokens else None
+        if self.chunk_tokens is not None:
+            c = self.chunk_tokens
+            assert c > 0 and (c & (c - 1)) == 0, \
+                "chunk_tokens must be a power of two"
+            assert c < max_len, "chunk_tokens must be below max_len"
+            assert model_lib.paged_supported(cfg), \
+                "chunked prefill covers the attention/MLA families " \
+                "(resume needs position-addressable cache rows; DESIGN §10)"
+        self._stall_ref = self.chunk_tokens or STALL_REF_TOKENS
         if paged:
             from repro.serve.kvpool import PagePool
             from repro.serve.radix import RadixCache
@@ -211,12 +265,33 @@ class Engine:
             remaining=z_i, counter=z_i, tag=z_i)
 
         self.active: Dict[int, Request] = {}      # slot -> request (mirror)
-        self.queue: List[Request] = []
+        self._chunking: Dict[int, Request] = {}   # slot -> mid-prefill req
+        # deque: FCFS admission pops the head every step; a list's pop(0)
+        # is O(queue) per admission — O(n^2) across a deep-queue drain.
+        self.queue: Deque[Request] = deque()
+        # Admission scheduler. The pJ-priced cost model is only built when
+        # something consumes it (cost policy or an energy budget) — the
+        # placement walk is host work every engine shouldn't pay.
+        if sched == "cost" or (budget is not None
+                               and budget.prefill_pj is not None):
+            from repro.hw.schedule import AdmissionCost
+
+            acost = AdmissionCost.for_model(params, cfg)
+        else:
+            acost = None
+        self.sched = Scheduler(sched, cost=acost, budget=budget,
+                               chunk_tokens=self.chunk_tokens)
         self.steps = 0
         self.host_transfers = 0
+        self.chunk_waves = 0
+        self.decode_stall_steps = 0
         self._finished_count = 0
         self._new_tokens = 0
         self._latencies: List[float] = []
+        self._ttfts: List[float] = []
+        # (uid, offset, n_tokens) per chunk-wave row — the property tests
+        # assert offsets tile each prompt exactly once.
+        self.chunk_log: List[Tuple[int, int, int]] = []
 
         self._traces: Dict[str, int] = {}
         # decode_and_sample variants, keyed by the static KV-extent cap
@@ -228,6 +303,7 @@ class Engine:
         self.decode_launches = 0
         self._prefill_raw: Dict[int, Callable] = {}
         self._prefill: Dict[int, Callable] = {}
+        self._chunk_wave_fns: Optional[Tuple[Callable, Callable]] = None
 
         self._hw = None
         if track_energy and cfg.quant == "timefloats":
@@ -307,6 +383,39 @@ class Engine:
 
         return fn
 
+    def _make_chunk_wave(self):
+        """ONE fixed-shape callable for every chunk wave (compiles once,
+        ever — the shape is (slots, chunk_tokens) regardless of which
+        slots ride it). ``write_ids`` selects the cache rows written;
+        ``admit_ids`` is the slot id on final-chunk rows and ``slots``
+        (drop) on mid-chunk rows, so only final chunks sample/admit."""
+        cfg, eos, max_len = self.cfg, self.eos_id, self.max_len
+        slots, key, paged = self.slots, self._key, self.paged
+
+        def fn(params, state: EngineState, tokens, tots, offsets,
+               write_ids, admit_ids, temps, budgets, tags):
+            batch = {"tokens": tokens}
+            if paged:
+                logits, cache = model_lib.prefill_into_pages(
+                    params, batch, cfg, state.cache, tots, offsets,
+                    write_ids)
+            else:
+                logits, cache = model_lib.prefill_into_slots(
+                    params, batch, cfg, state.cache, tots, write_ids,
+                    max_len=max_len, offsets=offsets)
+            return _admit_update(state, cache, logits, admit_ids, temps,
+                                 budgets, tags, key=key, eos=eos,
+                                 slots=slots)
+
+        return fn
+
+    def _get_chunk_wave(self):
+        if self._chunk_wave_fns is None:
+            raw = self._make_chunk_wave()
+            self._chunk_wave_fns = (raw, counting_jit(
+                raw, self._traces, f"prefill[c{self.chunk_tokens}]"))
+        return self._chunk_wave_fns
+
     def _get_step(self, cap: Optional[int]):
         if cap not in self._step_variants:
             raw = self._make_decode_and_sample(cap)
@@ -323,7 +432,9 @@ class Engine:
         (the decode writes at that extent's last position), rounded up to a
         pow2 page count so the variant set stays logarithmic. Bitwise-safe:
         pages past a row's length are masked to exact zero contribution, so
-        a capped launch equals the uncapped one on every live row."""
+        a capped launch equals the uncapped one on every live row.
+        Mid-chunk slots don't extend the cap: their decode row is garbage
+        by construction (inactive mask) and truncation is harmless."""
         if not (self.paged and self.fused_decode and self._decode_takes_cap):
             return None
         need = 1
@@ -345,6 +456,13 @@ class Engine:
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
+        # Stamp submission here, not at Request construction: callers build
+        # request objects (and benchmarks clone templates) long before they
+        # hand them over, and latency/TTFT are measured from THIS moment.
+        req.submit_t = time.monotonic()
+        req.prefilled = 0
+        req.skipped = 0
+        req.queued_step = self.sched.now
         self.queue.append(req)
 
     def _bucket(self, plen: int) -> int:
@@ -357,12 +475,20 @@ class Engine:
     def _try_reserve(self, req: Request):
         """Radix-match the prompt (pins shared pages) and allocate the
         non-shared remainder, evicting LRU tree leaves on shortfall.
-        Returns (skip, pages) or None (leave the request queued)."""
+        Returns (skip, pages) or None (leave the request queued).
+        A request that can NEVER fit raises immediately — with skip-ahead
+        admission it would otherwise starve silently while smaller
+        requests flow past it."""
         ps = self.page_size
         plen = len(req.prompt)
-        pages, skip = self.radix.match(req.prompt)
         last_write = min(plen + req.max_new_tokens - 2, self.max_len - 1)
         need = last_write // ps + 1
+        if need > self.pool.total_pages:
+            raise ValueError(
+                "request needs more pages than the pool holds "
+                f"(prompt {plen} + budget {req.max_new_tokens}, "
+                f"{self.pool.total_pages} pages)")
+        pages, skip = self.radix.match(req.prompt)
         assert need > len(pages)  # >=1 suffix token always prefills
         # all_or_nothing: an admission that fails anyway must not destroy
         # cached prefixes the next requests would have reused.
@@ -395,15 +521,25 @@ class Engine:
             for p in self._slot_pages.pop(slot, []):
                 self.pool.release(p)
 
-    def _register_admit(self, req: Request, skip: int, pages) -> None:
-        ps = self.page_size
+    def _count_admit(self, req: Request, skip: int) -> None:
         self._prompt_tokens += len(req.prompt)
         self._prefix_tokens += skip
         if skip:
             self._prefix_hits += 1
+
+    def _insert_radix(self, req: Request, pages) -> None:
+        """Index the prompt's full pages in the radix tree. For chunked
+        admissions this runs at the FINAL chunk, not at admission — the
+        pages' K/V only exists once every chunk has run, and an insert at
+        admission would let a concurrent request borrow unwritten pages."""
+        ps = self.page_size
         n_full = len(req.prompt) // ps
         if n_full:
             self.radix.insert(req.prompt[: n_full * ps], pages[:n_full])
+
+    def _register_admit(self, req: Request, skip: int, pages) -> None:
+        self._count_admit(req, skip)
+        self._insert_radix(req, pages)
 
     def _zero_wave_args(self, sb: int):
         """Host-side zero argument set for one paged bucket shape — used
@@ -414,42 +550,112 @@ class Engine:
                 np.zeros((self.slots,), np.float32),
                 np.ones((self.slots,), np.int32), z)
 
+    # -- the chunk wave ------------------------------------------------------
+    def _run_chunk_wave(self, params):
+        """Advance every mid-prefill slot by one chunk in ONE fixed-shape
+        call; final-chunk rows sample their first token and join
+        ``active`` (same admission semantics as a classic wave). Returns
+        (admit_rows, device_out) for the step's single host transfer."""
+        C = self.chunk_tokens
+        slots = self.slots
+        group = sorted(self._chunking.items())
+        tokens = np.zeros((slots, C) + self._tok_trail, np.int32)
+        tots = np.zeros((slots,), np.int32)
+        offs = np.zeros((slots,), np.int32)
+        wids = np.full((slots,), slots, np.int32)   # dummy rows: drop
+        aids = np.full((slots,), slots, np.int32)   # mid-chunk rows: drop
+        temps = np.zeros((slots,), np.float32)
+        budgets = np.ones((slots,), np.int32)
+        tags = np.zeros((slots,), np.int32)
+        finals: List[Tuple[int, int, Request]] = []
+        for r, (slot, req) in enumerate(group):
+            p = np.asarray(req.prompt)
+            start = req.prefilled
+            n = min(C, len(p) - start)
+            tokens[r, :n] = p[start:start + n]
+            offs[r] = start
+            tots[r] = start + n
+            wids[r] = slot
+            req.prefilled = start + n
+            self.chunk_log.append((req.uid, start, n))
+            if req.prefilled == len(p):  # final chunk: sample + admit
+                aids[r] = slot
+                temps[r] = req.temperature
+                budgets[r] = req.max_new_tokens
+                tags[r] = req.uid & 0x7FFFFFFF
+                finals.append((r, slot, req))
+        fn_raw, fn = self._get_chunk_wave()
+        args = (tokens, tots, offs, wids, aids, temps, budgets, tags)
+        if self._hw is not None:
+            mode = "paged" if self.paged else "dense"
+            pj = self._hw.prefill_bucket_pj(
+                ("chunk", C, slots, mode), fn_raw, params, self.state,
+                *args)
+            share = self._hw.on_prefill_wave(pj, len(group))
+            for _slot, req in group:
+                req.energy_pj += share
+        self.state, pout = fn(params, self.state, *args)
+        self.chunk_waves += 1
+        rows: List[Tuple[int, int, Request]] = []
+        for r, slot, req in finals:
+            del self._chunking[slot]
+            self.active[slot] = req
+            if self.paged:
+                self._insert_radix(req, self._slot_pages[slot])
+            rows.append((r, slot, req))
+        return rows, pout
+
     def step(self) -> List[Finished]:
-        """One engine step: admit (bucketed batched prefill) + one fused
-        decode_and_sample; a single device→host transfer of the new tokens
-        and the done mask at the end."""
+        """One engine step: scheduler-driven admission, at most one chunk
+        wave + the classic bucketed prefill waves, one fused
+        decode_and_sample; a single device→host transfer of the new
+        tokens and the done mask at the end."""
         params = self.params
         had_active = bool(self.active)
         freed_slots: List[int] = []
-        # 1) admit queued requests into free slots, grouped by bucket
-        free = [i for i in range(self.slots) if i not in self.active]
+        C = self.chunk_tokens
+        tracker = self.sched.begin_step()
+        # Pre-charge chunk continuations on the budget: in-flight prefills
+        # always make progress and outrank any new admission.
+        if self._chunking:
+            cont = sum(min(C, len(r.prompt) - r.prefilled)
+                       for r in self._chunking.values())
+            tracker.spend(cont, self.sched.cost.prefill_pj(cont))
+        # 1) admission: the scheduler picks against budget + reservation
+        free = [i for i in range(self.slots)
+                if i not in self.active and i not in self._chunking]
+        picks = self.sched.pick(self.queue, len(free), tracker,
+                                self._try_reserve if self.paged else None)
         admits: List[Tuple[int, Request, int, Optional[List[int]]]] = []
-        while free and self.queue:
-            req = self.queue[0]
-            if self.paged:
-                grant = self._try_reserve(req)
-                if grant is None:
-                    if not had_active and not admits:
-                        raise ValueError(
-                            "request needs more pages than the pool holds "
-                            f"(prompt {len(req.prompt)} + budget "
-                            f"{req.max_new_tokens}, "
-                            f"{self.pool.total_pages} pages)")
-                    break  # pool exhausted: head-of-line waits for frees
-                skip, pages = grant
-            else:
-                skip, pages = 0, None
-            self.queue.pop(0)
-            admits.append((free.pop(0), req, skip, pages))
-        waves = []
-        by_bucket: Dict[int, list] = {}
-        for slot, req, skip, pages in admits:
+        fresh_chunked: List[Tuple[int, Request, int,
+                                  Optional[List[int]]]] = []
+        for req, (skip, pages) in picks:
             assert len(req.prompt) + self._prefix < self.max_len, \
                 "prompt (incl. prefix) longer than cache"
+            slot = free.pop(0)
+            if C is not None and len(req.prompt) - skip > C:
+                req.prefilled = skip
+                self._chunking[slot] = req
+                fresh_chunked.append((slot, req, skip, pages))
+            else:
+                admits.append((slot, req, skip, pages))
+        if self.paged and picks:
+            self._assign_page_tables(admits + fresh_chunked)
+        for slot, req, skip, pages in fresh_chunked:
+            if self.paged:
+                self._slot_pages[slot] = list(pages)
+                self._count_admit(req, skip)  # radix insert: final chunk
+        # 2) at most ONE chunk wave (continuations + fresh chunk admits),
+        # then the classic bucketed waves for single-shot admissions.
+        waves: List[Tuple[List[Tuple[int, int, Request]], dict]] = []
+        if self._chunking:
+            waves.append(self._run_chunk_wave(params))
+        by_bucket: Dict[int, list] = {}
+        for slot, req, skip, pages in admits:
             sb = self._bucket(len(req.prompt) - skip)
             by_bucket.setdefault(sb, []).append((slot, req, skip, pages))
-        if self.paged and admits:
-            self._assign_page_tables(admits)
+        if had_active and any(sb > self._stall_ref for sb in by_bucket):
+            self.decode_stall_steps += 1
         for sb in sorted(by_bucket):
             group = by_bucket[sb]
             tokens = np.zeros((self.slots, sb) + self._tok_trail, np.int32)
@@ -484,32 +690,35 @@ class Engine:
                 if self.paged:
                     self._credit_prefix_hits(group, sb, pj)
             self.state, pout = fn(params, self.state, *args)
-            waves.append((group, pout))
+            waves.append(([(r, slot, req)
+                           for r, (slot, req, _s, _p) in enumerate(group)],
+                          pout))
             for slot, req, skip, pages in group:
                 self.active[slot] = req
                 if self.paged:
                     self._slot_pages[slot] = list(pages)
                     self._register_admit(req, skip, pages)
-        # 2) one fused decode_and_sample over every slot. Skip it when the
+        # 3) one fused decode_and_sample over every slot. Skip it when the
         # host already knows no slot can decode (nothing was active and
-        # every admit exhausts its budget at prefill).
+        # every admitted/final row exhausts its budget at prefill).
         dec = None
         step_raw = None
-        if had_active or any(r.max_new_tokens > 1 for _, r, _, _ in admits):
+        sampled = [req for rows, _ in waves for _, _, req in rows]
+        if had_active or any(r.max_new_tokens > 1 for r in sampled):
             self.steps += 1
             self.decode_launches += 1
             step_raw, step_fn = self._get_step(self._decode_cap())
             self.state, dec = step_fn(params, self.state)
         if not waves and dec is None:
             return []
-        # 3) the step's single device→host transfer: tokens + done masks
+        # 4) the step's single device→host transfer: tokens + done masks
         got_waves, got_dec = jax.device_get(([o for _, o in waves], dec))
         self.host_transfers += 1
         now = time.monotonic()
         finished: List[Finished] = []
-        for (group, _), out in zip(waves, got_waves):
-            for r, (slot, req, _skip, _pages) in enumerate(group):
-                self._append_token(req, out["token"][r])
+        for (rows, _), out in zip(waves, got_waves):
+            for r, slot, req in rows:
+                self._append_token(req, out["token"][r], now)
                 if bool(out["done"][r]):
                     finished.append(self._finish(req, now))
                     del self.active[slot]
@@ -525,7 +734,7 @@ class Engine:
                 for req in self.active.values():
                     req.energy_pj += share
             for slot, req in list(self.active.items()):
-                self._append_token(req, got_dec["token"][slot])
+                self._append_token(req, got_dec["token"][slot], now)
                 if bool(got_dec["done"][slot]):
                     finished.append(self._finish(req, now))
                     del self.active[slot]
@@ -552,8 +761,11 @@ class Engine:
                 saved = max(pj_full - pj_exec, 0.0) / self.slots
             self._hw.on_prefix_hit(saved, skip)
 
-    def _append_token(self, req: Request, tok) -> None:
+    def _append_token(self, req: Request, tok, now: float) -> None:
         req.generated.append(int(tok if np.ndim(tok) == 0 else tok[0]))
+        if len(req.generated) == 1:  # TTFT: queue wait + full prefill
+            req.first_token_t = now
+            self._ttfts.append(max(now - req.submit_t, 0.0))
 
     def _finish(self, req: Request, now: float) -> Finished:
         n_tok = len(req.prompt) + len(req.generated)
@@ -565,22 +777,29 @@ class Engine:
             uid=req.uid, tokens=np.asarray(req.generated),
             energy_pj=req.energy_pj,
             pj_per_token=req.energy_pj / max(n_tok, 1),
-            latency_s=lat)
+            latency_s=lat,
+            ttft_s=(max(req.first_token_t - req.submit_t, 0.0)
+                    if req.first_token_t else 0.0))
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Finished]:
         out: List[Finished] = []
         for _ in range(max_steps):
             out.extend(self.step())
-            if not self.active and not self.queue:
-                break
-        return out
+            if not self.active and not self._chunking and not self.queue:
+                return out
+        raise RuntimeError(
+            f"run_until_drained: {len(self.queue)} queued, "
+            f"{len(self.active) + len(self._chunking)} in flight after "
+            f"{max_steps} steps — the old behavior silently returned "
+            "partial results; raise max_steps or check for starvation")
 
     # -- introspection -------------------------------------------------------
     def compile_cache_stats(self) -> Dict[str, int]:
         """Trace counts per jitted callable. ``prefill[<bucket>]`` entries
         must each be 1 after any drain (one compile per length bucket —
         the recompile trap the legacy engine fell into is pinned away by
-        tests asserting exactly this)."""
+        tests asserting exactly this); the chunk wave is
+        ``prefill[c<chunk_tokens>]`` and also compiles exactly once."""
         stats = dict(self._traces)
         stats["prefill_total"] = sum(
             v for k, v in self._traces.items() if k.startswith("prefill["))
@@ -597,6 +816,7 @@ class Engine:
         def pct(p: float) -> float:
             return percentile(self._latencies, p)
 
+        cc = self.compile_cache_stats()
         out = {
             "steps": float(self.steps),
             "host_transfers": float(self.host_transfers),
@@ -604,11 +824,13 @@ class Engine:
             "new_tokens": float(self._new_tokens),
             "latency_p50_s": pct(50),
             "latency_p95_s": pct(95),
-            "prefill_compiles": float(
-                self.compile_cache_stats()["prefill_total"]),
-            "decode_compiles": float(
-                self.compile_cache_stats()["decode_total"]),
+            "ttft_p50_s": percentile(self._ttfts, 50),
+            "ttft_p95_s": percentile(self._ttfts, 95),
+            "prefill_compiles": float(cc["prefill_total"]),
+            "decode_compiles": float(cc["decode_total"]),
             "decode_launches": float(self.decode_launches),
+            "chunk_waves": float(self.chunk_waves),
+            "decode_stall_steps": float(self.decode_stall_steps),
         }
         if self.paged:
             out.update({

@@ -16,13 +16,15 @@ Do not grow features here; `serve/engine.py` is the serving engine.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.sampling import argmax_low
 from repro.models import model as model_lib
 from repro.serve.request import Finished, Request, counting_jit
 
@@ -42,7 +44,9 @@ class LegacyEngine:
         self.eos_id = eos_id
         self.cache = model_lib.init_cache(cfg, slots, max_len)
         self.active: Dict[int, Request] = {}      # slot -> request
-        self.queue: List[Request] = []
+        # deque: admission pops the head every step; a list's pop(0) is
+        # O(queue) per admission — O(n^2) across a deep-queue drain.
+        self.queue: Deque[Request] = deque()
         self.last_token = np.zeros(
             (slots, 1) if cfg.family != "audio"
             else (slots, 1, cfg.num_codebooks), np.int32)
@@ -68,6 +72,7 @@ class LegacyEngine:
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
+        req.submit_t = time.monotonic()  # latency is measured from handoff
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
@@ -97,7 +102,7 @@ class LegacyEngine:
             for gf, g1 in zip(self.cache.groups, one_cache.groups))
         lengths = self.cache.lengths.at[slot].set(one_cache.lengths[0])
         self.cache = model_lib.ModelCache(groups=groups, lengths=lengths)
-        tok = np.asarray(jnp.argmax(logits[0, -1], axis=-1)).reshape(-1)
+        tok = np.asarray(argmax_low(logits[0, -1], axis=-1)).reshape(-1)
         if self.cfg.family == "audio":
             self.last_token[slot, 0] = tok
             req.generated.append(int(tok[0]))
@@ -111,7 +116,7 @@ class LegacyEngine:
         for slot in self._free_slots():
             if not self.queue:
                 break
-            self._insert_prefill(slot, self.queue.pop(0))
+            self._insert_prefill(slot, self.queue.popleft())
         if not self.active:
             return []
         self.steps += 1
@@ -132,7 +137,10 @@ class LegacyEngine:
                 self.rng, k = jax.random.split(self.rng)
                 tok = jax.random.categorical(k, lg / req.temperature, axis=-1)
             else:
-                tok = jnp.argmax(lg, axis=-1)
+                # Same explicit lowest-index tie rule as the fused sampler
+                # (kernels/sampling.argmax_low) — bf16 ties must not make
+                # the parity baseline program-dependent.
+                tok = argmax_low(lg, axis=-1)
             tok = np.asarray(tok).reshape(-1)
             first = int(tok[0])
             req.generated.append(first)

@@ -19,6 +19,11 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     energy_pj: float = 0.0        # attributed crossbar read energy
     submit_t: float = dataclasses.field(default_factory=time.monotonic)
+    # Chunked-prefill / scheduler bookkeeping (serve/sched, DESIGN.md §10):
+    prefilled: int = 0            # prompt tokens already in the cache
+    skipped: int = 0              # times a younger request was admitted first
+    queued_step: int = 0          # scheduler step at submit (age basis)
+    first_token_t: float = 0.0    # wall time the first token landed (TTFT)
 
 
 @dataclasses.dataclass
@@ -28,6 +33,7 @@ class Finished:
     energy_pj: float = 0.0        # prefill + attributed decode shares
     pj_per_token: float = 0.0     # energy / (prompt + generated tokens)
     latency_s: float = 0.0        # submit -> finished wall time
+    ttft_s: float = 0.0           # submit -> first token wall time
 
 
 def percentile(xs, p: float) -> float:

@@ -1,0 +1,154 @@
+"""Host-side admission scheduler for the serving engine (DESIGN.md §10).
+
+The engine used strict FCFS admission with two pathologies this module
+removes:
+
+- **Head-of-line blocking** — when the head request could not reserve
+  pages the admission loop broke, stalling feasible smaller requests
+  queued behind it. The scheduler does a BOUNDED skip-ahead scan
+  (``max_skip`` positions past the first blocked request) with a
+  starvation guard: every pass-over bumps the blocked request's
+  ``skipped`` counter, and once it reaches ``starve_after`` nothing may
+  be admitted past it — the queue holds until the aged request fits, so
+  it regains strict priority and always eventually admits.
+- **Cost-blind ordering** — the "cost" policy scores the front
+  ``window`` of the queue with `hw/schedule.AdmissionCost` (per-chunk
+  crossbar pJ + projected decode-slot occupancy, from the TimeFloats
+  Table-I read costs) and admits cheapest-first against a per-step
+  `StepBudget` (latency tokens + energy pJ), instead of arrival order.
+  The same starvation guard applies: a request passed over
+  ``starve_after`` times jumps to the front regardless of score.
+
+The scheduler is pure host bookkeeping — it never touches device state.
+Page reservation stays in the engine and is passed in as a callable, so
+the same pick loop serves the dense engine (``try_reserve=None``: every
+candidate reserves trivially) and the paged engine.
+"""
+from __future__ import annotations
+
+from typing import Callable, Deque, List, Optional, Tuple
+
+from repro.hw.schedule import AdmissionCost, BudgetTracker, StepBudget
+from repro.serve.request import Request
+
+# (skip, pages) grant for engines without page reservation.
+DENSE_GRANT: Tuple[int, None] = (0, None)
+
+POLICIES = ("fcfs", "cost")
+
+
+class Scheduler:
+    """Admission policy: which queued requests enter free slots this step.
+
+    ``policy`` is "fcfs" (arrival order + skip-ahead on reservation
+    failure) or "cost" (cheapest-first within ``window``, against the
+    step budget). ``chunk_tokens`` caps the first prefill wave a request
+    costs at admission (the chunk machine takes over from there);
+    None/0 means the whole remaining prompt lands in one wave.
+    """
+
+    def __init__(self, policy: str = "fcfs", *,
+                 cost: Optional[AdmissionCost] = None,
+                 budget: Optional[StepBudget] = None,
+                 chunk_tokens: Optional[int] = None,
+                 max_skip: int = 8, starve_after: int = 4,
+                 window: int = 32):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"one of {POLICIES}")
+        self.policy = policy
+        self.cost = cost or AdmissionCost()
+        self.budget = budget
+        self.chunk_tokens = chunk_tokens or None
+        self.max_skip = max_skip
+        self.starve_after = starve_after
+        self.window = window
+        self.now = 0              # engine steps seen (the age clock)
+
+    # -- step lifecycle ----------------------------------------------------
+    def begin_step(self) -> BudgetTracker:
+        """Advance the age clock and open this step's budget tracker. The
+        engine pre-charges chunk continuations on the tracker before
+        calling `pick` — in-flight prefills outrank every admission."""
+        self.now += 1
+        return BudgetTracker(self.budget)
+
+    # -- scoring -----------------------------------------------------------
+    def admit_tokens(self, req: Request, skip: int = 0) -> int:
+        """Prefill positions the admission itself launches this step:
+        the first chunk (chunked) or the whole non-cached remainder."""
+        remaining = max(len(req.prompt) - skip, 1)
+        if self.chunk_tokens:
+            return min(remaining, self.chunk_tokens)
+        return remaining
+
+    def _rank(self, req: Request) -> Tuple[float, int]:
+        score = self.cost.request_score(
+            max(len(req.prompt) - req.prefilled, 0), req.max_new_tokens)
+        # Linear age decay: a request's projected cost fades as it waits,
+        # so expensive requests drift forward instead of parking forever
+        # (the hard guarantee is still the starve_after guard).
+        age = max(self.now - req.queued_step, 0)
+        return (score / (1.0 + 0.25 * age), req.queued_step)
+
+    # -- the pick loop -----------------------------------------------------
+    def pick(self, queue: Deque[Request], n_free: int,
+             tracker: BudgetTracker,
+             try_reserve: Optional[Callable[[Request], Optional[tuple]]]
+             = None) -> List[Tuple[Request, tuple]]:
+        """Select up to ``n_free`` requests, remove them from ``queue``,
+        and return [(request, (skip, pages))]. Requests that fail to
+        reserve stay queued; their ``skipped`` counters age them toward
+        strict priority."""
+        if n_free <= 0 or not queue:
+            return []
+        order = self._order(queue)
+        picked: List[Tuple[int, Request, tuple]] = []
+        blocked: List[int] = []       # queue positions passed over
+        first_block: Optional[int] = None
+        for i in order:
+            if len(picked) >= n_free:
+                break
+            if (self.policy == "fcfs" and first_block is not None
+                    and i > first_block + self.max_skip):
+                break  # bounded skip-ahead: don't scan arbitrarily deep
+            req = queue[i]
+            starved = req.skipped >= self.starve_after
+            tok = self.admit_tokens(req)
+            pj = self.cost.prefill_pj(tok)
+            if not tracker.fits(tok, pj):
+                if self.policy == "fcfs" or starved:
+                    break  # order (or the aged request) holds the step
+                blocked.append(i)
+                if first_block is None:
+                    first_block = i
+                continue
+            grant = try_reserve(req) if try_reserve else DENSE_GRANT
+            if grant is None:
+                if starved:
+                    break  # starvation guard: nothing passes an aged head
+                blocked.append(i)
+                if first_block is None:
+                    first_block = i
+                continue
+            picked.append((i, req, grant))
+            tracker.spend(tok, pj)
+        if picked:
+            last = max(i for i, _, _ in picked)
+            for j in blocked:
+                if j < last:
+                    queue[j].skipped += 1
+        for i in sorted((i for i, _, _ in picked), reverse=True):
+            del queue[i]
+        return [(req, grant) for _, req, grant in picked]
+
+    def _order(self, queue) -> List[int]:
+        if self.policy == "fcfs":
+            return list(range(len(queue)))
+        idx = list(range(min(len(queue), self.window)))
+        starved = [i for i in idx
+                   if queue[i].skipped >= self.starve_after]
+        fresh = [i for i in idx
+                 if queue[i].skipped < self.starve_after]
+        fresh.sort(key=lambda i: self._rank(queue[i]))
+        return starved + fresh

@@ -1,0 +1,349 @@
+"""Chunked prefill + cost-aware admission (DESIGN.md §10).
+
+Pins the tentpole contracts: greedy streams bit-identical to the
+un-chunked engine across families (attention / MLA / MoE-MLA), chunk
+offsets tiling each prompt exactly once, the page pool conserved at every
+mid-chunk step, the ONE-compile-per-chunk-shape bound, scheduler
+skip-ahead past pool-blocked heads with a starvation guard, and the
+run_until_drained exhaustion raise. Property tests (hypothesis, optional
+dev dependency) randomize the scheduler and chunk-planner inputs at host
+level where the engine's device work would drown the example count.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dependency (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.configs.base import MLAConfig
+from repro.hw.schedule import AdmissionCost, StepBudget
+from repro.models import model as M
+from repro.serve.engine import Engine
+from repro.serve.request import Request
+from repro.serve.sched import Scheduler
+
+
+def small_cfg(arch="qwen3-0.6b", **over):
+    cfg = reduced_for_smoke(get_config(arch))
+    over = {"quant": "none", "n_layers": 2, **over}
+    return dataclasses.replace(cfg, **over)
+
+
+def mla_cfg():
+    return small_cfg(mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                   qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                   v_head_dim=16))
+
+
+def family_cfg(family):
+    if family == "attention":
+        return small_cfg()
+    if family == "mla":
+        return mla_cfg()
+    cfg = reduced_for_smoke(get_config("deepseek-v3-671b"))
+    return dataclasses.replace(cfg, quant="none", n_layers=2)
+
+
+def mixed_stream(cfg, lens=(5, 90, 23, 70, 9, 33), seed=3, max_new=6):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, max_new_tokens=max_new,
+                    prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32))
+            for i, n in enumerate(lens)]
+
+
+def drain(params, cfg, reqs, **kw):
+    eng = Engine(params, cfg, slots=3, max_len=128, seed=0, **kw)
+    for r in reqs:
+        eng.submit(dataclasses.replace(r, generated=[],
+                                       prompt=r.prompt.copy()))
+    done = eng.run_until_drained()
+    return eng, {f.uid: np.asarray(f.tokens) for f in done}
+
+
+# ---------------------------------------------------------------------------
+# Bitwise chunked-vs-unchunked greedy parity (the tentpole identity).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["attention", "mla", "moe_mla"])
+def test_chunked_matches_unchunked_greedy(family):
+    """Greedy streams on a mixed-length stream are bit-identical between
+    the un-chunked fused engine and the chunked engine (dense AND paged):
+    per-position K/V is a pure function of the prefix, and ragged prefill
+    attends through the same masked full-extent view no matter how many
+    query positions a wave carries. (moe_mla rides the default drop-free
+    capacity floor — under expert-capacity pressure the identity is not
+    guaranteed, DESIGN §10.)"""
+    cfg = family_cfg(family)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    reqs = mixed_stream(cfg)
+    _, want = drain(params, cfg, reqs)
+    eng, got = drain(params, cfg, reqs, chunk_tokens=16)
+    engp, gotp = drain(params, cfg, reqs, chunk_tokens=16, paged=True,
+                       page_size=8)
+    assert sorted(got) == sorted(want) == sorted(gotp)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+        np.testing.assert_array_equal(gotp[uid], want[uid])
+    for e in (eng, engp):
+        assert e.chunk_waves > 0
+        # ONE compile per chunk shape, ever — the fixed-shape wave.
+        assert e.compile_cache_stats()["prefill[c16]"] == 1
+    assert engp.pool.conserved()
+
+
+def test_chunk_offsets_tile_prompt():
+    """Every chunked prompt's (offset, n) log entries tile [0, len) in
+    order, each chunk at most chunk_tokens; single-wave prompts (suffix
+    <= chunk_tokens) never enter the chunk machine."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    reqs = mixed_stream(cfg)
+    eng, got = drain(params, cfg, reqs, chunk_tokens=16)
+    assert len(got) == len(reqs)
+    by_uid = {}
+    for uid, off, n in eng.chunk_log:
+        by_uid.setdefault(uid, []).append((off, n))
+    for r in reqs:
+        if len(r.prompt) <= 16:
+            assert r.uid not in by_uid
+            continue
+        pos = 0
+        for off, n in by_uid[r.uid]:
+            assert off == pos and 0 < n <= 16
+            pos += n
+        assert pos == len(r.prompt)
+
+
+def test_pool_conserved_mid_chunk():
+    """refcount+free bookkeeping holds at EVERY step of a chunked paged
+    drain, including steps where slots are mid-prefill."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, slots=2, max_len=128, seed=0,
+                 chunk_tokens=16, paged=True, page_size=8)
+    for r in mixed_stream(cfg):
+        eng.submit(r)
+    done = []
+    for _ in range(600):
+        done.extend(eng.step())
+        assert eng.pool.conserved()
+        if not eng.active and not eng._chunking and not eng.queue:
+            break
+    assert len(done) == 6
+
+
+def test_ttft_reported():
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    eng, _ = drain(params, cfg, mixed_stream(cfg), chunk_tokens=16)
+    s = eng.stats()
+    assert 0 < s["ttft_p50_s"] <= s["ttft_p95_s"]
+    assert s["ttft_p95_s"] <= s["latency_p95_s"]
+
+
+def test_run_until_drained_raises_on_exhaustion():
+    """Exhausting max_steps with work still queued/in-flight raises
+    instead of silently returning a partial drain (the old behavior)."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(params, cfg, slots=2, max_len=64)
+    eng.submit(Request(uid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="queued"):
+        eng.run_until_drained(max_steps=0)
+
+
+def test_cost_policy_streams_and_budget():
+    """Cost-aware admission reorders ADMISSION but not CONTENT: greedy
+    streams are per-request deterministic, so a cost-policy drain under a
+    tight per-step token budget still yields bitwise the FCFS streams —
+    every request finishing exactly once."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    reqs = mixed_stream(cfg)
+    _, want = drain(params, cfg, reqs)
+    eng, got = drain(params, cfg, reqs, chunk_tokens=16, sched="cost",
+                     budget=StepBudget(prefill_tokens=32))
+    assert sorted(got) == sorted(want)
+    for uid in want:
+        np.testing.assert_array_equal(got[uid], want[uid])
+
+
+def test_chunked_energy_attribution():
+    """The hardware twin prices chunk waves: a timefloats chunked drain
+    attributes nonzero prefill energy to every request."""
+    cfg = small_cfg(quant="timefloats")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    eng, got = drain(params, cfg, mixed_stream(cfg, lens=(40, 7)),
+                     chunk_tokens=16)
+    assert len(got) == 2
+    tele = eng.hw_telemetry()
+    assert tele["total_pj"] > 0
+    assert eng.chunk_waves > 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: skip-ahead, starvation guard, budget (engine-level pin).
+# ---------------------------------------------------------------------------
+
+
+def test_skip_ahead_unblocks_queue_and_no_starvation():
+    """A pool-blocked head no longer stalls feasible requests behind it
+    (the serve/engine head-of-line `break` bug): smaller requests flow
+    past, and the starvation guard still lands the big one. Everything
+    finishes exactly once."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # Pool of 6 usable pages (page_size 8). The big request needs 6 pages
+    # — admissible ONLY into an empty pool, so while anything else holds
+    # pages it cannot reserve.
+    eng = Engine(params, cfg, slots=2, max_len=64, seed=0, paged=True,
+                 page_size=8, num_pages=7)
+    big = Request(uid=0, max_new_tokens=4, prompt=rng.integers(
+        0, cfg.vocab_size, 45).astype(np.int32))
+    smalls = [Request(uid=1 + i, max_new_tokens=4, prompt=rng.integers(
+        0, cfg.vocab_size, 10 + i).astype(np.int32)) for i in range(4)]
+    # Occupy the pool first so `big` is blocked at its first pick.
+    eng.submit(smalls[0])
+    eng.step()
+    eng.submit(big)
+    for r in smalls[1:]:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert sorted(f.uid for f in done) == [0, 1, 2, 3, 4]
+    # The head was genuinely passed over (skip-ahead happened)...
+    assert big.skipped > 0
+    # ...and some smaller request finished before the big head did.
+    order = [f.uid for f in done]
+    assert order.index(0) > 0
+    assert eng.pool.conserved()
+
+
+def test_starved_head_blocks_further_skips():
+    """Once a request has been passed over `starve_after` times, pick()
+    admits nothing past it — the aged head regains strict priority."""
+    from collections import deque
+
+    sched = Scheduler("fcfs", starve_after=2)
+    reqs = [Request(uid=i, prompt=np.arange(4, dtype=np.int32))
+            for i in range(3)]
+    reqs[0].skipped = 2  # aged past the guard
+    q, tracker = deque(reqs), sched.begin_step()
+    picks = sched.pick(q, 2, tracker,
+                       try_reserve=lambda r: None if r.uid == 0 else (0, []))
+    assert picks == []  # nothing may pass the starved head
+    assert len(q) == 3
+
+
+# ---------------------------------------------------------------------------
+# Scheduler properties (hypothesis; host-only, no device work).
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(1, 200), st.integers(1, 32)),
+                min_size=0, max_size=40),
+       st.sampled_from([None, 8, 16, 64]),
+       st.integers(0, 8),
+       st.sampled_from(["fcfs", "cost"]))
+@settings(max_examples=60, deadline=None)
+def test_pick_partitions_queue(lens, chunk, n_free, policy):
+    """pick() returns at most n_free requests, removes exactly those from
+    the queue, and never duplicates or invents a request — each request
+    is admitted at most once (finish-exactly-once at scheduler level)."""
+    from collections import deque
+
+    sched = Scheduler(policy, chunk_tokens=chunk)
+    reqs = [Request(uid=i, prompt=np.zeros(n, np.int32), max_new_tokens=m)
+            for i, (n, m) in enumerate(lens)]
+    q = deque(reqs)
+    picks = sched.pick(q, n_free, sched.begin_step())
+    got = [r.uid for r, _ in picks]
+    assert len(got) == len(set(got)) <= n_free
+    assert sorted(got + [r.uid for r in q]) == [r.uid for r in reqs]
+
+
+@given(st.lists(st.tuples(st.integers(1, 200), st.integers(1, 32)),
+                min_size=1, max_size=30),
+       st.integers(8, 128),
+       st.sampled_from(["fcfs", "cost"]))
+@settings(max_examples=60, deadline=None)
+def test_budget_bounds_admitted_tokens(lens, cap, policy):
+    """The per-step token budget is a hard bound on what pick() admits."""
+    from collections import deque
+
+    sched = Scheduler(policy, budget=StepBudget(prefill_tokens=cap),
+                      chunk_tokens=16)
+    q = deque(Request(uid=i, prompt=np.zeros(n, np.int32), max_new_tokens=m)
+              for i, (n, m) in enumerate(lens))
+    picks = sched.pick(q, 8, sched.begin_step())
+    spent = sum(min(len(r.prompt), 16) for r, _ in picks)
+    assert spent <= cap
+
+
+@given(st.lists(st.tuples(st.integers(1, 120), st.integers(2, 12)),
+                min_size=1, max_size=16),
+       st.sampled_from(["fcfs", "cost"]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_no_starvation_under_flaky_reservation(lens, policy, seed):
+    """Under a reservation that fails pseudo-randomly (a stand-in for pool
+    pressure that always eventually clears), every request is admitted
+    within a bounded number of steps — the starvation guard converts
+    pass-overs into strict priority."""
+    from collections import deque
+
+    rng = np.random.default_rng(seed)
+    sched = Scheduler(policy, chunk_tokens=16, max_skip=4, starve_after=3)
+    q = deque(Request(uid=i, prompt=np.zeros(n, np.int32), max_new_tokens=m)
+              for i, (n, m) in enumerate(lens))
+    admitted = []
+    for _ in range(40 * len(lens)):
+        if not q:
+            break
+        # A starved request's reservation must eventually succeed once it
+        # holds the queue (pool pressure drains); model that by always
+        # granting starved heads.
+        def reserve(r):
+            if r.skipped >= sched.starve_after or rng.random() < 0.4:
+                return (0, [])
+            return None
+
+        admitted += [r.uid for r, _ in
+                     sched.pick(q, 2, sched.begin_step(), reserve)]
+    assert not q, f"starved requests left queued: {[r.uid for r in q]}"
+    assert sorted(admitted) == list(range(len(lens)))
+
+
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=20),
+       st.sampled_from([8, 16, 32]))
+@settings(max_examples=60, deadline=None)
+def test_chunk_plan_tiles_prompt(lens, chunk):
+    """Host-level chunk planner property: admit_tokens() + the prefilled
+    cursor tile any prompt exactly — sum of chunks == prompt length, every
+    chunk in (0, chunk_tokens]."""
+    sched = Scheduler("fcfs", chunk_tokens=chunk)
+    for n in lens:
+        req = Request(uid=0, prompt=np.zeros(n, np.int32))
+        seen = 0
+        while seen < n:
+            step = min(sched.admit_tokens(req, skip=0), n - seen)
+            assert 0 < step <= chunk
+            seen += step
+        assert seen == n
+
+
+def test_admission_cost_scores_monotone():
+    """More remaining prompt / decode budget never gets cheaper, and the
+    unit cost model prices a token at 1.0 on both axes."""
+    c = AdmissionCost()
+    assert c.prefill_pj(16) == pytest.approx(16.0)
+    assert c.request_score(10, 4) < c.request_score(20, 4)
+    assert c.request_score(10, 4) < c.request_score(10, 8)
