@@ -56,6 +56,7 @@ SUMMARY_KEYS = (
     "serve/chunked_p95_ratio_x",
     "serve/chunked_tok_per_s_ratio",
     "serve/bursty_chunked_ttft_p95_s",
+    "serve/obs_overhead_x",
     "kernel/paged_attn_gqa_speedup_x",
     "kernel/paged_attn_mla_speedup_x",
 )
@@ -67,6 +68,9 @@ AUTOTUNE_PREFIX = "kernel/paged_attn_autotune/"
 # shared CI boxes to gate; the ratio keys compare two paths measured in
 # the same process, which is what stays stable.
 CHECK_BANDS = {
+    # "lower" keys gate a COST ratio: the absolute value is a ceiling
+    # (tracing must stay within 5% of the untraced arm's tok/s).
+    "serve/obs_overhead_x": ("lower", 0.5, 1.05),
     "serve/fused_paged_speedup_x": ("higher", 0.25, 1.3),
     # The stall-kill ratio is structurally ~10x but its magnitude is the
     # big-wave/chunk-step wall ratio, which moves with the host — a wide
@@ -82,23 +86,37 @@ CHECK_BANDS = {
 
 
 def check_regressions(summary, baseline_summary) -> list:
-    """Compare the fresh summary against the committed baseline: a key
-    regresses when it falls below ``(1 - slack) * baseline`` or below its
-    absolute floor. Keys absent from either side are skipped (a module
-    that didn't run keeps its old record via the merge)."""
+    """Compare the fresh summary against the committed baseline.
+
+    ``higher`` keys regress when they fall below ``(1 - slack) *
+    baseline`` or below their absolute floor; ``lower`` keys (cost
+    ratios) regress when they rise above ``(1 + slack) * baseline`` or
+    above their absolute ceiling. Keys absent from either side are
+    skipped (a module that didn't run keeps its old record via the
+    merge)."""
     problems = []
-    for key, (direction, slack, floor) in CHECK_BANDS.items():
-        assert direction == "higher"  # all current gates are higher-better
+    for key, (direction, slack, bound) in CHECK_BANDS.items():
         if key not in summary:
             continue
         val = float(summary[key])
-        if val < floor:
-            problems.append(f"{key}={val:.4g} below absolute floor {floor}")
-            continue
         base = baseline_summary.get(key)
-        if base is not None and val < (1.0 - slack) * float(base):
-            problems.append(f"{key}={val:.4g} regressed > {slack:.0%} vs "
-                            f"baseline {float(base):.4g}")
+        if direction == "higher":
+            if val < bound:
+                problems.append(
+                    f"{key}={val:.4g} below absolute floor {bound}")
+                continue
+            if base is not None and val < (1.0 - slack) * float(base):
+                problems.append(f"{key}={val:.4g} regressed > {slack:.0%} "
+                                f"vs baseline {float(base):.4g}")
+        else:
+            assert direction == "lower"
+            if val > bound:
+                problems.append(
+                    f"{key}={val:.4g} above absolute ceiling {bound}")
+                continue
+            if base is not None and val > (1.0 + slack) * float(base):
+                problems.append(f"{key}={val:.4g} regressed > {slack:.0%} "
+                                f"vs baseline {float(base):.4g}")
     return problems
 
 

@@ -276,6 +276,7 @@ class ServeEnergyModel:
         self._prefill_pj: Dict[Any, float] = {}       # shape key -> pJ
         self.attributed_pj = 0.0
         self.prefill_attributed_pj = 0.0  # prefill share of attributed_pj
+        self.decode_attributed_pj = 0.0   # decode share of attributed_pj
         self.total_pj = 0.0
         self.decode_steps = 0
         self.active_slot_steps = 0
@@ -344,18 +345,26 @@ class ServeEnergyModel:
         return share
 
     def on_decode_step(self, active_slots: int) -> float:
-        """Book one full-batch decode; returns the per-active-slot share."""
+        """Book one full-batch decode; returns the per-active-slot share.
+
+        The decode accumulators add ``share * active_slots`` in booking
+        order — the same float-addition sequence an event-order fold over
+        the tracer's decode spans performs, which is what makes the §11
+        span-pJ-equals-telemetry contract EXACT rather than approximate
+        (same for the prefill accumulators in `on_prefill_wave`)."""
         self.decode_steps += 1
         self.active_slot_steps += active_slots
         self.total_pj += self.decode_step_pj or 0.0
         share = self.decode_pj_per_slot
         self.attributed_pj += share * active_slots
+        self.decode_attributed_pj += share * active_slots
         return share
 
     def telemetry(self) -> Dict[str, float]:
         return {
             "attributed_pj": self.attributed_pj,
             "prefill_attributed_pj": self.prefill_attributed_pj,
+            "decode_attributed_pj": self.decode_attributed_pj,
             "total_pj": self.total_pj,
             "idle_pj": self.total_pj - self.attributed_pj,
             "prefix_saved_pj": self.prefix_saved_pj,

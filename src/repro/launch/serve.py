@@ -43,12 +43,24 @@ def main(argv=None):
     ap.add_argument("--sched", default="fcfs", choices=["fcfs", "cost"],
                     help="admission policy: arrival order or pJ-scored "
                          "cost-aware (hw twin Table-I costs)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace-event JSON of the "
+                         "drain (DESIGN §11; load at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry snapshot (.json = "
+                         "flat dict, else Prometheus text)")
+    ap.add_argument("--trace-capacity", type=int, default=1 << 16,
+                    help="tracer ring size; overflow voids the trace's "
+                         "energy certification")
     args = ap.parse_args(argv)
 
     import jax
 
     from repro.configs import get_config, reduced_for_smoke
     from repro.models import model as M
+    from repro.obs.export import (validate_trace, write_chrome_trace,
+                                  write_metrics)
+    from repro.obs.trace import Tracer
     from repro.serve.engine import Engine
     from repro.serve.legacy import LegacyEngine
     from repro.serve.request import Request, percentile as _pct
@@ -66,15 +78,17 @@ def main(argv=None):
         print("--paged/--chunk-tokens/--sched require the fused engine",
               file=sys.stderr)
         return 2
+    tracer = Tracer(capacity=args.trace_capacity) if args.trace_out else None
     if args.engine == "fused":
         eng = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
                      seed=args.seed, paged=args.paged,
                      page_size=args.page_size,
                      chunk_tokens=args.chunk_tokens or None,
-                     sched=args.sched)
+                     sched=args.sched, tracer=tracer)
     else:
         eng = LegacyEngine(params, cfg, slots=args.slots,
-                           max_len=args.max_len, seed=args.seed)
+                           max_len=args.max_len, seed=args.seed,
+                           tracer=tracer)
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
                           size=args.prefix_len).astype(np.int32)
@@ -104,6 +118,19 @@ def main(argv=None):
           f"steps {getattr(eng, 'steps', 0)} | "
           f"compiles: prefill {n_prefill}, decode {n_decode} | "
           f"host transfers {getattr(eng, 'host_transfers', 'n/a')}")
+
+    def _hp(name: str, p: float) -> float:
+        h = eng.metrics.get(name)
+        return h.percentile(p) if h is not None and h.count else 0.0
+
+    # Histogram-backed percentiles from the always-on metrics registry
+    # (log-bucket upper bounds, ≤ ~9% relative; DESIGN §11).
+    print("metrics: ttft "
+          + " ".join(f"p{p} {_hp('serve_ttft_s', p) * 1e3:.1f}ms"
+                     for p in (50, 95, 99))
+          + " | itl "
+          + " ".join(f"p{p} {_hp('serve_itl_s', p) * 1e3:.2f}ms"
+                     for p in (50, 95, 99)))
     if args.chunk_tokens:
         print(f"chunked: {getattr(eng, 'chunk_waves', 0)} chunk waves "
               f"(chunk_tokens={args.chunk_tokens}, sched={args.sched}), "
@@ -119,6 +146,25 @@ def main(argv=None):
             print(f"prefix credit: {hw['prefix_saved_pj'] / 1e6:.2f} uJ "
                   f"saved over {int(hw['prefix_hits'])} hits "
                   f"({int(hw['prefix_tokens_saved'])} prefill positions)")
+    if args.metrics_out:
+        write_metrics(args.metrics_out, eng.metrics)
+        print(f"metrics written to {args.metrics_out}")
+    if args.trace_out:
+        payload = write_chrome_trace(
+            args.trace_out, tracer,
+            metadata={"hw": hw, "engine": args.engine,
+                      "arch": args.arch})
+        require = (("engine.step", "prefill", "decode")
+                   if args.engine == "legacy" else None)
+        problems = (validate_trace(payload, require) if require
+                    else validate_trace(payload))
+        print(f"trace written to {args.trace_out} "
+              f"({payload['metadata']['events']} events, "
+              f"{payload['metadata']['dropped']} dropped)")
+        for p in problems:
+            print(f"trace INVALID: {p}", file=sys.stderr)
+        if problems:
+            return 1
     if args.paged:  # §8 smoke contract: reuse happened, pool conserved
         st = eng.stats()
         conserved = (st["pool_pages_in_use"] + st["pool_pages_free"]

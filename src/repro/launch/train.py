@@ -41,6 +41,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=200)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace-event JSON of the "
+                         "run (DESIGN §11; load at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry snapshot (.json = "
+                         "flat dict, else Prometheus text)")
     args = ap.parse_args(argv)
 
     if args.fake_devices:
@@ -124,13 +130,24 @@ def main(argv=None):
         print(f"step {step:5d} loss {m['loss']:.4f} gnorm "
               f"{m['grad_norm']:.2f}{hw}", flush=True)
 
+    tracer = None
+    registry = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs.metrics import MetricsRegistry
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer() if args.trace_out else None
+        registry = MetricsRegistry()
+
     loop = LoopConfig(total_steps=args.steps, log_every=args.log_every,
                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
     with mesh:
         state, report = run_loop(state, jitted, pipe.batch_at, loop,
                                  restore_shardings=s_shard,
                                  on_metrics=on_metrics,
-                                 hw_monitor=hw_monitor)
+                                 hw_monitor=hw_monitor,
+                                 tracer=tracer,
+                                 metrics_registry=registry)
     print(f"done: steps={report.steps_run} resumed_from="
           f"{report.resumed_from} stragglers={report.straggler_events} "
           f"final_loss={report.losses[-1]:.4f}")
@@ -138,6 +155,20 @@ def main(argv=None):
         print(f"hw twin totals: {report.hw['total_energy_j']:.3e} J, "
               f"{report.hw['total_cell_writes']:.3g} cell writes, "
               f"endurance used {report.hw['endurance_frac']:.2e}")
+    if args.metrics_out:
+        from repro.obs.export import write_metrics
+
+        write_metrics(args.metrics_out, registry)
+        print(f"metrics written to {args.metrics_out}")
+    if args.trace_out:
+        from repro.obs.export import write_chrome_trace
+
+        payload = write_chrome_trace(
+            args.trace_out, tracer,
+            metadata={"hw": report.hw, "arch": args.arch})
+        print(f"trace written to {args.trace_out} "
+              f"({payload['metadata']['events']} events, "
+              f"{payload['metadata']['dropped']} dropped)")
     return 0
 
 

@@ -1,0 +1,18 @@
+"""Dependency-free observability layer (DESIGN.md §11).
+
+Three pieces, threaded through serving, training, and the hw twin:
+
+- `obs.trace`   — low-overhead span tracer (bounded ring buffer,
+  injectable clock, nested spans, a no-op singleton when disabled) with
+  Chrome/Perfetto trace-event export. Spans carry the twin's attributed
+  crossbar pJ, so the exported timeline is simultaneously a wall-clock
+  flame view and an energy flame view.
+- `obs.metrics` — labeled counters / gauges / log-bucketed histograms
+  behind the engines' and trainer's telemetry.
+- `obs.export`  — Perfetto JSON writer, JSONL event sink, Prometheus
+  text exposition, and trace validation.
+"""
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NOOP, NoopTracer, Span, Tracer
+
+__all__ = ["Tracer", "NoopTracer", "NOOP", "Span", "MetricsRegistry"]

@@ -91,7 +91,10 @@ from repro.configs.base import ModelConfig
 from repro.hw.schedule import StepBudget
 from repro.kernels import sampling as sampling_kernel
 from repro.models import model as model_lib
-from repro.serve.request import (Finished, Request, counting_jit,
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NOOP, NOOP_SPAN, TID_SERVE
+from repro.serve.request import (Finished, HwTelemetryMixin, Request,
+                                 counting_jit, make_serve_energy_model,
                                  percentile)
 from repro.serve.sched import Scheduler
 
@@ -180,10 +183,21 @@ def _admit_update(state: EngineState, cache, logits, ids, temps, budgets,
     return new, {"token": tok, "done": done}
 
 
-class Engine:
+class Engine(HwTelemetryMixin):
     """Fixed-slot continuous batching with a fused device step; optional
     chunked prefill (``chunk_tokens``), cost-aware admission (``sched``,
-    ``budget``), and paged cache pool + radix prefix reuse (``paged``)."""
+    ``budget``), and paged cache pool + radix prefix reuse (``paged``).
+
+    Observability (DESIGN.md §11): pass ``tracer`` (an `obs.trace.Tracer`)
+    to get per-phase spans — scheduler pick, chunk wave, per-bucket
+    prefill, fused decode launch, host transfer, radix match/insert, pool
+    evictions, jit compiles — with the twin's attributed pJ annotated on
+    the prefill/decode spans (span pJ folds equal the telemetry
+    accumulators exactly). Default is the shared no-op tracer: the hot
+    path pays one attribute check and token streams / `stats()` are
+    bit-identical to an un-traced engine. The metrics registry
+    (``metrics`` or a private one) is always on — counters and bounded
+    log-bucketed histograms only, never raw sample lists."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
@@ -194,8 +208,10 @@ class Engine:
                  fused_decode: Optional[bool] = None,
                  chunk_tokens: Optional[int] = None,
                  sched: str = "fcfs",
-                 budget: Optional[StepBudget] = None):
+                 budget: Optional[StepBudget] = None,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
+        self.tracer = tracer or NOOP
         self.params = params
         self.slots = slots
         self.max_len = max_len
@@ -305,11 +321,31 @@ class Engine:
         self._prefill: Dict[int, Callable] = {}
         self._chunk_wave_fns: Optional[Tuple[Callable, Callable]] = None
 
-        self._hw = None
-        if track_energy and cfg.quant == "timefloats":
-            from repro.hw.schedule import ServeEnergyModel
+        self._hw = make_serve_energy_model(cfg, slots, track_energy)
 
-            self._hw = ServeEnergyModel(slots)
+        # Metrics registry (always on; §11): pre-bound so hot paths pay a
+        # method call, not a registry lookup. Histograms are log-bucketed
+        # (bounded), replacing what used to be unbounded raw-sample lists
+        # for everything the stats() contract doesn't pin to the legacy
+        # nearest-rank numbers.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_steps = m.counter("serve_steps")
+        self._m_finished = m.counter("serve_finished")
+        self._m_new_tokens = m.counter("serve_new_tokens")
+        self._m_submitted = m.counter("serve_submitted")
+        self._m_queue_depth = m.gauge("serve_queue_depth")
+        self._m_ttft = m.histogram("serve_ttft_s")
+        self._m_itl = m.histogram("serve_itl_s")
+        self._m_latency = m.histogram("serve_latency_s")
+        self._m_chunk_rows = m.histogram("serve_chunk_wave_rows")
+        self._m_stalls = m.counter("serve_decode_stall_steps")
+        self._m_decode_launches = m.counter("serve_decode_launches")
+        if paged:
+            self._m_pool_in_use = m.gauge("serve_pool_pages_in_use")
+            self._m_radix_hits = m.counter("serve_radix_hits")
+            self._m_radix_hit_tokens = m.counter("serve_radix_hit_tokens")
+            self._m_evictions = m.counter("serve_pool_evictions")
 
     # -- cache compat view ---------------------------------------------------
     @property
@@ -413,7 +449,8 @@ class Engine:
         if self._chunk_wave_fns is None:
             raw = self._make_chunk_wave()
             self._chunk_wave_fns = (raw, counting_jit(
-                raw, self._traces, f"prefill[c{self.chunk_tokens}]"))
+                raw, self._traces, f"prefill[c{self.chunk_tokens}]",
+                tracer=self.tracer))
         return self._chunk_wave_fns
 
     def _get_step(self, cap: Optional[int]):
@@ -422,7 +459,8 @@ class Engine:
             name = ("decode_and_sample" if cap is None
                     else f"decode_and_sample[c{cap}]")
             self._step_variants[cap] = (
-                raw, counting_jit(raw, self._traces, name))
+                raw, counting_jit(raw, self._traces, name,
+                                  tracer=self.tracer))
         return self._step_variants[cap]
 
     def _decode_cap(self) -> Optional[int]:
@@ -451,7 +489,8 @@ class Engine:
                      else self._make_prefill)
             self._prefill_raw[sb] = maker(sb)
             self._prefill[sb] = counting_jit(
-                self._prefill_raw[sb], self._traces, f"prefill[{sb}]")
+                self._prefill_raw[sb], self._traces, f"prefill[{sb}]",
+                tracer=self.tracer)
         return self._prefill_raw[sb], self._prefill[sb]
 
     # -- request lifecycle ---------------------------------------------------
@@ -464,6 +503,8 @@ class Engine:
         req.skipped = 0
         req.queued_step = self.sched.now
         self.queue.append(req)
+        self._m_submitted.inc()
+        self._m_queue_depth.set(float(len(self.queue)))
 
     def _bucket(self, plen: int) -> int:
         # cap at max_len - prefix: the model prefill sequence is
@@ -488,13 +529,24 @@ class Engine:
                 "request needs more pages than the pool holds "
                 f"(prompt {plen} + budget {req.max_new_tokens}, "
                 f"{self.pool.total_pages} pages)")
-        pages, skip = self.radix.match(req.prompt)
+        tr = self.tracer
+        with tr.span("radix.match", "serve.radix", tid=TID_SERVE,
+                     uid=req.uid) as sp:
+            pages, skip = self.radix.match(req.prompt)
+            sp.set(skip=skip, pages=len(pages))
         assert need > len(pages)  # >=1 suffix token always prefills
         # all_or_nothing: an admission that fails anyway must not destroy
         # cached prefixes the next requests would have reused.
+        ev0 = self.radix.evictions
         fresh = self.pool.alloc(
             need - len(pages),
             evict=lambda k: self.radix.evict(k, all_or_nothing=True))
+        if self.radix.evictions > ev0:
+            n_ev = self.radix.evictions - ev0
+            self._m_evictions.inc(n_ev)
+            if tr.enabled:
+                tr.instant("pool.evict", "serve.radix", tid=TID_SERVE,
+                           evicted=n_ev)
         if fresh is None:
             self.radix.release(pages)
             return None
@@ -526,6 +578,8 @@ class Engine:
         self._prefix_tokens += skip
         if skip:
             self._prefix_hits += 1
+            self._m_radix_hits.inc()
+            self._m_radix_hit_tokens.inc(skip)
 
     def _insert_radix(self, req: Request, pages) -> None:
         """Index the prompt's full pages in the radix tree. For chunked
@@ -535,7 +589,10 @@ class Engine:
         ps = self.page_size
         n_full = len(req.prompt) // ps
         if n_full:
-            self.radix.insert(req.prompt[: n_full * ps], pages[:n_full])
+            with self.tracer.span("radix.insert", "serve.radix",
+                                  tid=TID_SERVE, uid=req.uid,
+                                  pages=n_full):
+                self.radix.insert(req.prompt[: n_full * ps], pages[:n_full])
 
     def _register_admit(self, req: Request, skip: int, pages) -> None:
         self._count_admit(req, skip)
@@ -551,11 +608,13 @@ class Engine:
                 np.ones((self.slots,), np.int32), z)
 
     # -- the chunk wave ------------------------------------------------------
-    def _run_chunk_wave(self, params):
+    def _run_chunk_wave(self, params, sp=NOOP_SPAN):
         """Advance every mid-prefill slot by one chunk in ONE fixed-shape
         call; final-chunk rows sample their first token and join
         ``active`` (same admission semantics as a classic wave). Returns
-        (admit_rows, device_out) for the step's single host transfer."""
+        (admit_rows, device_out) for the step's single host transfer.
+        ``sp`` is the enclosing tracer span; the twin's attributed pJ for
+        the wave lands in its args (§11 contract)."""
         C = self.chunk_tokens
         slots = self.slots
         group = sorted(self._chunking.items())
@@ -586,12 +645,15 @@ class Engine:
                 finals.append((r, slot, req))
         fn_raw, fn = self._get_chunk_wave()
         args = (tokens, tots, offs, wids, aids, temps, budgets, tags)
+        sp.set(rows=len(group), finals=len(finals))
+        self._m_chunk_rows.observe(float(len(group)))
         if self._hw is not None:
             mode = "paged" if self.paged else "dense"
             pj = self._hw.prefill_bucket_pj(
                 ("chunk", C, slots, mode), fn_raw, params, self.state,
                 *args)
             share = self._hw.on_prefill_wave(pj, len(group))
+            sp.set(total_pj=pj, attributed_pj=share * len(group))
             for _slot, req in group:
                 req.energy_pj += share
         self.state, pout = fn(params, self.state, *args)
@@ -605,11 +667,68 @@ class Engine:
             rows.append((r, slot, req))
         return rows, pout
 
+    def _run_bucket_wave(self, params, sb: int, group, waves,
+                         sp=NOOP_SPAN) -> None:
+        """One classic pow2-bucket prefill wave for single-shot admissions
+        (the pre-chunking path). ``sp`` is the enclosing tracer span; the
+        twin's attributed pJ for the wave lands in its args (§11)."""
+        tokens = np.zeros((self.slots, sb) + self._tok_trail, np.int32)
+        plens = np.zeros((self.slots,), np.int32)   # dummy rows: len 0
+        offs = np.zeros((self.slots,), np.int32)
+        ids = np.full((self.slots,), self.slots, np.int32)  # dummy: drop
+        temps = np.zeros((self.slots,), np.float32)
+        budgets = np.ones((self.slots,), np.int32)
+        tags = np.zeros((self.slots,), np.int32)
+        for r, (slot, req, skip, _pages) in enumerate(group):
+            p = np.asarray(req.prompt)
+            tokens[r, : len(p) - skip] = p[skip:]
+            plens[r] = len(p)
+            offs[r] = skip
+            ids[r] = slot
+            temps[r] = req.temperature
+            budgets[r] = req.max_new_tokens
+            tags[r] = req.uid & 0x7FFFFFFF
+        fn_raw, fn = self._get_prefill(sb)
+        if self.paged:
+            args = (tokens, plens, offs, ids, temps, budgets, tags)
+        else:
+            args = (tokens, plens, ids, temps, budgets, tags)
+        if self._hw is not None:
+            mode = "paged" if self.paged else "dense"
+            pj = self._hw.prefill_bucket_pj(
+                (sb, self.slots, mode), fn_raw, params, self.state,
+                *args)
+            share = self._hw.on_prefill_wave(pj, len(group))
+            sp.set(total_pj=pj, attributed_pj=share * len(group))
+            for _, req, _, _ in group:
+                req.energy_pj += share
+            if self.paged:
+                self._credit_prefix_hits(group, sb, pj)
+        self.state, pout = fn(params, self.state, *args)
+        waves.append(([(r, slot, req)
+                       for r, (slot, req, _s, _p) in enumerate(group)],
+                      pout))
+        for slot, req, skip, pages in group:
+            self.active[slot] = req
+            if self.paged:
+                self._slot_pages[slot] = list(pages)
+                self._register_admit(req, skip, pages)
+
     def step(self) -> List[Finished]:
         """One engine step: scheduler-driven admission, at most one chunk
         wave + the classic bucketed prefill waves, one fused
         decode_and_sample; a single device→host transfer of the new
         tokens and the done mask at the end."""
+        tr = self.tracer
+        with tr.span("engine.step", "serve", tid=TID_SERVE) as sp:
+            out = self._step_impl()
+            if tr.enabled:
+                sp.set(step=self.sched.now, finished=len(out),
+                       active=len(self.active))
+            return out
+
+    def _step_impl(self) -> List[Finished]:
+        tr = self.tracer
         params = self.params
         had_active = bool(self.active)
         freed_slots: List[int] = []
@@ -624,8 +743,13 @@ class Engine:
         # 1) admission: the scheduler picks against budget + reservation
         free = [i for i in range(self.slots)
                 if i not in self.active and i not in self._chunking]
-        picks = self.sched.pick(self.queue, len(free), tracker,
-                                self._try_reserve if self.paged else None)
+        with tr.span("sched.pick", "serve.sched", tid=TID_SERVE) as sp_pick:
+            picks = self.sched.pick(self.queue, len(free), tracker,
+                                    self._try_reserve if self.paged
+                                    else None)
+            sp_pick.set(free=len(free), picked=len(picks),
+                        queued=len(self.queue))
+        self._m_queue_depth.set(float(len(self.queue)))
         admits: List[Tuple[int, Request, int, Optional[List[int]]]] = []
         fresh_chunked: List[Tuple[int, Request, int,
                                   Optional[List[int]]]] = []
@@ -649,70 +773,49 @@ class Engine:
         # then the classic bucketed waves for single-shot admissions.
         waves: List[Tuple[List[Tuple[int, int, Request]], dict]] = []
         if self._chunking:
-            waves.append(self._run_chunk_wave(params))
+            with tr.span("prefill.chunk_wave", "serve.prefill",
+                         tid=TID_SERVE, chunk=C) as sp_cw:
+                waves.append(self._run_chunk_wave(params, sp_cw))
         by_bucket: Dict[int, list] = {}
         for slot, req, skip, pages in admits:
             sb = self._bucket(len(req.prompt) - skip)
             by_bucket.setdefault(sb, []).append((slot, req, skip, pages))
         if had_active and any(sb > self._stall_ref for sb in by_bucket):
             self.decode_stall_steps += 1
+            self._m_stalls.inc()
         for sb in sorted(by_bucket):
             group = by_bucket[sb]
-            tokens = np.zeros((self.slots, sb) + self._tok_trail, np.int32)
-            plens = np.zeros((self.slots,), np.int32)   # dummy rows: len 0
-            offs = np.zeros((self.slots,), np.int32)
-            ids = np.full((self.slots,), self.slots, np.int32)  # dummy: drop
-            temps = np.zeros((self.slots,), np.float32)
-            budgets = np.ones((self.slots,), np.int32)
-            tags = np.zeros((self.slots,), np.int32)
-            for r, (slot, req, skip, _pages) in enumerate(group):
-                p = np.asarray(req.prompt)
-                tokens[r, : len(p) - skip] = p[skip:]
-                plens[r] = len(p)
-                offs[r] = skip
-                ids[r] = slot
-                temps[r] = req.temperature
-                budgets[r] = req.max_new_tokens
-                tags[r] = req.uid & 0x7FFFFFFF
-            fn_raw, fn = self._get_prefill(sb)
-            if self.paged:
-                args = (tokens, plens, offs, ids, temps, budgets, tags)
-            else:
-                args = (tokens, plens, ids, temps, budgets, tags)
-            if self._hw is not None:
-                mode = "paged" if self.paged else "dense"
-                pj = self._hw.prefill_bucket_pj(
-                    (sb, self.slots, mode), fn_raw, params, self.state,
-                    *args)
-                share = self._hw.on_prefill_wave(pj, len(group))
-                for _, req, _, _ in group:
-                    req.energy_pj += share
-                if self.paged:
-                    self._credit_prefix_hits(group, sb, pj)
-            self.state, pout = fn(params, self.state, *args)
-            waves.append(([(r, slot, req)
-                           for r, (slot, req, _s, _p) in enumerate(group)],
-                          pout))
-            for slot, req, skip, pages in group:
-                self.active[slot] = req
-                if self.paged:
-                    self._slot_pages[slot] = list(pages)
-                    self._register_admit(req, skip, pages)
+            with tr.span(f"prefill.wave[{sb}]", "serve.prefill",
+                         tid=TID_SERVE, bucket=sb,
+                         rows=len(group)) as sp_w:
+                self._run_bucket_wave(params, sb, group, waves, sp_w)
         # 3) one fused decode_and_sample over every slot. Skip it when the
         # host already knows no slot can decode (nothing was active and
         # every admitted/final row exhausts its budget at prefill).
         dec = None
         step_raw = None
+        dec_sp = NOOP_SPAN
         sampled = [req for rows, _ in waves for _, _, req in rows]
         if had_active or any(r.max_new_tokens > 1 for r in sampled):
             self.steps += 1
+            self._m_steps.inc()
             self.decode_launches += 1
-            step_raw, step_fn = self._get_step(self._decode_cap())
-            self.state, dec = step_fn(params, self.state)
+            self._m_decode_launches.inc()
+            cap = self._decode_cap()
+            # The span stays referenced past its close: the twin books
+            # decode energy only after the prefill done-masks apply, so
+            # the attributed-pJ annotation lands post-hoc (§11).
+            with tr.span("decode_and_sample", "serve.decode",
+                         tid=TID_SERVE, cap=cap,
+                         active=len(self.active)) as dec_sp:
+                step_raw, step_fn = self._get_step(cap)
+                self.state, dec = step_fn(params, self.state)
         if not waves and dec is None:
             return []
         # 4) the step's single device→host transfer: tokens + done masks
-        got_waves, got_dec = jax.device_get(([o for _, o in waves], dec))
+        with tr.span("host_transfer", "serve", tid=TID_SERVE):
+            got_waves, got_dec = jax.device_get(
+                ([o for _, o in waves], dec))
         self.host_transfers += 1
         now = time.monotonic()
         finished: List[Finished] = []
@@ -730,7 +833,9 @@ class Engine:
             # share they didn't use.
             if self._hw is not None:
                 self._hw.observe_decode(step_raw, params, self.state)
-                share = self._hw.on_decode_step(len(self.active))
+                n_act = len(self.active)
+                share = self._hw.on_decode_step(n_act)
+                dec_sp.set(attributed_pj=share * n_act)
                 for req in self.active.values():
                     req.energy_pj += share
             for slot, req in list(self.active.items()):
@@ -741,6 +846,11 @@ class Engine:
                     freed_slots.append(slot)
         if self.paged and freed_slots:
             self._teardown_slots(freed_slots)
+        if self.paged:
+            self._m_pool_in_use.set(float(self.pool.pages_in_use))
+        if tr.enabled and self._hw is not None:
+            tr.counter("hw.attributed_pj", self._hw.attributed_pj,
+                       tid=TID_SERVE)
         return finished
 
     def _credit_prefix_hits(self, group, sb: int, pj_exec: float) -> None:
@@ -766,6 +876,10 @@ class Engine:
         if len(req.generated) == 1:  # TTFT: queue wait + full prefill
             req.first_token_t = now
             self._ttfts.append(max(now - req.submit_t, 0.0))
+            self._m_ttft.observe(max(now - req.submit_t, 0.0))
+        else:  # ITL: wall gap between consecutive tokens of one request
+            self._m_itl.observe(max(now - req.last_token_t, 0.0))
+        req.last_token_t = now
 
     def _finish(self, req: Request, now: float) -> Finished:
         n_tok = len(req.prompt) + len(req.generated)
@@ -773,6 +887,9 @@ class Engine:
         self._latencies.append(lat)
         self._new_tokens += len(req.generated)
         self._finished_count += 1
+        self._m_latency.observe(lat)
+        self._m_new_tokens.inc(len(req.generated))
+        self._m_finished.inc()
         return Finished(
             uid=req.uid, tokens=np.asarray(req.generated),
             energy_pj=req.energy_pj,
@@ -844,10 +961,3 @@ class Engine:
                 "radix_evictions": float(self.radix.evictions),
             })
         return out
-
-    def hw_telemetry(self) -> Optional[Dict[str, float]]:
-        """Fleet-style energy/utilization aggregates (None when the twin is
-        off): attributed vs total crossbar energy, the idle remainder
-        (empty decode slots + dummy admission-wave prefill rows), decode
-        slot utilization, and (paged) the prefix-hit pJ credit."""
-        return self._hw.telemetry() if self._hw is not None else None

@@ -26,17 +26,23 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels.sampling import argmax_low
 from repro.models import model as model_lib
-from repro.serve.request import Finished, Request, counting_jit
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NOOP, TID_SERVE
+from repro.serve.request import (Finished, HwTelemetryMixin, Request,
+                                 counting_jit, make_serve_energy_model,
+                                 percentile)
 
 Array = jax.Array
 
 
-class LegacyEngine:
+class LegacyEngine(HwTelemetryMixin):
     """Fixed-slot continuous batching, host-driven (the seed engine)."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
-                 seed: int = 0, track_energy: bool = True):
+                 seed: int = 0, track_energy: bool = True,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
+        self.tracer = tracer or NOOP
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -56,14 +62,25 @@ class LegacyEngine:
         self._traces: Dict[str, int] = {}
         self._decode_raw = lambda p, c, t: model_lib.decode_step(p, c, t, cfg)
         self._prefill1_raw = lambda p, c, b: model_lib.prefill(p, b, cfg, c)
-        self._decode = counting_jit(self._decode_raw, self._traces, "decode")
+        self._decode = counting_jit(self._decode_raw, self._traces, "decode",
+                                    tracer=self.tracer)
         self._prefill1 = counting_jit(self._prefill1_raw, self._traces,
-                                      "prefill")
-        self._hw = None
-        if track_energy and cfg.quant == "timefloats":
-            from repro.hw.schedule import ServeEnergyModel
-
-            self._hw = ServeEnergyModel(slots)
+                                      "prefill", tracer=self.tracer)
+        self._hw = make_serve_energy_model(cfg, slots, track_energy)
+        # The same core counters the fused engine reports (obs/metrics):
+        # the legacy record in BENCH_serve.json carries real stats too.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_steps = m.counter("serve_steps")
+        self._m_submitted = m.counter("serve_submitted")
+        self._m_finished = m.counter("serve_finished")
+        self._m_new_tokens = m.counter("serve_new_tokens")
+        self._m_ttft = m.histogram("serve_ttft_s")
+        self._m_latency = m.histogram("serve_latency_s")
+        self._ttfts: List[float] = []
+        self._latencies: List[float] = []
+        self._finished_count = 0
+        self._new_tokens = 0
 
     def compile_cache_stats(self) -> Dict[str, int]:
         """Trace counts of the engine's jitted callables. The legacy
@@ -74,6 +91,7 @@ class LegacyEngine:
     def submit(self, req: Request):
         req.submit_t = time.monotonic()  # latency is measured from handoff
         self.queue.append(req)
+        self._m_submitted.inc()
 
     def _free_slots(self) -> List[int]:
         return [i for i in range(self.slots) if i not in self.active]
@@ -88,10 +106,15 @@ class LegacyEngine:
             batch["patches"] = jnp.zeros(
                 (1, self.cfg.num_prefix_tokens, self.cfg.d_model),
                 jnp.bfloat16)
-        if self._hw is not None:
-            req.energy_pj += self._hw.on_prefill(self._hw.prefill_pj(
-                self._prefill1_raw, self.params, one_cache, batch, s))
-        logits, one_cache = self._prefill1(self.params, one_cache, batch)
+        with self.tracer.span("prefill.legacy", "serve.prefill",
+                              tid=TID_SERVE, uid=req.uid, length=s) as sp:
+            if self._hw is not None:
+                pj = self._hw.on_prefill(self._hw.prefill_pj(
+                    self._prefill1_raw, self.params, one_cache, batch, s))
+                req.energy_pj += pj
+                sp.set(attributed_pj=pj)
+            logits, one_cache = self._prefill1(self.params, one_cache,
+                                               batch)
 
         def splice(full, one):
             # group caches: leaves (L, B, ...) — write batch row `slot`
@@ -109,9 +132,18 @@ class LegacyEngine:
         else:
             self.last_token[slot, 0] = int(tok[0])
             req.generated.append(int(tok[0]))
+        now = time.monotonic()
+        req.first_token_t = now
+        req.last_token_t = now
+        self._ttfts.append(max(now - req.submit_t, 0.0))
+        self._m_ttft.observe(max(now - req.submit_t, 0.0))
         self.active[slot] = req
 
     def step(self) -> List[Finished]:
+        with self.tracer.span("engine.step", "serve", tid=TID_SERVE):
+            return self._step_impl()
+
+    def _step_impl(self) -> List[Finished]:
         # 1) admit queued requests into free slots
         for slot in self._free_slots():
             if not self.queue:
@@ -120,15 +152,22 @@ class LegacyEngine:
         if not self.active:
             return []
         self.steps += 1
+        self._m_steps.inc()
         # 2) one decode step for every slot
         tokens = jnp.asarray(self.last_token)
-        if self._hw is not None:
-            self._hw.observe_decode(self._decode_raw, self.params, self.cache,
-                                    tokens)
-            share = self._hw.on_decode_step(len(self.active))
-            for req in self.active.values():
-                req.energy_pj += share
-        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        with self.tracer.span("decode.legacy", "serve.decode",
+                              tid=TID_SERVE,
+                              active=len(self.active)) as dec_sp:
+            if self._hw is not None:
+                self._hw.observe_decode(self._decode_raw, self.params,
+                                        self.cache, tokens)
+                n_act = len(self.active)
+                share = self._hw.on_decode_step(n_act)
+                dec_sp.set(attributed_pj=share * n_act)
+                for req in self.active.values():
+                    req.energy_pj += share
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens)
         logits = logits[:, 0]  # (slots, [K,] V)
         finished: List[Finished] = []
         for slot, req in list(self.active.items()):
@@ -150,19 +189,37 @@ class LegacyEngine:
                     or int(self.cache.lengths[slot]) >= self.max_len - 1)
             if done:
                 n_tok = len(req.prompt) + len(req.generated)
+                lat = max(time.monotonic() - req.submit_t, 0.0)
+                self._latencies.append(lat)
+                self._new_tokens += len(req.generated)
+                self._finished_count += 1
+                self._m_latency.observe(lat)
+                self._m_new_tokens.inc(len(req.generated))
+                self._m_finished.inc()
                 finished.append(Finished(
                     uid=req.uid, tokens=np.asarray(req.generated),
                     energy_pj=req.energy_pj,
                     pj_per_token=req.energy_pj / max(n_tok, 1),
-                    latency_s=max(time.monotonic() - req.submit_t, 0.0)))
+                    latency_s=lat,
+                    ttft_s=(max(req.first_token_t - req.submit_t, 0.0)
+                            if req.first_token_t else 0.0)))
                 del self.active[slot]
         return finished
 
-    def hw_telemetry(self) -> Optional[Dict[str, float]]:
-        """Fleet-style energy/utilization aggregates (None when the twin is
-        off): attributed vs total crossbar energy, the idle-slot remainder,
-        and decode slot utilization."""
-        return self._hw.telemetry() if self._hw is not None else None
+    def stats(self) -> Dict[str, float]:
+        """The fused engine's core counter/latency keys, so benchmark
+        records of the legacy arm are no longer empty (``"stats": {}``)."""
+        return {
+            "steps": float(self.steps),
+            "finished": float(self._finished_count),
+            "new_tokens": float(self._new_tokens),
+            "latency_p50_s": percentile(self._latencies, 50),
+            "latency_p95_s": percentile(self._latencies, 95),
+            "ttft_p50_s": percentile(self._ttfts, 50),
+            "ttft_p95_s": percentile(self._ttfts, 95),
+            "prefill_compiles": float(self._traces.get("prefill", 0)),
+            "decode_compiles": float(self._traces.get("decode", 0)),
+        }
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Finished]:
         out: List[Finished] = []

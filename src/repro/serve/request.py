@@ -1,10 +1,11 @@
-"""Shared serving types: request/finished records and the trace-counting
-jit wrapper both engines use for `compile_cache_stats()`."""
+"""Shared serving types: request/finished records, the trace-counting
+jit wrapper both engines use for `compile_cache_stats()`, and the
+hw-twin telemetry plumbing both engines share."""
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -24,6 +25,7 @@ class Request:
     skipped: int = 0              # times a younger request was admitted first
     queued_step: int = 0          # scheduler step at submit (age basis)
     first_token_t: float = 0.0    # wall time the first token landed (TTFT)
+    last_token_t: float = 0.0     # wall time of the latest token (ITL basis)
 
 
 @dataclasses.dataclass
@@ -46,7 +48,8 @@ def percentile(xs, p: float) -> float:
     return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
 
 
-def counting_jit(fn, counters: Dict[str, int], name: str, **jit_kwargs):
+def counting_jit(fn, counters: Dict[str, int], name: str, tracer=None,
+                 **jit_kwargs):
     """`jax.jit(fn)` that bumps ``counters[name]`` once per TRACE.
 
     jit re-traces exactly when its shape/dtype cache misses, so the counter
@@ -54,6 +57,11 @@ def counting_jit(fn, counters: Dict[str, int], name: str, **jit_kwargs):
     behind `Engine.compile_cache_stats()` (the silent per-prompt-length
     recompile trap this repo's serving layer once had). The increment runs
     at trace time only; executions of the cached program don't count.
+
+    With a ``tracer`` (obs/trace), every call that re-traced emits a
+    ``compile[<name>]`` span covering that call's wall time (trace +
+    lower + compile + first dispatch — the stall a recompile actually
+    costs the serving step); cached executions emit nothing.
     """
     counters.setdefault(name, 0)
 
@@ -61,4 +69,48 @@ def counting_jit(fn, counters: Dict[str, int], name: str, **jit_kwargs):
         counters[name] += 1
         return fn(*args, **kwargs)
 
-    return jax.jit(traced, **jit_kwargs)
+    jfn = jax.jit(traced, **jit_kwargs)
+    if tracer is None:
+        return jfn
+
+    def observed(*args, **kwargs):
+        if not tracer.enabled:
+            return jfn(*args, **kwargs)
+        before = counters[name]
+        t0 = tracer.now()
+        out = jfn(*args, **kwargs)
+        if counters[name] > before:
+            from repro.obs.trace import TID_COMPILE
+
+            tracer.complete(f"compile[{name}]", t0, cat="jit",
+                            tid=TID_COMPILE, callable=name)
+        return out
+
+    return observed
+
+
+class HwTelemetryMixin:
+    """Shared `hw_telemetry()` for every serving engine: both the fused
+    and the legacy engine hold their `hw.schedule.ServeEnergyModel` (or
+    None) in ``_hw`` — the once-duplicated method lives here."""
+
+    _hw = None
+
+    def hw_telemetry(self) -> Optional[Dict[str, float]]:
+        """Fleet-style energy/utilization aggregates (None when the twin
+        is off): attributed vs total crossbar energy, the per-phase
+        attributed split, the idle remainder (empty decode slots + dummy
+        admission-wave prefill rows), decode slot utilization, and —
+        where the engine pages — the prefix-hit pJ credit."""
+        return self._hw.telemetry() if self._hw is not None else None
+
+
+def make_serve_energy_model(cfg, slots: int, track_energy: bool):
+    """The §6 twin both engines attach the same way: only for timefloats
+    quant, only when asked (the import is deferred so quant="none"
+    engines never touch the hw package)."""
+    if not (track_energy and cfg.quant == "timefloats"):
+        return None
+    from repro.hw.schedule import ServeEnergyModel
+
+    return ServeEnergyModel(slots)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs.trace import NOOP, TID_TRAIN
 from repro.train.step import TrainState
 
 PyTree = Any
@@ -60,14 +61,26 @@ def run_loop(
     restore_shardings: Optional[PyTree] = None,
     on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None,
     hw_monitor: Optional[Any] = None,
+    tracer=None,
+    metrics_registry=None,
 ) -> tuple[TrainState, LoopReport]:
+    tr = tracer or NOOP
+    m_step_s = m_steps = m_stragglers = m_loss = None
+    if metrics_registry is not None:
+        m_step_s = metrics_registry.histogram("train_step_s")
+        m_steps = metrics_registry.counter("train_steps")
+        m_stragglers = metrics_registry.counter("train_straggler_events")
+        m_loss = metrics_registry.gauge("train_loss")
     mgr = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
            if cfg.ckpt_dir else None)
     resumed_from = None
     if mgr is not None:
         latest = mgr.latest_step()
         if latest is not None:
-            state = mgr.restore(latest, state, shardings=restore_shardings)
+            with tr.span("train.restore", "train", tid=TID_TRAIN,
+                         step=latest):
+                state = mgr.restore(latest, state,
+                                    shardings=restore_shardings)
             resumed_from = latest
 
     losses: List[float] = []
@@ -79,34 +92,60 @@ def run_loop(
         # times — fast-forward the wear/energy books.
         hw_monitor.resume_at(start)
     for step in range(start, cfg.total_steps):
-        batch = batch_fn(step)
+        with tr.span("train.batch", "train", tid=TID_TRAIN, step=step):
+            batch = batch_fn(step)
         t0 = time.monotonic()
-        state, metrics = train_step(state, batch)
-        loss = float(metrics["loss"])  # blocks; acceptable at loop cadence
+        # One span per optimizer step: fwd+bwd+update are fused inside the
+        # jitted train_step; the loss fetch blocks, so the span covers the
+        # device work, not just dispatch.
+        with tr.span("train.step", "train", tid=TID_TRAIN,
+                     step=step) as sp:
+            state, metrics = train_step(state, batch)
+            loss = float(metrics["loss"])  # blocks; ok at loop cadence
         dt = time.monotonic() - t0
         losses.append(loss)
         if hw_monitor is not None:  # §6 twin: energy + write telemetry
             metrics = dict(metrics)
             metrics.update(hw_monitor.on_step())
+            if tr.enabled and "hw_step_energy_uj" in metrics:
+                sp.set(step_energy_uj=float(metrics["hw_step_energy_uj"]))
+        if tr.enabled:
+            sp.set(loss=loss)
+        if m_steps is not None:
+            m_steps.inc()
+            m_step_s.observe(dt)
+            m_loss.set(loss)
 
         if len(durations) >= cfg.min_median_window:
             med = statistics.median(durations)
             if dt > cfg.straggler_factor * med:
                 stragglers += 1
+                if m_stragglers is not None:
+                    m_stragglers.inc()
+                tr.instant("train.straggler", "train", tid=TID_TRAIN,
+                           step=step, dt=dt, median=med)
                 if mgr is not None:  # emergency checkpoint
-                    mgr.save(step + 1, state,
-                             {"reason": "straggler", "dt": dt, "median": med})
+                    with tr.span("train.checkpoint", "train",
+                                 tid=TID_TRAIN, step=step + 1,
+                                 reason="straggler"):
+                        mgr.save(step + 1, state,
+                                 {"reason": "straggler", "dt": dt,
+                                  "median": med})
         durations.append(dt)
 
         if on_metrics and (step % cfg.log_every == 0
                            or step == cfg.total_steps - 1):
             on_metrics(step, {k: float(v) for k, v in metrics.items()})
         if mgr is not None and (step + 1) % cfg.ckpt_every == 0:
-            mgr.save(step + 1, state)
+            with tr.span("train.checkpoint", "train", tid=TID_TRAIN,
+                         step=step + 1, reason="periodic"):
+                mgr.save(step + 1, state)
 
     if mgr is not None:
-        mgr.save(cfg.total_steps, state)
-        mgr.wait()
+        with tr.span("train.checkpoint", "train", tid=TID_TRAIN,
+                     step=cfg.total_steps, reason="final"):
+            mgr.save(cfg.total_steps, state)
+            mgr.wait()
     return state, LoopReport(steps_run=cfg.total_steps - start,
                              final_step=int(state.step), losses=losses,
                              straggler_events=stragglers,

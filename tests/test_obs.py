@@ -1,0 +1,406 @@
+"""Observability layer (DESIGN.md §11): span tracer semantics, metrics
+histograms vs a sorted-list oracle, exporters, and the two engine-level
+contracts — obs-off is bit-identical to no-obs, and the emitted trace's
+per-span pJ annotations fold EXACTLY to the twin's booked accumulators."""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degraded env: property tests skip, rest runs
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.models import model as M
+from repro.obs.export import (chrome_payload, prometheus_text,
+                              validate_trace, write_chrome_trace,
+                              write_metrics)
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import NOOP, NOOP_SPAN, Tracer
+from repro.serve.engine import Engine
+from repro.serve.legacy import LegacyEngine
+from repro.serve.request import Request, percentile
+
+
+def small_cfg(arch="qwen3-0.6b"):
+    cfg = reduced_for_smoke(get_config(arch))
+    return dataclasses.replace(cfg, quant="none", n_layers=2)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Tracer semantics.
+# ---------------------------------------------------------------------------
+
+
+def test_spans_nest_and_close_deterministically():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("outer", "t") as outer:
+        with tr.span("inner", "t", tid=1, k=3) as inner:
+            pass
+    assert tr.open_spans == 0
+    # inner closes first (ring holds events in close order)
+    assert [e.name for e in tr.events] == ["inner", "outer"]
+    assert inner.t0 == 2.0 and inner.t1 == 3.0
+    assert outer.t0 == 1.0 and outer.t1 == 4.0
+    assert inner.args == {"k": 3}
+
+
+def test_span_closes_under_exception_and_records_error():
+    tr = Tracer(clock=FakeClock())
+    with pytest.raises(ValueError):
+        with tr.span("boom", "t"):
+            raise ValueError("x")
+    assert tr.open_spans == 0
+    (sp,) = tr.events
+    assert sp.name == "boom" and sp.args["error"] == "ValueError"
+
+
+def test_span_args_mutable_after_close():
+    """The engine annotates the decode span's pJ only after the host
+    transfer books it — export must see the post-hoc value."""
+    tr = Tracer(clock=FakeClock())
+    with tr.span("decode", "t") as sp:
+        pass
+    sp.set(attributed_pj=42.5)
+    payload = chrome_payload(tr)
+    (ev,) = [e for e in payload["traceEvents"] if e.get("ph") == "X"]
+    assert ev["args"]["attributed_pj"] == 42.5
+
+
+def test_ring_buffer_bounds_and_counts_drops():
+    tr = Tracer(capacity=4, clock=FakeClock())
+    for i in range(10):
+        tr.instant(f"i{i}")
+    assert len(tr.events) == 4
+    assert tr.dropped == 6
+    assert [e.name for e in tr.events] == ["i6", "i7", "i8", "i9"]
+
+
+def test_complete_records_explicit_start():
+    clock = FakeClock()
+    tr = Tracer(clock=clock)
+    t0 = tr.now()                       # 1.0
+    sp = tr.complete("compile[x]", t0)  # t1 = 2.0
+    assert sp.t0 == 1.0 and sp.t1 == 2.0
+    assert tr.open_spans == 0
+
+
+def test_noop_tracer_is_inert():
+    assert NOOP.enabled is False
+    with NOOP.span("x", "c", tid=3, a=1) as sp:
+        sp.set(b=2)
+    assert sp is NOOP_SPAN
+    assert NOOP_SPAN.args == {}         # set() did not allocate/mutate
+    NOOP.instant("i")
+    NOOP.counter("c", 1.0)
+    NOOP.complete("x", 0.0)
+    assert len(NOOP.events) == 0 and NOOP.dropped == 0
+
+
+def test_chrome_payload_shape():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("a", "cat", tid=0):
+        pass
+    tr.instant("mark", tid=1)
+    tr.counter("pj", 7.0)
+    payload = chrome_payload(tr, metadata={"extra": 1})
+    assert payload["displayTimeUnit"] == "ms"
+    assert payload["metadata"]["events"] == 3
+    assert payload["metadata"]["dropped"] == 0
+    assert payload["metadata"]["extra"] == 1
+    evs = payload["traceEvents"]
+    # process + thread metadata precede the events
+    assert evs[0]["ph"] == "M"
+    x = [e for e in evs if e.get("ph") == "X"]
+    assert x and x[0]["name"] == "a" and x[0]["dur"] == pytest.approx(1e6)
+    assert x[0]["ts"] >= 0.0            # rebased to the first event
+    c = [e for e in evs if e.get("ph") == "C"]
+    assert c and c[0]["args"]["value"] == 7.0
+    json.dumps(payload)                 # JSON-serializable end to end
+
+
+# ---------------------------------------------------------------------------
+# Histograms vs the sorted-list oracle.
+# ---------------------------------------------------------------------------
+
+
+def _check_envelope(values, growth=Histogram.DEFAULT_GROWTH):
+    h = Histogram("h", growth=growth)
+    for v in values:
+        h.observe(v)
+    for p in (0, 25, 50, 75, 90, 95, 99, 100):
+        oracle = percentile(list(values), p)
+        est = h.percentile(p)
+        if oracle <= 0:
+            assert est == 0.0
+        else:
+            assert oracle <= est < oracle * growth, \
+                f"p{p}: oracle {oracle} not in [{est / growth}, {est})"
+
+
+def test_histogram_percentile_envelope_deterministic():
+    rng = np.random.default_rng(7)
+    _check_envelope(rng.lognormal(0.0, 2.0, size=500))
+    _check_envelope(rng.uniform(1e-6, 1e3, size=257))
+    _check_envelope([5.0])                       # single sample
+    _check_envelope([1.0] * 100)                 # all equal
+    _check_envelope([2.0 ** (i / 8) for i in range(-50, 50)])  # on edges
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.floats(min_value=1e-9, max_value=1e12,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=200))
+def test_histogram_percentile_envelope_property(values):
+    _check_envelope(values)
+
+
+def test_histogram_nonpositive_and_empty():
+    h = Histogram("h")
+    assert h.percentile(50) == 0.0              # empty
+    for v in (-1.0, 0.0, -5.5):
+        h.observe(v)
+    assert h.percentile(99) == 0.0              # all non-positive
+    assert h.count == 3 and h.nonpos_count == 3
+    h.observe(10.0)
+    assert h.percentile(100) >= 10.0
+
+
+def test_registry_rebinding_and_kind_clash():
+    reg = MetricsRegistry()
+    c1 = reg.counter("x", engine="fused")
+    c2 = reg.counter("x", engine="fused")
+    assert c1 is c2                     # pre-bound objects stay hot
+    assert reg.counter("x") is not c1   # different labels, different series
+    with pytest.raises(TypeError):
+        reg.gauge("x", engine="fused")
+    c1.inc(3)
+    reg.gauge("g").set(2.5)
+    reg.histogram("h_s").observe(0.25)
+    d = reg.to_dict()
+    assert d["x{engine=fused}"] == 3.0
+    assert d["g"] == 2.5
+    assert d["h_s_count"] == 1.0
+    text = prometheus_text(reg)
+    assert "# TYPE x counter" in text
+    assert 'x{engine="fused"} 3.0' in text
+    assert 'h_s_bucket{le="+Inf"} 1' in text
+
+
+def test_counter_rejects_negative():
+    with pytest.raises(AssertionError):
+        MetricsRegistry().counter("c").inc(-1)
+
+
+# ---------------------------------------------------------------------------
+# Engine contracts: obs-off bit-identity; obs-on exact energy folds.
+# ---------------------------------------------------------------------------
+
+
+def _mixed_requests(cfg, n=5, seed=3, max_new=5):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 20))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def test_engine_obs_on_off_bit_identical():
+    """Tracing must not perturb behavior: greedy token streams and
+    Engine.stats() with a live tracer are bit-identical to the default
+    (NOOP) engine on the same stream."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+
+    def drain(tracer):
+        eng = Engine(params, cfg, slots=2, max_len=64, tracer=tracer)
+        for r in _mixed_requests(cfg):
+            eng.submit(dataclasses.replace(r, generated=[],
+                                           prompt=r.prompt.copy()))
+        done = eng.run_until_drained()
+        return ({f.uid: [int(t) for t in f.tokens] for f in done},
+                eng.stats())
+
+    tok_off, stats_off = drain(None)
+    tok_on, stats_on = drain(Tracer())
+    assert tok_on == tok_off
+    # wall-clock keys are nondeterministic; every counter key must match
+    for k in stats_off:
+        if k.endswith("_s"):
+            continue
+        assert stats_on[k] == stats_off[k], k
+
+
+def test_trace_pj_folds_exactly_and_validates(tmp_path):
+    """The §11 energy-attribution contract: folding the span pJ
+    annotations in event order reproduces the twin's accumulators
+    EXACTLY (same float-addition sequence), surviving a JSON round-trip;
+    `validate_trace` certifies the written file."""
+    cfg = dataclasses.replace(small_cfg(), quant="timefloats", n_layers=1)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    tr = Tracer()
+    eng = Engine(params, cfg, slots=2, max_len=64, tracer=tr)
+    for r in _mixed_requests(cfg, n=4, max_new=4):
+        eng.submit(r)
+    eng.run_until_drained()
+    hw = eng.hw_telemetry()
+    assert hw is not None and hw["decode_attributed_pj"] > 0
+
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(path, tr, metadata={"hw": hw})
+    with open(path) as f:
+        payload = json.load(f)          # fold what the FILE holds
+
+    def fold(prefix):
+        total = 0.0
+        for ev in payload["traceEvents"]:
+            if ev.get("ph") == "X" and ev["name"].startswith(prefix):
+                pj = ev.get("args", {}).get("attributed_pj")
+                if pj is not None:
+                    total += pj
+        return total
+
+    assert fold("decode") == hw["decode_attributed_pj"]   # exact, not approx
+    assert fold("prefill") == hw["prefill_attributed_pj"]
+    assert validate_trace(payload) == []
+
+
+def test_validate_trace_catches_problems():
+    tr = Tracer()
+    with tr.span("engine.step"):
+        pass
+    payload = chrome_payload(tr, metadata={"hw": {}})
+    probs = validate_trace(payload)
+    assert any("sched.pick" in p for p in probs)
+    # dropped events void the energy certification
+    tr2 = Tracer(capacity=1)
+    with tr2.span("a"):
+        pass
+    with tr2.span("b"):
+        pass
+    probs2 = validate_trace(chrome_payload(tr2))
+    assert any("dropped" in p for p in probs2)
+    # a tampered pJ annotation breaks the exact fold
+    tr3 = Tracer()
+    with tr3.span("decode_and_sample") as sp:
+        pass
+    sp.set(attributed_pj=1.0)
+    payload3 = chrome_payload(tr3, metadata={"hw": {
+        "decode_attributed_pj": 2.0}})
+    probs3 = validate_trace(payload3, require_phases=())
+    assert any("fold mismatch" in p for p in probs3)
+    assert validate_trace({"traceEvents": []}) \
+        == ["traceEvents missing or empty"]
+
+
+def test_compile_spans_match_trace_counters():
+    """counting_jit emits one compile[...] span per re-trace — the span
+    count equals the compile-cache counters, and cached calls add none."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    tr = Tracer()
+    eng = Engine(params, cfg, slots=2, max_len=64, tracer=tr)
+    for r in _mixed_requests(cfg):
+        eng.submit(r)
+    eng.run_until_drained()
+    spans = [e for e in tr.events if e.name.startswith("compile[")]
+    traces = eng.compile_cache_stats()
+    n_traced = sum(v for k, v in traces.items()
+                   if k not in ("prefill_total", "decode_total"))
+    assert len(spans) == n_traced > 0
+    names = {e.name for e in spans}
+    assert any(n.startswith("compile[prefill[") for n in names)
+
+
+def test_legacy_engine_stats_and_trace():
+    """Satellite: the legacy arm reports real stats (the empty
+    ``"stats": {}`` benchmark record bug) and its trace validates."""
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    tr = Tracer()
+    eng = LegacyEngine(params, cfg, slots=2, max_len=64, tracer=tr)
+    for r in _mixed_requests(cfg, n=3, max_new=3):
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == 3
+    st_ = eng.stats()
+    assert st_["finished"] == 3.0
+    assert st_["new_tokens"] == 9.0
+    assert st_["steps"] > 0 and st_["prefill_compiles"] > 0
+    assert st_["latency_p50_s"] > 0 and st_["ttft_p50_s"] > 0
+    assert eng.metrics.get("serve_finished").value == 3.0
+    payload = chrome_payload(tr, metadata={"hw": eng.hw_telemetry()})
+    assert validate_trace(
+        payload, require_phases=("engine.step", "prefill", "decode")) == []
+
+
+def test_trainer_emits_spans_and_metrics():
+    from repro.data.pipeline import DataPipeline
+    from repro.train.step import TrainConfig, init_state, make_train_step
+    from repro.train.trainer import LoopConfig, run_loop
+
+    cfg = dataclasses.replace(small_cfg(), n_layers=1)
+    tcfg = TrainConfig(accum=1)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    pipe = DataPipeline(cfg, batch=2, seq=16, kind="lm", prefetch=0)
+    state = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    tr = Tracer()
+    reg = MetricsRegistry()
+    loop = LoopConfig(total_steps=3, log_every=100, ckpt_every=1000)
+    _, report = run_loop(state, step, pipe.batch_at, loop,
+                         tracer=tr, metrics_registry=reg)
+    assert tr.open_spans == 0
+    steps = [e for e in tr.events if e.name == "train.step"]
+    assert len(steps) == 3
+    assert all("loss" in e.args for e in steps)
+    assert reg.get("train_steps").value == 3.0
+    assert reg.get("train_step_s").count == 3
+    assert reg.get("train_loss").value == pytest.approx(report.losses[-1])
+
+
+def test_metrics_file_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("serve_steps").inc(4)
+    reg.histogram("serve_ttft_s").observe(0.5)
+    jpath = str(tmp_path / "m.json")
+    write_metrics(jpath, reg)
+    with open(jpath) as f:
+        d = json.load(f)
+    assert d["serve_steps"] == 4.0 and d["serve_ttft_s_count"] == 1.0
+    ppath = str(tmp_path / "m.prom")
+    write_metrics(ppath, reg)
+    with open(ppath) as f:
+        text = f.read()
+    assert "# TYPE serve_steps counter" in text
+
+
+def test_obs_report_cli(tmp_path, capsys):
+    """The launch-layer summarizer validates a written serve trace."""
+    from repro.launch.obs_report import main as report_main
+
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    tr = Tracer()
+    eng = Engine(params, cfg, slots=2, max_len=64, tracer=tr)
+    for r in _mixed_requests(cfg, n=3, max_new=3):
+        eng.submit(r)
+    eng.run_until_drained()
+    path = str(tmp_path / "t.json")
+    write_chrome_trace(path, tr, metadata={"hw": eng.hw_telemetry()})
+    assert report_main([path, "--validate"]) == 0
+    out = capsys.readouterr().out
+    assert "trace valid" in out and "engine.step" in out
