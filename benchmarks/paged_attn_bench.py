@@ -36,6 +36,7 @@ LIVE = 128       # live KV extent per row (the cap the engine would pick)
 HKV, G, DK, DV = 2, 8, 64, 64     # GQA: 16 q heads
 MLA_H, MLA_C, MLA_R = 16, 64, 32  # absorbed MLA
 SPLIT_CANDIDATES = (1, 2, 4, 8)
+SPEC_CHAIN = 9   # chain-verify rows per slot (K=8 drafts + pending)
 
 
 def _med_time(fn, *args, iters=3, reps=5):
@@ -165,6 +166,28 @@ def run(report) -> None:
                         for c in SPLIT_CANDIDATES)
         report(f"kernel/paged_attn_autotune/{key}", float(best),
                f"{label}: {note}")
+
+    # -- tree-verify row-count sweep (DESIGN §12) -------------------------
+    # The speculative chain-verify launches batch*(K+1) kernel rows per
+    # step — a different split-K tradeoff from a batch-row decode (more
+    # row parallelism wants fewer splits). Persist rows-qualified keys at
+    # both row counts so serve-time lookups hit exactly; un-benchmarked
+    # counts borrow the nearest persisted shape instead of the 1-split
+    # default.
+    for rows in (B, B * SPEC_CHAIN):
+        rep = rows // B
+        qv = jnp.repeat(q, rep, axis=0)
+        ptv = jnp.repeat(pt, rep, axis=0)
+        lnv = jnp.repeat(lens, rep, axis=0)
+        bench = lambda ns: jax.block_until_ready(paged_decode_attention(  # noqa: E731,B023
+            qv, kp, vp, ptv, lnv, n_splits=ns, use_pallas=False))
+        best, timings = autotune.tune(SPLIT_CANDIDATES, bench, reps=5)
+        autotune.record(PAGE, HKV * G, DK, best, rows=rows)
+        key = autotune.shape_key(PAGE, HKV * G, DK, rows=rows)
+        note = " ".join(f"ns{c}={timings[c] * 1e6:.0f}us"
+                        for c in SPLIT_CANDIDATES)
+        report(f"kernel/paged_attn_autotune/{key}", float(best),
+               f"gqa verify rows={rows}: {note}")
 
 
 def main() -> None:

@@ -57,6 +57,9 @@ SUMMARY_KEYS = (
     "serve/chunked_tok_per_s_ratio",
     "serve/bursty_chunked_ttft_p95_s",
     "serve/obs_overhead_x",
+    "serve/spec_speedup_x",
+    "serve/spec_accept_rate",
+    "serve/spec_pj_per_accepted_ratio",
     "kernel/paged_attn_gqa_speedup_x",
     "kernel/paged_attn_mla_speedup_x",
 )
@@ -79,6 +82,12 @@ CHECK_BANDS = {
     "serve/chunked_tok_per_s_ratio": ("higher", 0.3, 0.9),
     "serve/prefix_paged_speedup_x": ("higher", 0.25, 0.9),
     "serve/speedup_x": ("higher", 0.25, 1.0),
+    # Speculative decoding (DESIGN §12): the tok/s win on the decode-heavy
+    # motif scenario, and the energy overhead each ACCEPTED token carries
+    # once rejected speculation is charged to it (~ (K+1)/mean-emit; the
+    # ceiling allows acceptance dipping to ~1.8 emitted tokens/chain).
+    "serve/spec_speedup_x": ("higher", 0.25, 1.5),
+    "serve/spec_pj_per_accepted_ratio": ("lower", 0.3, 3.0),
     "kernel/paged_attn_gqa_speedup_x": ("higher", 0.25, 1.0),
     "kernel/paged_attn_mla_speedup_x": ("higher", 0.25, 1.0),
     "table1/tops_per_watt": ("higher", 0.05, 20.0),

@@ -27,7 +27,7 @@ fleet-style slot-utilization telemetry).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
 
@@ -288,6 +288,15 @@ class ServeEnergyModel:
         self.prefix_saved_pj = 0.0
         self.prefix_hits = 0
         self.prefix_tokens_saved = 0
+        # Speculative decoding (DESIGN.md §12): the fused verify step's
+        # crossbar reads split by chain position into accepted (emitted
+        # tokens) vs rejected (verified-but-discarded) work. Both halves
+        # are real spend — they also land in decode_attributed_pj — the
+        # split is what prices speculation (pJ per ACCEPTED token).
+        self.spec_accepted_pj = 0.0
+        self.spec_rejected_pj = 0.0
+        self.spec_accepted_tokens = 0
+        self.spec_rejected_tokens = 0
 
     # -- census capture (engines pass their UNJITTED callables so the
     # abstract trace never bumps their compile counters) -------------------
@@ -360,6 +369,37 @@ class ServeEnergyModel:
         self.decode_attributed_pj += share * active_slots
         return share
 
+    def on_spec_step(self, active_slots: int, emitted: int, chain: int
+                     ) -> Tuple[float, float, float, float]:
+        """Book one fused verify step of a speculative engine
+        (DESIGN.md §12): the batched call runs ``chain`` (= K+1) positions
+        for all ``slots`` rows, so the per-position cost is
+        ``step_pj / (slots * chain)``. An active slot's row share is its
+        ``chain`` positions (identical to the non-spec per-slot share);
+        across the step's active rows, ``emitted`` positions were accepted
+        and the rest rejected. Returns ``(row_share, accepted_pj,
+        rejected_pj, step_total)`` where ``step_total = accepted +
+        rejected`` is a SINGLE float the decode accumulators add once per
+        step — the same addition sequence an event-order fold over the
+        decode spans' ``attributed_pj`` (and ``accepted_pj`` /
+        ``rejected_pj``) args performs, keeping the §11 exactness
+        contract."""
+        self.decode_steps += 1
+        self.active_slot_steps += active_slots
+        self.total_pj += self.decode_step_pj or 0.0
+        pos_share = (self.decode_step_pj or 0.0) / max(self.slots * chain, 1)
+        rejected = active_slots * chain - emitted
+        acc = pos_share * emitted
+        rej = pos_share * rejected
+        step_total = acc + rej
+        self.attributed_pj += step_total
+        self.decode_attributed_pj += step_total
+        self.spec_accepted_pj += acc
+        self.spec_rejected_pj += rej
+        self.spec_accepted_tokens += int(emitted)
+        self.spec_rejected_tokens += int(rejected)
+        return pos_share * chain, acc, rej, step_total
+
     def telemetry(self) -> Dict[str, float]:
         return {
             "attributed_pj": self.attributed_pj,
@@ -377,6 +417,16 @@ class ServeEnergyModel:
                                  if self.decode_steps and self.slots
                                  else 0.0),
             "decode_pj_per_token": self.decode_pj_per_slot,
+            "spec_accepted_pj": self.spec_accepted_pj,
+            "spec_rejected_pj": self.spec_rejected_pj,
+            "spec_accepted_tokens": float(self.spec_accepted_tokens),
+            "spec_rejected_tokens": float(self.spec_rejected_tokens),
+            # The speculation price: ALL verify spend (accepted + rejected
+            # positions) per accepted token. 0 when speculation is off.
+            "spec_pj_per_accepted_token": (
+                (self.spec_accepted_pj + self.spec_rejected_pj)
+                / self.spec_accepted_tokens
+                if self.spec_accepted_tokens else 0.0),
         }
 
 
@@ -436,9 +486,25 @@ class AdmissionCost:
     fall back to 1.0 pJ/token: scores degrade gracefully to token counts,
     and the budget's pJ axis becomes a token bound."""
 
-    def __init__(self, token_pj: float = 1.0, decode_token_pj: float = 1.0):
+    def __init__(self, token_pj: float = 1.0, decode_token_pj: float = 1.0,
+                 *, wear_weight: float = 0.0,
+                 endurance: Optional[Callable[[], float]] = None):
         self.token_pj = float(token_pj)
         self.decode_token_pj = float(decode_token_pj)
+        # Wear-aware admission (DESIGN.md §12 satellite): ``endurance`` is
+        # a live source of the twin's endurance_frac (e.g. ``lambda:
+        # monitor.summary()["endurance_frac"]``); with a positive
+        # ``wear_weight`` every projected token surcharges by
+        # ``wear_weight * endurance_frac * token_pj``, deprioritizing
+        # token-hungry requests as the modeled array wears. The default
+        # weight 0.0 keeps scores bit-identical to the unweighted cost.
+        self.wear_weight = float(wear_weight)
+        self._endurance = endurance
+
+    @property
+    def endurance_frac(self) -> float:
+        return float(self._endurance()) if self._endurance is not None \
+            else 0.0
 
     @classmethod
     def for_model(cls, params, cfg) -> "AdmissionCost":
@@ -457,10 +523,15 @@ class AdmissionCost:
     def request_score(self, remaining_prompt: int, max_new: int) -> float:
         """Total projected cost of finishing a request from here: the
         un-prefilled prompt remainder plus its decode-slot occupancy
-        (max_new decode reads). Lower = cheaper to serve = admitted first
-        under the "cost" policy."""
-        return (remaining_prompt * self.token_pj
-                + max_new * self.decode_token_pj)
+        (max_new decode reads), plus the optional wear surcharge (see
+        ``__init__``). Lower = cheaper to serve = admitted first under
+        the "cost" policy."""
+        score = (remaining_prompt * self.token_pj
+                 + max_new * self.decode_token_pj)
+        if self.wear_weight and self._endurance is not None:
+            score += (self.wear_weight * self.endurance_frac
+                      * (remaining_prompt + max_new) * self.token_pj)
+        return score
 
 
 def per_token_forward_cost(placement: Placement,

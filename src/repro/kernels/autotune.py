@@ -5,20 +5,27 @@ programs share one row's page-table walk. More splits buy parallelism on
 a real accelerator but pay a combine; on this CPU container (jnp ref /
 interpret mode) a single split is essentially always right. Rather than
 hard-coding either, the choice is *measured*: ``benchmarks/paged_attn``
-times the candidate splits per (page_size, heads, head_dim) shape with
-:func:`tune` and benchmarks/run.py persists the winners into
+times the candidate splits per (page_size, heads, head_dim[, rows])
+shape with :func:`tune` and benchmarks/run.py persists the winners into
 BENCH_kernel.json under ``"paged_attn_autotune"`` — the committed record
 of what this container measured. At serve time :func:`best_n_splits`
-reads that cache (memoized per process); shapes never benchmarked fall
-back to 1 split.
+reads that cache (memoized per process).
 
-The cache is keyed by shape only (not batch or table extent): the kernel
-normalizes the cached value down to a divisor of whatever table extent
-the engine's KV cap produces for the step.
+Keys come in two granularities. The legacy ``p{page}_h{heads}_d{dim}``
+form is row-count-agnostic; since the speculative tree-verify path
+(DESIGN.md §12) launches ``batch * (K+1)`` kernel rows — a very
+different split-K tradeoff from a ``batch``-row decode — benchmarks may
+also persist ``..._r{rows}`` qualified entries. Lookup order: exact
+rows-qualified key, then the legacy rows-agnostic key, then the NEAREST
+persisted shape in log-space (an un-benchmarked shape borrows the most
+similar measurement instead of silently dropping to the 1-split
+default), and only on an empty cache the heuristic 1.
 """
 from __future__ import annotations
 
 import json
+import math
+import re
 import time
 from pathlib import Path
 from typing import Callable, Dict, Iterable, Optional, Tuple
@@ -28,9 +35,21 @@ _CACHE_KEY = "paged_attn_autotune"
 _memo: Dict[str, int] = {}
 _persisted: Optional[Dict[str, int]] = None
 
+_KEY_RE = re.compile(r"^p(\d+)_h(\d+)_d(\d+)(?:_r(\d+))?$")
 
-def shape_key(page_size: int, heads: int, head_dim: int) -> str:
-    return f"p{page_size}_h{heads}_d{head_dim}"
+
+def shape_key(page_size: int, heads: int, head_dim: int,
+              rows: Optional[int] = None) -> str:
+    base = f"p{page_size}_h{heads}_d{head_dim}"
+    return base if rows is None else f"{base}_r{rows}"
+
+
+def _parse_key(key: str) -> Optional[Tuple[int, int, int, Optional[int]]]:
+    m = _KEY_RE.match(key)
+    if not m:
+        return None
+    p, h, d, r = m.groups()
+    return int(p), int(h), int(d), (int(r) if r is not None else None)
 
 
 def _load_persisted() -> Dict[str, int]:
@@ -46,19 +65,53 @@ def _load_persisted() -> Dict[str, int]:
     return _persisted
 
 
-def best_n_splits(page_size: int, heads: int, head_dim: int) -> int:
+def _nearest_key(page_size: int, heads: int, head_dim: int,
+                 rows: Optional[int]) -> Optional[str]:
+    """Closest persisted shape by log2 distance over (page, heads, dim),
+    with a softer rows term — rows matter less to the split tradeoff
+    than the per-row geometry, and legacy rows-agnostic entries pay a
+    flat mismatch penalty rather than being excluded."""
+    best_key, best_dist = None, None
+    for key, _ in sorted(_load_persisted().items()):
+        parsed = _parse_key(key)
+        if parsed is None:
+            continue
+        p, h, d, r = parsed
+        dist = (abs(math.log2(page_size / p)) + abs(math.log2(heads / h))
+                + abs(math.log2(head_dim / d)))
+        if rows is not None and r is not None:
+            dist += 0.25 * abs(math.log2(rows / r))
+        elif (rows is None) != (r is None):
+            dist += 0.5
+        if best_dist is None or dist < best_dist:
+            best_key, best_dist = key, dist
+    return best_key
+
+
+def best_n_splits(page_size: int, heads: int, head_dim: int,
+                  rows: Optional[int] = None) -> int:
     """Cached split count for a kernel shape (>=1; callers normalize to a
-    divisor of their table extent). Unbenchmarked shapes default to 1."""
-    key = shape_key(page_size, heads, head_dim)
+    divisor of their table extent). Lookup: exact rows-qualified key →
+    legacy rows-agnostic key → nearest persisted shape → 1."""
+    key = shape_key(page_size, heads, head_dim, rows)
     if key not in _memo:
-        _memo[key] = _load_persisted().get(key, 1)
+        persisted = _load_persisted()
+        val = persisted.get(key)
+        if val is None and rows is not None:
+            val = persisted.get(shape_key(page_size, heads, head_dim))
+        if val is None and persisted:
+            near = _nearest_key(page_size, heads, head_dim, rows)
+            if near is not None:
+                val = persisted[near]
+        _memo[key] = 1 if val is None else int(val)
     return max(1, _memo[key])
 
 
-def record(page_size: int, heads: int, head_dim: int, n_splits: int) -> None:
+def record(page_size: int, heads: int, head_dim: int, n_splits: int,
+           rows: Optional[int] = None) -> None:
     """Install a tuned value for this process (the benchmark also persists
     it via BENCH_kernel.json for future processes)."""
-    _memo[shape_key(page_size, heads, head_dim)] = int(n_splits)
+    _memo[shape_key(page_size, heads, head_dim, rows)] = int(n_splits)
 
 
 def clear_memo() -> None:

@@ -126,9 +126,14 @@ def _combine(m: Array, l: Array, acc: Array) -> Array:
 
 
 def _norm_splits(n_splits: Optional[int], n_table: int, *, page_size: int,
-                 heads: int, head_dim: int) -> int:
+                 heads: int, head_dim: int,
+                 rows: Optional[int] = None) -> int:
     if n_splits is None:
-        n_splits = autotune.best_n_splits(page_size, heads, head_dim)
+        # rows = launch batch (decode: slots; speculative tree verify:
+        # batch * (K+1)) — lets the autotuner's rows-qualified records
+        # pick a different split for the much wider verify launches.
+        n_splits = autotune.best_n_splits(page_size, heads, head_dim,
+                                          rows=rows)
     n_splits = max(1, min(int(n_splits), n_table))
     while n_table % n_splits:
         n_splits -= 1  # largest divisor <= request (pow2 tables: exact)
@@ -242,7 +247,8 @@ def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
     if scale is None:
         scale = 1.0 / math.sqrt(dk)
     ns = _norm_splits(n_splits, page_table.shape[1],
-                      page_size=k_pool.shape[1], heads=h, head_dim=dk)
+                      page_size=k_pool.shape[1], heads=h, head_dim=dk,
+                      rows=b)
     fn = _gqa_pallas if d.use_pallas else _gqa_ref
     kw = {"interpret": d.interpret} if d.use_pallas else {}
     return _combine(*fn(q, k_pool, v_pool, page_table, lengths,
@@ -356,7 +362,7 @@ def paged_decode_mla(q_lat: Array, q_rope: Array, ckv_pool: Array,
     b, h, c = q_lat.shape
     ns = _norm_splits(n_splits, page_table.shape[1],
                       page_size=ckv_pool.shape[1], heads=h,
-                      head_dim=c + q_rope.shape[-1])
+                      head_dim=c + q_rope.shape[-1], rows=b)
     fn = _mla_pallas if d.use_pallas else _mla_ref
     kw = {"interpret": d.interpret} if d.use_pallas else {}
     return _combine(*fn(q_lat, q_rope, ckv_pool, kr_pool, page_table,

@@ -43,6 +43,12 @@ def main(argv=None):
     ap.add_argument("--sched", default="fcfs", choices=["fcfs", "cost"],
                     help="admission policy: arrival order or pJ-scored "
                          "cost-aware (hw twin Table-I costs)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding (DESIGN §12): ngram draft + "
+                         "batched chain verify; greedy streams stay bitwise "
+                         "identical to spec-off (fused engine, temp 0)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative chain depth (draft tokens per step)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Perfetto/Chrome trace-event JSON of the "
                          "drain (DESIGN §11; load at ui.perfetto.dev)")
@@ -64,6 +70,7 @@ def main(argv=None):
     from repro.serve.engine import Engine
     from repro.serve.legacy import LegacyEngine
     from repro.serve.request import Request, percentile as _pct
+    from repro.serve.spec import SpecConfig
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -74,8 +81,12 @@ def main(argv=None):
 
     params = M.init(cfg, jax.random.PRNGKey(args.seed))
     if args.engine != "fused" and (args.paged or args.chunk_tokens
-                                   or args.sched != "fcfs"):
-        print("--paged/--chunk-tokens/--sched require the fused engine",
+                                   or args.sched != "fcfs" or args.spec):
+        print("--paged/--chunk-tokens/--sched/--spec require the fused "
+              "engine", file=sys.stderr)
+        return 2
+    if args.spec and args.temperature > 0:
+        print("--spec requires greedy decoding (temperature 0)",
               file=sys.stderr)
         return 2
     tracer = Tracer(capacity=args.trace_capacity) if args.trace_out else None
@@ -84,7 +95,8 @@ def main(argv=None):
                      seed=args.seed, paged=args.paged,
                      page_size=args.page_size,
                      chunk_tokens=args.chunk_tokens or None,
-                     sched=args.sched, tracer=tracer)
+                     sched=args.sched, tracer=tracer,
+                     spec=(SpecConfig(k=args.spec_k) if args.spec else None))
     else:
         eng = LegacyEngine(params, cfg, slots=args.slots,
                            max_len=args.max_len, seed=args.seed,
@@ -92,9 +104,17 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
                           size=args.prefix_len).astype(np.int32)
+    motif = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
     for uid in range(args.requests):
         plen = int(rng.integers(4, min(64, args.max_len // 2)))
-        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        if args.spec:
+            # Motif-tiled prompts: repetitive structure the ngram draft can
+            # actually extend (random prompts would verify correctly but
+            # accept almost nothing — a useless smoke).
+            prompt = np.tile(motif, plen // len(motif) + 1)[:plen]
+        else:
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=plen).astype(np.int32)
         if args.prefix_len:
             prompt = np.concatenate([shared, prompt])
         eng.submit(Request(uid=uid, prompt=prompt,
@@ -135,6 +155,15 @@ def main(argv=None):
         print(f"chunked: {getattr(eng, 'chunk_waves', 0)} chunk waves "
               f"(chunk_tokens={args.chunk_tokens}, sched={args.sched}), "
               f"{getattr(eng, 'decode_stall_steps', 0)} stalled steps")
+    if args.spec:
+        st = eng.stats()
+        print(f"spec: k={int(st['spec_k'])} accept rate "
+              f"{st['spec_accept_rate']:.1%} "
+              f"({int(st['spec_accepted'])}/{int(st['spec_proposed'])} "
+              f"drafts), {st['spec_tokens_per_step']:.2f} emitted "
+              f"tokens/step")
+        if st["spec_proposed"] <= 0:
+            return 1
     hw = eng.hw_telemetry()
     if hw is not None:  # §6 twin: projected crossbar energy + utilization
         per_tok = [f.pj_per_token for f in done]
@@ -146,6 +175,11 @@ def main(argv=None):
             print(f"prefix credit: {hw['prefix_saved_pj'] / 1e6:.2f} uJ "
                   f"saved over {int(hw['prefix_hits'])} hits "
                   f"({int(hw['prefix_tokens_saved'])} prefill positions)")
+        if args.spec and hw.get("spec_accepted_tokens"):
+            print(f"spec energy: {hw['spec_pj_per_accepted_token']:.0f} "
+                  f"pJ/accepted-token "
+                  f"({hw['spec_rejected_pj'] / 1e6:.2f} uJ on rejected "
+                  f"positions)")
     if args.metrics_out:
         write_metrics(args.metrics_out, eng.metrics)
         print(f"metrics written to {args.metrics_out}")

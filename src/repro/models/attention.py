@@ -114,6 +114,14 @@ def fused_paged_ok(mask: MaskSpec, seq: int) -> bool:
             and not mask.prefix_len)
 
 
+def spec_verify_ok(mask: MaskSpec) -> bool:
+    """Speculative chain-verify (DESIGN.md §12) rides the fused kernel by
+    flattening the (B, K+1) query chain into B*(K+1) independent rows with
+    per-row lengths — sound only under the plain causal mask, the same
+    boundary as ``fused_paged_ok``."""
+    return mask.causal and mask.window is None and not mask.prefix_len
+
+
 def _capped_pt(page_table: Array, page: int, kv_cap: Optional[int]) -> Array:
     """Static prefix of the page table covering ``kv_cap`` positions — the
     engine's KV-extent cap (DESIGN.md §9): the host guarantees every live
@@ -258,6 +266,20 @@ def cache_update(cache: KVCache, k_new: Array, v_new: Array,
     return KVCache(k=k, v=v)
 
 
+def scatter_rows(buf: Array, new: Array, positions: Array) -> Array:
+    """Scatter ``new (B, S, *feat)`` at explicit ``positions (B, S)`` into
+    ``buf (B, S_max, *feat)``, dropping out-of-range writes. The verify
+    write path uses this instead of ``dynamic_update_slice`` (which CLAMPS
+    the start index near the end of the buffer and would silently
+    overwrite committed positions when a speculative chain overhangs
+    ``S_max``)."""
+
+    def write(b, n, p):
+        return b.at[p].set(n, mode="drop")
+
+    return jax.vmap(write)(buf, new, positions)
+
+
 # ---------------------------------------------------------------------------
 # The attention module (params + apply)
 # ---------------------------------------------------------------------------
@@ -307,6 +329,7 @@ def attention_apply(
     q_offset: int = 0,
     kv_cap: Optional[int] = None,     # paged decode: KV-extent cap (tokens)
     fused: bool = True,               # paged decode: fused split-K kernel
+    spec_verify: bool = False,        # speculative chain verify (S = K+1)
 ) -> tuple[Array, Optional[KVCache]]:
     """Self-attention; cache!=None selects the decode path."""
     q = dense(x, params["wq"], cfg)   # (B, S, H, hd)
@@ -335,12 +358,36 @@ def attention_apply(
                 pt = _capped_pt(cache.pt, cache.k.shape[1], kv_cap)
                 out = paged_decode_attention(
                     q[:, 0], cache.k, cache.v, pt, lengths)[:, None]
+            elif fused and spec_verify and spec_verify_ok(mask):
+                # Chain verify (DESIGN.md §12): flatten the (B, S) query
+                # chain to B*S kernel rows sharing each slot's page table,
+                # with per-row length pos+1. Row j==0 is byte-for-byte the
+                # single-token fused decode call above.
+                from repro.kernels.paged_attn import paged_decode_attention
+
+                b, s = q.shape[0], q.shape[1]
+                pt = _capped_pt(cache.pt, cache.k.shape[1], kv_cap)
+                ptf = jnp.repeat(pt, s, axis=0)
+                # Clamp to the table extent: overhang rows near the cache
+                # end can nominally exceed it, but their logits are never
+                # emitted (the engine's accept rule stops at max_len-1),
+                # so truncating the read changes nothing observable.
+                row_len = jnp.minimum((positions + 1).reshape(-1),
+                                      pt.shape[1] * cache.k.shape[1])
+                out = paged_decode_attention(
+                    q.reshape((b * s,) + q.shape[2:]), cache.k, cache.v,
+                    ptf, row_len)
+                out = out.reshape((b, s) + out.shape[1:])
             else:
                 out = decode_attention(q, paged_view(cache.k, cache.pt),
                                        paged_view(cache.v, cache.pt),
                                        positions, lengths, mask)
         else:
-            cache = cache_update(cache, k, v, write_pos)
+            if spec_verify and q.shape[1] > 1:
+                cache = KVCache(k=scatter_rows(cache.k, k, positions),
+                                v=scatter_rows(cache.v, v, positions))
+            else:
+                cache = cache_update(cache, k, v, write_pos)
             out = decode_attention(q, cache.k, cache.v, positions, lengths,
                                    mask)
     else:

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.attention import (MaskSpec, NEG, _capped_pt,
                                     blockwise_attention, fused_paged_ok,
-                                    mask_allowed, paged_view, paged_write)
+                                    mask_allowed, paged_view, paged_write,
+                                    scatter_rows, spec_verify_ok)
 from repro.models.common import ParamSpec, dense, dense_in, rms_norm, rope
 
 Array = jax.Array
@@ -96,6 +97,7 @@ def mla_apply(
     q_offset: int = 0,
     kv_cap: Optional[int] = None,     # paged decode: KV-extent cap (tokens)
     fused: bool = True,               # paged decode: fused split-K kernel
+    spec_verify: bool = False,        # speculative chain verify (S = K+1)
 ) -> tuple[Array, Optional[MLACache]]:
     m = cfg.mla
     b, s, _ = x.shape
@@ -147,16 +149,44 @@ def mla_apply(
             y = dense_in(out.astype(cfg.activation_dtype), params["wo"],
                          cfg)
             return y, cache
+        if fused and spec_verify and spec_verify_ok(mask):
+            # Chain verify (DESIGN.md §12): B*S flattened kernel rows with
+            # per-row length pos+1; row j==0 matches the s==1 call above.
+            from repro.kernels.paged_attn import paged_decode_mla
+
+            pt = _capped_pt(cache.pt, cache.c_kv.shape[1], kv_cap)
+            ptf = jnp.repeat(pt, s, axis=0)
+            # Clamp to the table extent — overhang rows near the cache end
+            # are computed but never emitted (see attention.py).
+            row_len = jnp.minimum((positions + 1).reshape(-1),
+                                  pt.shape[1] * cache.c_kv.shape[1])
+            o_lat = paged_decode_mla(
+                q_lat.reshape((b * s,) + q_lat.shape[2:]),
+                q_rope.reshape((b * s,) + q_rope.shape[2:]),
+                cache.c_kv, cache.k_rope, ptf, row_len, scale=scale)
+            o_lat = o_lat.reshape((b, s) + o_lat.shape[1:])
+            out = jnp.einsum("bshc,chv->bshv", o_lat,
+                             wv_b.astype(jnp.float32))
+            y = dense_in(out.astype(cfg.activation_dtype), params["wo"],
+                         cfg)
+            return y, cache
         c_kv_all = paged_view(cache.c_kv, cache.pt)      # (B, T*page, R)
         k_rope_all = paged_view(cache.k_rope, cache.pt)
     else:
-        def write(buf, new, pos):
-            return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=0)
+        if spec_verify and s > 1:
+            cache = MLACache(
+                c_kv=scatter_rows(cache.c_kv, c_kv, positions),
+                k_rope=scatter_rows(cache.k_rope, k_rope, positions),
+            )
+        else:
+            def write(buf, new, pos):
+                return jax.lax.dynamic_update_slice_in_dim(buf, new, pos,
+                                                           axis=0)
 
-        cache = MLACache(
-            c_kv=jax.vmap(write)(cache.c_kv, c_kv, write_pos),
-            k_rope=jax.vmap(write)(cache.k_rope, k_rope, write_pos),
-        )
+            cache = MLACache(
+                c_kv=jax.vmap(write)(cache.c_kv, c_kv, write_pos),
+                k_rope=jax.vmap(write)(cache.k_rope, k_rope, write_pos),
+            )
         c_kv_all, k_rope_all = cache.c_kv, cache.k_rope
     s_lat = jnp.einsum("bshc,bjc->bhsj", q_lat,
                        c_kv_all.astype(jnp.float32))

@@ -100,6 +100,7 @@ def block_apply(
     q_offset: int = 0,
     kv_cap: Optional[int] = None,
     fused_paged: bool = True,
+    spec_verify: bool = False,
 ) -> Tuple[Array, Optional[PyTree], Dict[str, Array]]:
     aux = dict(AUX_ZERO)
     h = norm_apply(params["norm1"], x, cfg)
@@ -116,12 +117,14 @@ def block_apply(
         y, new_cache = mla_mod.mla_apply(
             params["mixer"], h, cfg, mask=default_mask(cfg),
             positions=positions, cache=cache, lengths=lengths,
-            q_offset=q_offset, kv_cap=kv_cap, fused=fused_paged)
+            q_offset=q_offset, kv_cap=kv_cap, fused=fused_paged,
+            spec_verify=spec_verify)
     else:
         y, new_cache = attn_mod.attention_apply(
             params["mixer"], h, cfg, mask=default_mask(cfg),
             positions=positions, cache=cache, lengths=lengths,
-            q_offset=q_offset, kv_cap=kv_cap, fused=fused_paged)
+            q_offset=q_offset, kv_cap=kv_cap, fused=fused_paged,
+            spec_verify=spec_verify)
     x = x + y
     h2 = norm_apply(params["norm2"], x, cfg)
     if kind == "moe":
@@ -130,10 +133,14 @@ def block_apply(
         # expert slots (the PR 4 padded-capacity caveat, now fixed and
         # pinned by tests). Decode (S == 1) keeps the classic path.
         tok_valid = None
-        if lengths is not None and x.shape[1] > 1:
+        if lengths is not None and x.shape[1] > 1 and not spec_verify:
             tok_valid = positions < lengths[:, None]
+        # Verify chains route drop-free (DESIGN.md §12): every chain
+        # position is a real token, and the batched dispatch must keep
+        # exactly what the equivalent single-token decode dispatches keep.
         y2, aux_moe = moe_mod.moe_apply(params["ffn"], h2, cfg,
-                                        token_mask=tok_valid)
+                                        token_mask=tok_valid,
+                                        drop_free=spec_verify)
         aux.update(aux_moe)
     else:
         y2 = mlp_apply(params["ffn"], h2, cfg)
@@ -278,7 +285,7 @@ def _head(params: PyTree, x: Array, cfg: ModelConfig) -> Array:
 
 def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
                 train: bool, kv_cap: Optional[int] = None,
-                fused_paged: bool = True):
+                fused_paged: bool = True, spec_verify: bool = False):
     group_meta = layer_groups(cfg)
     aux_tot = {k: jnp.zeros((), jnp.float32) for k in AUX_ZERO}
     new_caches = []
@@ -306,7 +313,7 @@ def _run_groups(params, x, cfg, *, positions, caches, lengths, q_offset,
                 y, nc, aux_l = block_apply(
                     kind, lp, x_c, cfg, positions=positions, cache=lc,
                     lengths=lengths, q_offset=q_offset, kv_cap=kv_cap,
-                    fused_paged=fused_paged)
+                    fused_paged=fused_paged, spec_verify=spec_verify)
             aux_c = {k: aux_c[k] + jnp.asarray(aux_l[k], jnp.float32)
                      for k in aux_c}
             return (y, aux_c), nc
@@ -537,6 +544,44 @@ def decode_step(params: PyTree, cache: ModelCache, tokens: Array,
         params, x, cfg, positions=positions, caches=list(cache.groups),
         lengths=lengths, q_offset=0, train=False, kv_cap=kv_cap,
         fused_paged=fused_paged)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = _head(params, x, cfg)
+    return logits, ModelCache(groups=tuple(new_groups), lengths=lengths)
+
+
+def verify_step(params: PyTree, cache: ModelCache, tokens: Array,
+                cfg: ModelConfig, *,
+                kv_cap: Optional[int] = None,
+                fused_paged: bool = True) -> Tuple[Array, ModelCache]:
+    """Speculative chain verify (DESIGN.md §12). ``tokens (B, S)`` is the
+    pending token followed by S-1 draft tokens; they are written at
+    positions ``cache.lengths .. lengths+S-1`` and ALL S next-token logits
+    come back ``(B, S, V)`` — one batched target call scores the whole
+    chain. Column 0 is bitwise the plain ``decode_step`` output for the
+    same state (the greedy-equivalence anchor); the caller rolls
+    ``lengths`` back to the accepted prefix, which logically erases the
+    rejected suffix (masked now, overwritten by the next write at the
+    same positions).
+
+    Attention-family caches only (dense K/V or MLA latent, dense or
+    paged — the ``paged_supported`` boundary); SSM/hybrid state cannot be
+    rolled back positionally. Dense cache writes use a drop-mode scatter
+    so a chain overhanging ``max_len`` never clamps onto committed
+    positions; paged writes already route overhang to scratch/trash
+    pages. ``kv_cap`` must cover ``lengths + S`` (the engine adds the
+    draft depth to its pow2 extent in spec mode)."""
+    assert paged_supported(cfg), "verify_step: attention families only"
+    b, s = tokens.shape[:2]
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    positions = (cache.lengths[:, None]
+                 + jnp.arange(s, dtype=cache.lengths.dtype)[None, :])
+    lengths = cache.lengths + s
+    x, _aux, new_groups = _run_groups(
+        params, x, cfg, positions=positions, caches=list(cache.groups),
+        lengths=lengths, q_offset=0, train=False, kv_cap=kv_cap,
+        fused_paged=fused_paged, spec_verify=True)
     x = norm_apply(params["final_norm"], x, cfg)
     logits = _head(params, x, cfg)
     return logits, ModelCache(groups=tuple(new_groups), lengths=lengths)

@@ -119,7 +119,8 @@ def dispatch_indices(idx: Array, n_tokens: int, cap: int, n_experts: int,
 
 
 def moe_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig,
-              token_mask: Optional[Array] = None
+              token_mask: Optional[Array] = None,
+              drop_free: bool = False
               ) -> Tuple[Array, Dict[str, Array]]:
     """x (B, S, D) -> (y, aux). Dispatch is over the flattened token dim,
     optionally scanned in chunks (MoEConfig.dispatch_chunk, §Perf I-5).
@@ -127,7 +128,13 @@ def moe_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig,
     ``token_mask`` (B, S) bool marks REAL tokens in a padded serving
     batch: masked-out tokens are routed to a sentinel expert (they never
     consume capacity) and the effective capacity is computed over the
-    real count — prefill routing is invariant to admission padding."""
+    real count — prefill routing is invariant to admission padding.
+
+    ``drop_free`` raises the per-expert capacity to the token count so no
+    assignment is ever dropped — the speculative verify path (DESIGN.md
+    §12) needs routing to match what B independent single-token decode
+    dispatches would do, and those never drop for B <= the capacity
+    floor. Buffer cost is (E, T, D) for the (small) verify token count."""
     mo = cfg.moe
     b, s, d = x.shape
     t = b * s
@@ -140,7 +147,8 @@ def moe_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig,
 
         def body(_, xs):
             xi, mi = xs if mf is not None else (xs, None)
-            yi, auxi = _moe_tokens(params, xi, cfg, token_mask=mi)
+            yi, auxi = _moe_tokens(params, xi, cfg, token_mask=mi,
+                                   drop_free=drop_free)
             return None, (yi, auxi)
 
         with timefloats.census_scale(t // ck):  # §6 op-census weighting
@@ -149,12 +157,13 @@ def moe_apply(params: Dict[str, Array], x: Array, cfg: ModelConfig,
         aux = {k: jnp.mean(v) for k, v in auxc.items()}
         y = yc.reshape(t, d)
         return y.reshape(b, s, d).astype(cfg.activation_dtype), aux
-    y, aux = _moe_tokens(params, xf, cfg, token_mask=mf)
+    y, aux = _moe_tokens(params, xf, cfg, token_mask=mf, drop_free=drop_free)
     return y.reshape(b, s, d).astype(cfg.activation_dtype), aux
 
 
 def _moe_tokens(params: Dict[str, Array], xf: Array, cfg: ModelConfig,
-                token_mask: Optional[Array] = None
+                token_mask: Optional[Array] = None,
+                drop_free: bool = False
                 ) -> Tuple[Array, Dict[str, Array]]:
     """(T, D) tokens -> (T, D) output + aux; one dispatch buffer."""
     mo = cfg.moe
@@ -165,7 +174,11 @@ def _moe_tokens(params: Dict[str, Array], xf: Array, cfg: ModelConfig,
 
     cap = capacity(t, cfg)
     cap_eff = None
-    if token_mask is not None:
+    if drop_free:
+        # Per-expert assignments are bounded by the token count (top_k
+        # experts per token are distinct), so cap == t keeps everything.
+        cap = t
+    elif token_mask is not None:
         # Pads route to the sentinel expert (no capacity consumed) and the
         # keep threshold follows the REAL token count — serving prefill
         # capacity no longer depends on admission padding (PR 4 caveat).

@@ -23,9 +23,11 @@ from repro.obs.trace import Tracer
 
 # Span names any fused-engine serve drain must have produced (the CI
 # trace-smoke contract). "prefill" matches by prefix: bucket waves are
-# ``prefill.wave[<b>]``, chunk waves ``prefill.chunk_wave``.
+# ``prefill.wave[<b>]``, chunk waves ``prefill.chunk_wave``; the decode
+# phase matches ``decode_and_sample`` and the speculative engine's
+# ``decode_and_verify`` (DESIGN.md §12) alike.
 REQUIRED_SERVE_PHASES = ("engine.step", "sched.pick", "prefill",
-                         "decode_and_sample", "host_transfer")
+                         "decode_and_", "host_transfer")
 
 
 # ---------------------------------------------------------------------------
@@ -89,14 +91,15 @@ def write_jsonl(path: str, tracer: Tracer) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _fold_pj(events: List[Dict], match) -> float:
-    """Left-fold of span ``attributed_pj`` args in event order — the same
+def _fold_pj(events: List[Dict], match, arg: str = "attributed_pj"
+             ) -> float:
+    """Left-fold of span ``arg`` args in event order — the same
     float-addition sequence the ServeEnergyModel accumulators performed,
     so exact equality is the contract, not approximation."""
     total = 0.0
     for ev in events:
         if ev.get("ph") == "X" and match(ev.get("name", "")):
-            pj = ev.get("args", {}).get("attributed_pj")
+            pj = ev.get("args", {}).get(arg)
             if pj is not None:
                 total += pj
     return total
@@ -129,14 +132,20 @@ def validate_trace(payload: Dict,
                         "tracer capacity to certify energy sums")
         return problems
     hw = meta.get("hw") or {}
-    for key, match in (
-            ("decode_attributed_pj",
-             lambda n: n.startswith("decode")),
-            ("prefill_attributed_pj",
-             lambda n: n.startswith("prefill"))):
+    decode_match = lambda n: n.startswith("decode")  # noqa: E731
+    prefill_match = lambda n: n.startswith("prefill")  # noqa: E731
+    for key, match, arg in (
+            ("decode_attributed_pj", decode_match, "attributed_pj"),
+            ("prefill_attributed_pj", prefill_match, "attributed_pj"),
+            # Speculative engines (DESIGN.md §12) additionally annotate
+            # every verify span with the accepted/rejected pJ split; the
+            # folds must reproduce the twin's spec accumulators exactly
+            # (both are 0.0 for non-spec traces).
+            ("spec_accepted_pj", decode_match, "accepted_pj"),
+            ("spec_rejected_pj", decode_match, "rejected_pj")):
         if key not in hw:
             continue
-        got = _fold_pj(events, match)
+        got = _fold_pj(events, match, arg)
         want = hw[key]
         if got != want:
             problems.append(

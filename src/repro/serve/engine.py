@@ -97,6 +97,7 @@ from repro.serve.request import (Finished, HwTelemetryMixin, Request,
                                  counting_jit, make_serve_energy_model,
                                  percentile)
 from repro.serve.sched import Scheduler
+from repro.serve.spec import SpecConfig, chain_accept, propose_ngram
 
 Array = jax.Array
 
@@ -209,6 +210,7 @@ class Engine(HwTelemetryMixin):
                  chunk_tokens: Optional[int] = None,
                  sched: str = "fcfs",
                  budget: Optional[StepBudget] = None,
+                 spec: Optional[SpecConfig] = None,
                  tracer=None, metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.tracer = tracer or NOOP
@@ -236,6 +238,32 @@ class Engine(HwTelemetryMixin):
         self._decode_fn = decode_fn or (
             lambda p, c, t, cap=None: model_lib.decode_step(
                 p, c, t, cfg, kv_cap=cap, fused_paged=self.fused_decode))
+        # Speculative decoding (DESIGN.md §12): the decode step becomes a
+        # fused draft→verify→accept over K+1 chain positions per slot.
+        # Greedy-only (temperature==0, asserted at submit) — acceptance is
+        # longest-matching-prefix against the target's argmax, which keeps
+        # spec-on token streams bitwise equal to the non-spec engine.
+        self.spec = spec
+        self._spec_model = spec is not None and spec.draft == "model"
+        # Per-slot [uid, buffer, filled] history mirrors for the ngram
+        # draft: _build_drafts appends only the tokens emitted since the
+        # previous step instead of re-concatenating prompt+generated.
+        self._spec_hist: Dict[int, list] = {}
+        if spec is not None:
+            assert model_lib.paged_supported(cfg), \
+                "speculative decoding covers the attention/MLA families " \
+                "(chain verify needs position-addressable rows; DESIGN §12)"
+            assert decode_fn is None, \
+                "speculative decoding needs the real model verify step"
+        if self._spec_model:
+            dcfg = spec.draft_cfg
+            assert not paged and chunk_tokens is None, \
+                "draft='model' mirrors full-prompt admission waves — " \
+                "dense non-chunked engines only (DESIGN §12)"
+            assert model_lib.paged_supported(dcfg), \
+                "draft model must be an attention/MLA family"
+            assert dcfg.vocab_size == cfg.vocab_size, \
+                "draft and target must share the vocab"
         # Chunked prefill (DESIGN.md §10): pow2 chunk size or None (off).
         self.chunk_tokens = int(chunk_tokens) if chunk_tokens else None
         if self.chunk_tokens is not None:
@@ -280,6 +308,21 @@ class Engine(HwTelemetryMixin):
             temp=jnp.zeros((slots,), jnp.float32),
             remaining=z_i, counter=z_i, tag=z_i)
 
+        # Model-draft state (DESIGN §12): a dense draft cache co-resident
+        # on device. Same row count as the target cache ON PURPOSE — a
+        # padded buffer changes XLA's reduction tiling and perturbs
+        # near-tie argmaxes, which would break the self-draft
+        # acceptance==1.0 pin. The K-deep draft scan can clamp-write into
+        # the last row near the cache end; that only degrades the final
+        # steps' PROPOSALS (the verify still rejects bad drafts), and the
+        # clamped row is never read back as committed state (lengths roll
+        # back to <= max_len - 1 before any such read).
+        self._spec_dcache = (model_lib.init_cache(
+            spec.draft_cfg, slots, max_len)
+            if self._spec_model else None)
+        self._spec_proposed = 0    # draft tokens offered to the verifier
+        self._spec_accepted = 0    # draft tokens accepted (excl. bonus)
+
         self.active: Dict[int, Request] = {}      # slot -> request (mirror)
         self._chunking: Dict[int, Request] = {}   # slot -> mid-prefill req
         # deque: FCFS admission pops the head every step; a list's pop(0)
@@ -319,6 +362,7 @@ class Engine(HwTelemetryMixin):
         self.decode_launches = 0
         self._prefill_raw: Dict[int, Callable] = {}
         self._prefill: Dict[int, Callable] = {}
+        self._draft_prefill: Dict[int, Callable] = {}
         self._chunk_wave_fns: Optional[Tuple[Callable, Callable]] = None
 
         self._hw = make_serve_energy_model(cfg, slots, track_energy)
@@ -346,6 +390,10 @@ class Engine(HwTelemetryMixin):
             self._m_radix_hits = m.counter("serve_radix_hits")
             self._m_radix_hit_tokens = m.counter("serve_radix_hit_tokens")
             self._m_evictions = m.counter("serve_pool_evictions")
+        if spec is not None:
+            self._m_spec_proposed = m.counter("serve_spec_proposed")
+            self._m_spec_accepted = m.counter("serve_spec_accepted")
+            self._m_spec_emit = m.histogram("serve_spec_emit_per_slot")
 
     # -- cache compat view ---------------------------------------------------
     @property
@@ -384,6 +432,97 @@ class Engine(HwTelemetryMixin):
                 counter=state.counter + state.active.astype(jnp.int32),
                 tag=state.tag)
             return new, {"token": tok, "done": done}
+
+        return step
+
+    def _make_verify_and_accept(self, kv_cap: Optional[int] = None):
+        """The speculative replacement for ``decode_and_sample``
+        (DESIGN.md §12): ONE jitted call that (for model drafts) rolls the
+        draft K steps, runs the target's batched chain verify over the
+        K+1 positions [pending, d_1..d_K], applies the
+        longest-accepted-prefix rule with the non-spec done predicate per
+        emission, and rolls ``lengths`` back to the accepted extent.
+        Returns per-slot ``emit`` counts so the host books 1..K+1 tokens
+        from the step's single transfer. Greedy columns are computed by
+        the SAME sampler as the non-spec step (temperature-0 rows reduce
+        to the lowest-index argmax), which is what makes spec-on streams
+        bitwise spec-off."""
+        cfg, eos, max_len = self.cfg, self.eos_id, self.max_len
+        key = self._key
+        k_depth = self.spec.k
+        fused = self.fused_decode
+
+        def greedy_of(logits, state: EngineState):
+            b, s, v = logits.shape  # (slots, K+1, V)
+            temps = jnp.repeat(state.temp, s)
+            tags = jnp.repeat(state.tag, s)
+            ctrs = (state.counter[:, None]
+                    + jnp.arange(s, dtype=jnp.int32)[None, :]).reshape(-1)
+            tok = sample_tokens(logits.reshape(b * s, v), temps, key, tags,
+                                ctrs)
+            return tok.reshape(b, s)
+
+        def accept(state: EngineState, cache, greedy, draft):
+            n0 = state.cache.lengths
+            emit, e, stop = chain_accept(greedy, draft, state.remaining,
+                                         n0, max_len=max_len, eos=eos)
+            done = state.active & stop
+            e_act = jnp.where(state.active, e, 0)
+            last = jnp.take_along_axis(greedy, (e - 1)[:, None], axis=1)
+            new = EngineState(
+                cache=cache._replace(lengths=jnp.where(
+                    state.active, n0 + e, cache.lengths)),
+                last_token=jnp.where(state.active[:, None], last,
+                                     state.last_token),
+                active=state.active & ~done,
+                temp=state.temp,
+                remaining=state.remaining - e_act,
+                counter=state.counter + e_act,
+                tag=state.tag)
+            return new, {"token": greedy, "emit": e_act, "done": done}
+
+        if self._spec_model:
+            dcfg = self.spec.draft_cfg
+
+            def step(params, dparams, state: EngineState, dcache):
+                def body(carry, _):
+                    dc, tok = carry
+                    dlg, dc = model_lib.decode_step(dparams, dc, tok, dcfg)
+                    nt = sample_tokens(dlg[:, 0], state.temp, key,
+                                       state.tag, state.counter)
+                    return (dc, nt[:, None]), nt
+
+                # K+1 iterations, not K: on full acceptance the target
+                # commits rows n0..n0+K (chain = [pending, d_1..d_K]), so
+                # the draft cache must hold d_K's K/V at row n0+K too —
+                # scanning only K times would leave that row stale while
+                # the synced lengths make it readable, and the next scan's
+                # garbage read would break self-draft acceptance.
+                (dcache, _), drafts = jax.lax.scan(
+                    body, (dcache, state.last_token), None,
+                    length=k_depth + 1)
+                draft = jnp.moveaxis(drafts, 0, 1)[:, :k_depth]  # (slots, K)
+                tokens = jnp.concatenate([state.last_token, draft], axis=1)
+                logits, cache = model_lib.verify_step(
+                    params, state.cache, tokens, cfg, kv_cap=kv_cap,
+                    fused_paged=fused)
+                new, out = accept(state, cache, greedy_of(logits, state),
+                                  draft)
+                # Keep the draft cache's committed extent in lockstep with
+                # the target's (the K scan writes hold the pending token +
+                # drafts d_1..d_{K-1}, which IS the accepted prefix's
+                # content up to the rolled-back length).
+                dcache = dcache._replace(lengths=new.cache.lengths)
+                return (new, dcache), out
+
+            return step
+
+        def step(params, state: EngineState, draft):
+            tokens = jnp.concatenate([state.last_token, draft], axis=1)
+            logits, cache = model_lib.verify_step(
+                params, state.cache, tokens, cfg, kv_cap=kv_cap,
+                fused_paged=fused)
+            return accept(state, cache, greedy_of(logits, state), draft)
 
         return step
 
@@ -455,9 +594,13 @@ class Engine(HwTelemetryMixin):
 
     def _get_step(self, cap: Optional[int]):
         if cap not in self._step_variants:
-            raw = self._make_decode_and_sample(cap)
-            name = ("decode_and_sample" if cap is None
-                    else f"decode_and_sample[c{cap}]")
+            if self.spec is not None:
+                raw = self._make_verify_and_accept(cap)
+                base = "decode_and_verify"
+            else:
+                raw = self._make_decode_and_sample(cap)
+                base = "decode_and_sample"
+            name = base if cap is None else f"{base}[c{cap}]"
             self._step_variants[cap] = (
                 raw, counting_jit(raw, self._traces, name,
                                   tracer=self.tracer))
@@ -479,6 +622,10 @@ class Engine(HwTelemetryMixin):
         for req in self.active.values():
             need = max(need, self._prefix + len(req.prompt)
                        + max(len(req.generated), 1))
+        if self.spec is not None:
+            # The chain verify reads through extent n0 + K + 1 = need + K
+            # (speculative overhang past the committed prefix).
+            need += self.spec.k
         pages = -(-need // self.page_size)
         t = 1 << max(pages - 1, 0).bit_length()
         return min(t, self.n_ptab) * self.page_size
@@ -493,11 +640,38 @@ class Engine(HwTelemetryMixin):
                 tracer=self.tracer)
         return self._prefill_raw[sb], self._prefill[sb]
 
+    def _get_draft_prefill(self, sb: int):
+        """Draft-cache mirror of a bucket prefill wave (draft='model',
+        DESIGN §12): same tokens/lengths/ids as the target wave, writing
+        the draft's dense cache. No sampling — the pending token is
+        shared with the target. Named outside the ``prefill[`` prefix so
+        `compile_cache_stats()['prefill_total']` keeps counting target
+        waves only."""
+        if sb not in self._draft_prefill:
+            dcfg = self.spec.draft_cfg
+            dlen = self.max_len
+
+            def fn(dparams, dcache, tokens, plens, ids):
+                _lg, dc = model_lib.prefill_into_slots(
+                    dparams, {"tokens": tokens}, dcfg, dcache, plens, ids,
+                    max_len=dlen)
+                return dc
+
+            self._draft_prefill[sb] = counting_jit(
+                fn, self._traces, f"draft_prefill[{sb}]",
+                tracer=self.tracer)
+        return self._draft_prefill[sb]
+
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
         # Stamp submission here, not at Request construction: callers build
         # request objects (and benchmarks clone templates) long before they
         # hand them over, and latency/TTFT are measured from THIS moment.
+        if self.spec is not None:
+            assert req.temperature <= 0.0, \
+                "speculative decoding is greedy-only: the chain-accept " \
+                "rule replays argmax, not the temp>0 sampling stream " \
+                "(DESIGN §12)"
         req.submit_t = time.monotonic()
         req.prefilled = 0
         req.skipped = 0
@@ -705,6 +879,12 @@ class Engine(HwTelemetryMixin):
             if self.paged:
                 self._credit_prefix_hits(group, sb, pj)
         self.state, pout = fn(params, self.state, *args)
+        if self._spec_model:
+            # Mirror the wave into the draft cache (dense non-chunked
+            # engines only, so args == (tokens, plens, ids, ...)).
+            self._spec_dcache = self._get_draft_prefill(sb)(
+                self.spec.draft_params, self._spec_dcache, tokens, plens,
+                ids)
         waves.append(([(r, slot, req)
                        for r, (slot, req, _s, _p) in enumerate(group)],
                       pout))
@@ -795,21 +975,38 @@ class Engine(HwTelemetryMixin):
         dec = None
         step_raw = None
         dec_sp = NOOP_SPAN
+        draft_np = None
+        scratch: Optional[Dict[int, List[int]]] = None
         sampled = [req for rows, _ in waves for _, _, req in rows]
         if had_active or any(r.max_new_tokens > 1 for r in sampled):
             self.steps += 1
             self._m_steps.inc()
             self.decode_launches += 1
             self._m_decode_launches.inc()
+            if self.spec is not None:
+                if not self._spec_model:
+                    draft_np = self._build_drafts()
+                if self.paged:
+                    scratch = self._attach_scratch_pages()
             cap = self._decode_cap()
+            span_name = ("decode_and_verify" if self.spec is not None
+                         else "decode_and_sample")
             # The span stays referenced past its close: the twin books
             # decode energy only after the prefill done-masks apply, so
             # the attributed-pJ annotation lands post-hoc (§11).
-            with tr.span("decode_and_sample", "serve.decode",
+            with tr.span(span_name, "serve.decode",
                          tid=TID_SERVE, cap=cap,
                          active=len(self.active)) as dec_sp:
                 step_raw, step_fn = self._get_step(cap)
-                self.state, dec = step_fn(params, self.state)
+                if self.spec is None:
+                    self.state, dec = step_fn(params, self.state)
+                elif self._spec_model:
+                    (self.state, self._spec_dcache), dec = step_fn(
+                        params, self.spec.draft_params, self.state,
+                        self._spec_dcache)
+                else:
+                    self.state, dec = step_fn(params, self.state,
+                                              draft_np)
         if not waves and dec is None:
             return []
         # 4) the step's single device→host transfer: tokens + done masks
@@ -832,18 +1029,52 @@ class Engine(HwTelemetryMixin):
             # requests that finished at prefill are never charged a decode
             # share they didn't use.
             if self._hw is not None:
-                self._hw.observe_decode(step_raw, params, self.state)
-                n_act = len(self.active)
-                share = self._hw.on_decode_step(n_act)
-                dec_sp.set(attributed_pj=share * n_act)
+                if self.spec is not None:
+                    if self._spec_model:
+                        self._hw.observe_decode(
+                            step_raw, params, self.spec.draft_params,
+                            self.state, self._spec_dcache)
+                    else:
+                        self._hw.observe_decode(step_raw, params,
+                                                self.state, draft_np)
+                    n_act = len(self.active)
+                    emitted = sum(int(got_dec["emit"][s])
+                                  for s in self.active)
+                    share, acc, rej, step_pj = self._hw.on_spec_step(
+                        n_act, emitted, self.spec.k + 1)
+                    dec_sp.set(attributed_pj=step_pj, accepted_pj=acc,
+                               rejected_pj=rej)
+                else:
+                    self._hw.observe_decode(step_raw, params, self.state)
+                    n_act = len(self.active)
+                    share = self._hw.on_decode_step(n_act)
+                    dec_sp.set(attributed_pj=share * n_act)
                 for req in self.active.values():
                     req.energy_pj += share
-            for slot, req in list(self.active.items()):
-                self._append_token(req, got_dec["token"][slot], now)
-                if bool(got_dec["done"][slot]):
-                    finished.append(self._finish(req, now))
-                    del self.active[slot]
-                    freed_slots.append(slot)
+            if self.spec is not None:
+                k_depth = self.spec.k
+                for slot, req in list(self.active.items()):
+                    e = int(got_dec["emit"][slot])
+                    self._spec_proposed += k_depth
+                    self._spec_accepted += max(e - 1, 0)
+                    self._m_spec_proposed.inc(k_depth)
+                    self._m_spec_accepted.inc(max(e - 1, 0))
+                    self._m_spec_emit.observe(float(e))
+                    self._append_tokens(req, got_dec["token"][slot][:e],
+                                        now)
+                    if bool(got_dec["done"][slot]):
+                        finished.append(self._finish(req, now))
+                        del self.active[slot]
+                        freed_slots.append(slot)
+            else:
+                for slot, req in list(self.active.items()):
+                    self._append_token(req, got_dec["token"][slot], now)
+                    if bool(got_dec["done"][slot]):
+                        finished.append(self._finish(req, now))
+                        del self.active[slot]
+                        freed_slots.append(slot)
+        if scratch:
+            self._release_scratch_pages(scratch)
         if self.paged and freed_slots:
             self._teardown_slots(freed_slots)
         if self.paged:
@@ -870,6 +1101,117 @@ class Engine(HwTelemetryMixin):
                     self.state, *self._zero_wave_args(fsb))
                 saved = max(pj_full - pj_exec, 0.0) / self.slots
             self._hw.on_prefix_hit(saved, skip)
+
+    # -- speculative decoding (DESIGN.md §12) --------------------------------
+    def _build_drafts(self) -> np.ndarray:
+        """Host prompt-lookup proposals for every active slot; idle rows
+        stay zero (the device accept rule masks them via ``active``).
+        ``generated`` already contains the pending token, so the proposal
+        continues exactly the chain the verify step scores."""
+        k_depth = self.spec.k
+        draft = np.zeros((self.slots, k_depth), np.int32)
+        for slot, req in self.active.items():
+            n_prompt = len(req.prompt)
+            total = n_prompt + len(req.generated)
+            ent = self._spec_hist.get(slot)
+            if ent is None or ent[0] != req.uid or ent[2] > total:
+                buf = np.empty((total + req.max_new_tokens + k_depth + 8,),
+                               np.int64)
+                buf[:n_prompt] = np.asarray(req.prompt,
+                                            np.int64).reshape(-1)
+                ent = self._spec_hist[slot] = [req.uid, buf, n_prompt]
+            buf, filled = ent[1], ent[2]
+            if total > len(buf):
+                buf = np.concatenate([buf, np.empty_like(buf)])
+                ent[1] = buf
+            if total > filled:
+                buf[filled:total] = req.generated[filled - n_prompt:]
+                ent[2] = total
+            draft[slot] = propose_ngram(buf[:total], k_depth,
+                                        max_n=self.spec.ngram_max)
+        return draft
+
+    def _attach_scratch_pages(self) -> Dict[int, List[int]]:
+        """Back the speculative overhang with per-step scratch pages: the
+        admission reservation covers every ACCEPTABLE position (the
+        emit rule never passes ``last_write``), but the verify write
+        extent reaches ``n0 + K``. Allocate the uncovered tail per slot
+        (no eviction — scratch must never cannibalize the radix cache);
+        on shortfall the page-table rows simply keep pointing at the
+        trash page, which is correct because overhang content is never
+        read back as committed state. Returns {slot: scratch pages} for
+        `_release_scratch_pages` after the step."""
+        k_depth = self.spec.k
+        ps = self.page_size
+        ids: List[int] = []
+        rows: List[np.ndarray] = []
+        scratch: Dict[int, List[int]] = {}
+        for slot, req in self.active.items():
+            owned = self._slot_pages.get(slot)
+            if not owned:
+                continue
+            # Pending write position (device n0), host-mirrored:
+            n0 = self._prefix + len(req.prompt) \
+                + max(len(req.generated), 1) - 1
+            top = min(n0 + k_depth, self.max_len - 1)
+            need = top // ps + 1
+            if need <= len(owned):
+                continue
+            extra = self.pool.alloc(need - len(owned))
+            if extra is None:
+                continue  # trash-page fallback (see docstring)
+            scratch[slot] = extra
+            row = np.zeros((self.n_ptab,), np.int32)
+            row[: len(owned)] = owned
+            row[len(owned): len(owned) + len(extra)] = extra
+            ids.append(slot)
+            rows.append(row)
+        if ids:
+            self.state = self.state._replace(
+                cache=model_lib.set_page_rows(
+                    self.state.cache, np.asarray(ids, np.int32),
+                    np.stack(rows)))
+        return scratch
+
+    def _release_scratch_pages(self, scratch: Dict[int, List[int]]) -> None:
+        """Drop this step's scratch refs back to the pool. Table rows are
+        reset FIRST (same hazard as `_teardown_slots`: a released page
+        may be reallocated before the next step, and the stale entry
+        would let the slot write into it)."""
+        ids = np.asarray(sorted(scratch), np.int32)
+        rows = np.zeros((len(ids), self.n_ptab), np.int32)
+        for r, slot in enumerate(ids):
+            owned = self._slot_pages.get(int(slot), [])
+            rows[r, : len(owned)] = owned
+        self.state = self.state._replace(
+            cache=model_lib.set_page_rows(self.state.cache, ids, rows))
+        for pages in scratch.values():
+            for p in pages:
+                self.pool.release(p)
+
+    def _append_tokens(self, req: Request, toks, now: float) -> None:
+        """Spec-aware bookkeeping: one step can emit several tokens. The
+        request's first-ever token books TTFT; every other emitted token
+        books ONE inter-token-latency observation — the step's wall gap
+        split evenly across its emissions (per emitted token, not per
+        engine step), so spec-on ITL histograms stay comparable with
+        spec-off ones instead of reading K+1 tokens as one gap."""
+        toks = [int(t) for t in np.asarray(toks).reshape(-1)]
+        if not toks:
+            return
+        fresh = not req.generated
+        gap = 0.0 if fresh else max(now - req.last_token_t, 0.0)
+        n_itl = len(toks) - 1 if fresh else len(toks)
+        if fresh:
+            req.first_token_t = now
+            self._ttfts.append(max(now - req.submit_t, 0.0))
+            self._m_ttft.observe(max(now - req.submit_t, 0.0))
+        if n_itl > 0:
+            per = gap / n_itl
+            for _ in range(n_itl):
+                self._m_itl.observe(per)
+        req.generated.extend(toks)
+        req.last_token_t = now
 
     def _append_token(self, req: Request, tok, now: float) -> None:
         req.generated.append(int(tok if np.ndim(tok) == 0 else tok[0]))
@@ -921,10 +1263,11 @@ class Engine(HwTelemetryMixin):
         stats["prefill_total"] = sum(
             v for k, v in self._traces.items() if k.startswith("prefill["))
         # Cap-variant decode compiles roll up here: ``decode_and_sample``
-        # plus any ``decode_and_sample[c<cap>]`` entries.
+        # or the speculative ``decode_and_verify`` (DESIGN §12), plus any
+        # ``[c<cap>]`` variants of either.
         stats["decode_total"] = sum(
             v for k, v in self._traces.items()
-            if k.startswith("decode_and_sample"))
+            if k.startswith("decode_and_"))
         return stats
 
     def stats(self) -> Dict[str, float]:
@@ -959,5 +1302,16 @@ class Engine(HwTelemetryMixin):
                 "radix_hits": float(self._prefix_hits),
                 "radix_nodes": float(self.radix.nodes),
                 "radix_evictions": float(self.radix.evictions),
+            })
+        if self.spec is not None:
+            out.update({
+                "spec_k": float(self.spec.k),
+                "spec_proposed": float(self._spec_proposed),
+                "spec_accepted": float(self._spec_accepted),
+                "spec_accept_rate": (self._spec_accepted
+                                     / max(self._spec_proposed, 1)),
+                # Emitted tokens per verify launch (>= 1; K+1 = perfect).
+                "spec_tokens_per_step": (self._new_tokens
+                                         / max(self.decode_launches, 1)),
             })
         return out

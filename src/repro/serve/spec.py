@@ -1,0 +1,242 @@
+"""Speculative decoding on the serving engines (DESIGN.md §12).
+
+The fused engine's decode floor is one full target forward per emitted
+token. Speculation breaks it: a cheap draft proposes a depth-K token
+chain per active slot, the target scores the WHOLE chain in one batched
+``model.verify_step`` call against the live (dense or paged) cache, and
+the longest accepted prefix — plus the target's own "bonus" token — is
+emitted in a single step. Greedy equivalence is the correctness gate:
+with temperature-0 requests the spec-on token stream is bitwise the
+non-spec fused engine's stream; speculation only changes how many steps
+it takes (chain verify column j is bitwise the sequential decode logits
+after consuming the chain prefix — pinned by tests/test_spec.py).
+
+Two draft sources:
+
+- ``ngram`` (default): host-side prompt-lookup — propose the
+  continuation of the most recent earlier occurrence of the current
+  suffix n-gram in prompt+generated. Free (no extra model call, no
+  device state) and effective exactly on high-overlap workloads, the
+  regime where speculation pays.
+- ``model``: a small draft model co-resident on device. The draft chain
+  is a K-step ``lax.scan`` of the draft's ``decode_step`` INSIDE the one
+  fused verify step (the one-host-transfer-per-step contract holds);
+  the draft keeps a dense cache mirroring the target's admissions.
+
+Rejected chain positions are logically erased by rolling ``lengths``
+back to the accepted prefix; on paged engines their K/V lands in
+per-step scratch pages (or the trash page under pool pressure) and the
+refs drop straight back to the ``PagePool`` free list — see
+``Engine._attach_scratch_pages`` and the DESIGN.md §12 scratch-page
+contract.
+
+This module is engine-independent: the proposers and the acceptance
+rule live here so the hypothesis property tests can drive them against
+a sequential greedy oracle without an engine in the loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Engine speculation knobs (``Engine(spec=SpecConfig(...))``).
+
+    ``k`` is the draft depth: each step verifies k+1 positions (pending
+    token + k drafts) and emits 1..k+1 tokens. ``draft`` picks the
+    proposer; ``"model"`` additionally needs ``draft_params``/
+    ``draft_cfg`` (an attention-family config sharing the target's
+    vocab). ``ngram_max`` is the longest suffix n-gram the prompt-lookup
+    draft tries to match."""
+
+    k: int = 4
+    draft: str = "ngram"
+    ngram_max: int = 4
+    draft_params: Any = None
+    draft_cfg: Any = None
+
+    def __post_init__(self):
+        assert self.k >= 1, "spec.k must be >= 1"
+        assert self.draft in ("ngram", "model"), self.draft
+        if self.draft == "model":
+            assert self.draft_params is not None \
+                and self.draft_cfg is not None, \
+                "draft='model' needs draft_params + draft_cfg"
+
+
+def propose_ngram(history: Sequence[int], k: int,
+                  max_n: int = 4) -> np.ndarray:
+    """Prompt-lookup draft: find the most recent EARLIER occurrence of
+    the history's suffix n-gram (longest n first, n <= ``max_n``) and
+    propose the k tokens that followed it; fall back to repeating the
+    last token. Pure host numpy — the proposal rides the step's input
+    upload, costing no device work and no extra host transfer."""
+    h = np.asarray(history, dtype=np.int64).reshape(-1)
+    length = int(h.shape[0])
+    if length == 0:
+        return np.zeros((k,), np.int32)
+    # Constant-run fast path: when the trailing max_n+1 tokens are all
+    # equal, the longest-n match lands one position back and its
+    # continuation is the same token repeated — identical to the general
+    # scan below, minus the window sweeps. Greedy decode spends most of
+    # its time inside such runs (attractor behavior), so this is the hot
+    # case for the per-step draft build.
+    if length > max_n and (h[length - max_n - 1:] == h[-1]).all():
+        return np.full((k,), h[-1], np.int32)
+    for n in range(min(max_n, length - 1), 0, -1):
+        pat = h[length - n:]
+        # windows starting at 0..length-1-n: every occurrence strictly
+        # before the suffix itself
+        win = np.lib.stride_tricks.sliding_window_view(h[: length - 1], n)
+        hits = np.nonzero((win == pat).all(axis=1))[0]
+        if hits.size:
+            i = int(hits[-1])  # most recent
+            cont = h[i + n: i + n + k]
+            if cont.size < k:
+                cont = np.concatenate(
+                    [cont, np.full(k - cont.size, h[-1], np.int64)])
+            return cont.astype(np.int32)
+    return np.full((k,), h[-1], np.int32)
+
+
+def chain_accept(greedy: Array, draft: Array, remaining: Array,
+                 lengths0: Array, *, max_len: int,
+                 eos: Optional[int]) -> Tuple[Array, Array, Array]:
+    """Device-side longest-accepted-prefix rule for a depth-K chain.
+
+    ``greedy (B, K+1)`` is the target's argmax at every chain position
+    (position j scores the prefix [pending, d_1..d_j]); ``draft (B, K)``
+    the proposals; ``remaining``/``lengths0`` the PRE-verify budget and
+    committed length. Returns ``(emit (B, K+1) bool, e (B,) int32,
+    done (B,) bool)``: exactly the chain positions a sequential greedy
+    engine would have emitted (draft j+1 accepted iff it equals greedy
+    j, emission stops at the first budget/cache-full/eos hit — the same
+    done predicate as the non-spec fused step, applied per emission),
+    the emission count (always >= 1: position 0 is the target's own
+    token), and whether the LAST emitted token finished the request."""
+    k1 = greedy.shape[1]
+    match = (draft == greedy[:, :-1]).astype(jnp.int32)   # d_{j+1} == g_j
+    acc = jnp.cumprod(match, axis=1).sum(axis=1)          # (B,) in [0, K]
+    j = jnp.arange(k1, dtype=jnp.int32)[None, :]
+    stop = ((remaining[:, None] - (j + 1)) <= 0) \
+        | ((lengths0[:, None] + j + 1) >= (max_len - 1))
+    if eos is not None:
+        stop = stop | (greedy == eos)
+    before = jnp.cumsum(stop.astype(jnp.int32), axis=1) \
+        - stop.astype(jnp.int32)
+    emit = (j <= acc[:, None]) & (before == 0)
+    e = emit.sum(axis=1).astype(jnp.int32)
+    done = (emit & stop).any(axis=1)
+    return emit, e, done
+
+
+def sequential_oracle(draft: Sequence[int], greedy: Sequence[int],
+                      remaining: int, length0: int, max_len: int,
+                      eos: Optional[int] = None
+                      ) -> Tuple[List[int], bool]:
+    """Host reference for :func:`chain_accept`: replay the chain the way
+    the sequential (non-spec) greedy engine would — emit greedy[j] while
+    every earlier draft matched and no earlier emission hit a stop.
+    Returns (emitted tokens, done)."""
+    out: List[int] = []
+    for j, g in enumerate(greedy):
+        if j > 0 and int(draft[j - 1]) != int(greedy[j - 1]):
+            break
+        out.append(int(g))
+        if (remaining - (j + 1) <= 0 or length0 + j + 1 >= max_len - 1
+                or (eos is not None and int(g) == eos)):
+            return out, True
+    return out, False
+
+
+# ---------------------------------------------------------------------------
+# Token trees (the general form; the device path runs width-1 chains)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenTree:
+    """Draft token tree in parent-pointer form. Node i holds
+    ``tokens[i]``; ``parents[i]`` is its parent node (-1 = the committed
+    context root). Nodes are topologically ordered (``parents[i] < i``).
+    A depth-K chain is ``tokens=(d_1..d_K), parents=(-1, 0, .., K-2)``
+    — the shape the engine's batched verify runs today; the acceptance
+    rule below is the general-tree form it is a special case of."""
+
+    tokens: Tuple[int, ...]
+    parents: Tuple[int, ...]
+
+    def __post_init__(self):
+        for i, p in enumerate(self.parents):
+            assert -1 <= p < i, "nodes must be topologically ordered"
+        assert len(self.tokens) == len(self.parents)
+
+    @staticmethod
+    def chain(tokens: Sequence[int]) -> "TokenTree":
+        return TokenTree(tokens=tuple(int(t) for t in tokens),
+                         parents=tuple(range(-1, len(tokens) - 1)))
+
+    def depth(self, i: int) -> int:
+        d = 0
+        while i != -1:
+            d += 1
+            i = self.parents[i]
+        return d
+
+    def path(self, i: int) -> List[int]:
+        out: List[int] = []
+        while i != -1:
+            out.append(i)
+            i = self.parents[i]
+        out.reverse()
+        return out
+
+
+def accept_tree(tree: TokenTree, greedy_root: int,
+                greedy_nodes: Sequence[int]) -> List[int]:
+    """Batched tree acceptance: given the target's next token for the
+    root context (``greedy_root``) and after every node's path
+    (``greedy_nodes[i]`` — what one batched tree-verify call returns),
+    emit the tokens along the DEEPEST fully-accepted path plus the
+    target's bonus token at its tip. A node is accepted iff its parent
+    is and its token equals the target's greedy after the parent's
+    prefix. Depth ties resolve to the lowest node index — the PR 7
+    lowest-index argmax rule lifted to trees (tied paths spell the same
+    token string, so the emitted stream is unambiguous either way)."""
+    n = len(tree.tokens)
+    acc = [False] * n
+    depth = [0] * n
+    best_i, best_d = -1, 0
+    for i in range(n):
+        p = tree.parents[i]
+        g = greedy_root if p == -1 else int(greedy_nodes[p])
+        parent_ok = True if p == -1 else acc[p]
+        acc[i] = parent_ok and int(tree.tokens[i]) == g
+        depth[i] = 1 if p == -1 else depth[p] + 1
+        if acc[i] and depth[i] > best_d:
+            best_i, best_d = i, depth[i]
+    emitted = [int(tree.tokens[i]) for i in tree.path(best_i)]
+    bonus = greedy_root if best_i == -1 else int(greedy_nodes[best_i])
+    return emitted + [bonus]
+
+
+def greedy_continuation(greedy_fn, context: Sequence[int],
+                        depth: int) -> List[int]:
+    """Roll a deterministic next-token function ``greedy_fn(prefix) ->
+    token`` forward ``depth`` tokens from ``context`` — the sequential
+    oracle the tree-accept property test compares against."""
+    prefix = [int(t) for t in context]
+    out: List[int] = []
+    for _ in range(depth):
+        t = int(greedy_fn(tuple(prefix)))
+        out.append(t)
+        prefix.append(t)
+    return out

@@ -1,0 +1,396 @@
+"""Speculative decoding (DESIGN.md §12).
+
+Contracts under test:
+
+- **Greedy equivalence (the tentpole)**: spec-on token streams are
+  bitwise identical to the non-spec fused engine's streams across the
+  qwen3 (attention), MLA, and MoE+MLA families, dense AND paged —
+  speculation changes step counts, never tokens.
+- **Acceptance rule**: ``chain_accept`` (device) equals the host
+  ``sequential_oracle`` on random chains; ``accept_tree`` equals a
+  sequential greedy roll-out on random trees, including bf16-tie
+  greedy functions under the lowest-index argmax rule (hypothesis).
+- **Self-draft sanity**: a model draft that IS the target accepts every
+  chain (acceptance exactly 1.0) and reproduces the stream.
+- **Pool conservation**: per-step scratch-page churn (alloc + release
+  every decode step) never leaks or double-frees pages.
+- **Wear-aware admission**: ``AdmissionCost(wear_weight=...)`` adds the
+  endurance surcharge; the default weight keeps scores bit-identical.
+- **Autotune rows keys**: rows-qualified lookups hit exactly, fall back
+  to the legacy key, then to the nearest persisted shape.
+- **Spec-aware latency accounting**: a multi-token emission books one
+  ITL observation per emitted token (and TTFT once), not one per step.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dependency (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.configs.base import MLAConfig
+from repro.kernels import autotune
+from repro.models import model as M
+from repro.serve.engine import Engine
+from repro.serve.request import Request
+from repro.serve.spec import (SpecConfig, TokenTree, accept_tree,
+                              chain_accept, greedy_continuation,
+                              propose_ngram, sequential_oracle)
+
+
+def small_cfg(arch="qwen3-0.6b", **over):
+    cfg = reduced_for_smoke(get_config(arch))
+    over = {"quant": "none", "n_layers": 2, **over}
+    return dataclasses.replace(cfg, **over)
+
+
+def _family_cfg(family):
+    if family == "qwen3":
+        return small_cfg()
+    if family == "mla":
+        return small_cfg(mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                       qk_nope_head_dim=16,
+                                       qk_rope_head_dim=8, v_head_dim=16))
+    assert family == "moe-mla"
+    return dataclasses.replace(reduced_for_smoke(
+        get_config("deepseek-v3-671b")), quant="none", n_layers=2)
+
+
+_params_cache = {}
+
+
+def _family(family):
+    if family not in _params_cache:
+        cfg = _family_cfg(family)
+        _params_cache[family] = (cfg, M.init(cfg, jax.random.PRNGKey(0)))
+    return _params_cache[family]
+
+
+def _motif_requests(cfg, n=3, seed=3, max_new=10):
+    """Motif-tiled prompts: repetitive structure the ngram draft can
+    extend, so acceptance (not just parity) is exercised."""
+    rng = np.random.default_rng(seed)
+    motif = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    out = []
+    for uid in range(n):
+        p = np.concatenate([np.tile(motif, 3 + uid % 2),
+                            rng.integers(0, cfg.vocab_size,
+                                         2).astype(np.int32)])
+        out.append(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+    return out
+
+
+def _drain(params, cfg, reqs, **kw):
+    eng = Engine(params, cfg, slots=2, max_len=64, **kw)
+    for r in reqs:
+        eng.submit(dataclasses.replace(r, generated=[],
+                                       prompt=r.prompt.copy()))
+    done = {f.uid: [int(t) for t in f.tokens]
+            for f in eng.run_until_drained()}
+    return eng, done
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: greedy equivalence across families, dense and paged.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["qwen3", "mla", "moe-mla"])
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_stream_bitwise_matches_nonspec(family, paged):
+    cfg, params = _family(family)
+    reqs = _motif_requests(cfg)
+    _, base = _drain(params, cfg, reqs)
+    kw = {"spec": SpecConfig(k=4)}
+    if paged:
+        kw.update(paged=True, page_size=8)
+    eng, got = _drain(params, cfg, reqs, **kw)
+    assert got == base
+    st_ = eng.stats()
+    assert st_["spec_proposed"] > 0
+    # fewer verify launches than non-spec decode steps would have taken
+    assert st_["spec_tokens_per_step"] > 1.0
+    if paged:
+        assert eng.pool.conserved()
+
+
+def test_spec_requires_greedy_requests():
+    cfg, params = _family("qwen3")
+    eng = Engine(params, cfg, slots=2, max_len=64, spec=SpecConfig(k=2))
+    with pytest.raises(AssertionError):
+        eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2, temperature=0.7))
+
+
+def test_self_draft_accepts_every_chain():
+    """A draft that IS the target predicts exactly what the verify
+    accepts: acceptance 1.0 (max_new chosen so no chain is truncated by
+    the budget) and a bitwise-identical stream."""
+    cfg, params = _family("mla")
+    reqs = _motif_requests(cfg, max_new=13)  # 12 decoded = 3 chains of 4
+    _, base = _drain(params, cfg, reqs)
+    eng, got = _drain(params, cfg, reqs,
+                      spec=SpecConfig(k=3, draft="model",
+                                      draft_params=params, draft_cfg=cfg))
+    assert got == base
+    assert eng.stats()["spec_accept_rate"] == 1.0
+
+
+def test_spec_scratch_page_churn_conserves_pool():
+    """max_new=2 with k=4: every decode step's verify extent overhangs
+    the admission reservation, forcing scratch alloc + release on every
+    step. The pool must stay conserved throughout and afterwards."""
+    cfg, params = _family("qwen3")
+    eng = Engine(params, cfg, slots=2, max_len=64, paged=True, page_size=8,
+                 spec=SpecConfig(k=4))
+    for r in _motif_requests(cfg, n=5, max_new=2):
+        eng.submit(r)
+    while eng.active or eng.queue:
+        eng.step()
+        assert eng.pool.conserved()
+    assert eng.pool.conserved()
+    assert eng.stats()["spec_proposed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rule vs sequential oracle.
+# ---------------------------------------------------------------------------
+
+
+def test_chain_accept_basic_cases():
+    import jax.numpy as jnp
+
+    greedy = jnp.asarray([[5, 6, 7], [5, 6, 7], [5, 6, 7]], jnp.int32)
+    draft = jnp.asarray([[5, 6], [5, 9], [9, 6]], jnp.int32)
+    remaining = jnp.asarray([10, 10, 10], jnp.int32)
+    lengths0 = jnp.asarray([4, 4, 4], jnp.int32)
+    emit, e, done = chain_accept(greedy, draft, remaining, lengths0,
+                                 max_len=64, eos=None)
+    np.testing.assert_array_equal(np.asarray(e), [3, 2, 1])
+    assert not bool(np.asarray(done).any())
+    # budget stop: remaining=2 caps emission at 2 and finishes
+    emit, e, done = chain_accept(greedy, draft,
+                                 jnp.asarray([2, 2, 2], jnp.int32),
+                                 lengths0, max_len=64, eos=None)
+    np.testing.assert_array_equal(np.asarray(e), [2, 2, 1])
+    np.testing.assert_array_equal(np.asarray(done), [True, True, False])
+    # eos mid-chain stops emission at the eos token
+    emit, e, done = chain_accept(greedy, draft, remaining, lengths0,
+                                 max_len=64, eos=6)
+    np.testing.assert_array_equal(np.asarray(e), [2, 2, 1])
+    np.testing.assert_array_equal(np.asarray(done), [True, True, False])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_chain_accept_matches_sequential_oracle(data):
+    import jax.numpy as jnp
+
+    k = data.draw(st.integers(1, 5), label="k")
+    b = data.draw(st.integers(1, 4), label="batch")
+    vocab = 7  # tiny vocab: matches and eos hits are common
+    greedy = data.draw(st.lists(
+        st.lists(st.integers(0, vocab - 1), min_size=k + 1, max_size=k + 1),
+        min_size=b, max_size=b), label="greedy")
+    draft = data.draw(st.lists(
+        st.lists(st.integers(0, vocab - 1), min_size=k, max_size=k),
+        min_size=b, max_size=b), label="draft")
+    remaining = data.draw(st.lists(st.integers(1, 2 * k + 2),
+                                   min_size=b, max_size=b),
+                          label="remaining")
+    max_len = 32
+    lengths0 = data.draw(st.lists(st.integers(1, max_len - 2),
+                                  min_size=b, max_size=b), label="lengths0")
+    eos = data.draw(st.sampled_from([None, 0, 3]), label="eos")
+
+    emit, e, done = chain_accept(
+        jnp.asarray(greedy, jnp.int32), jnp.asarray(draft, jnp.int32),
+        jnp.asarray(remaining, jnp.int32), jnp.asarray(lengths0, jnp.int32),
+        max_len=max_len, eos=eos)
+    emit, e, done = np.asarray(emit), np.asarray(e), np.asarray(done)
+    for r in range(b):
+        toks, odone = sequential_oracle(draft[r], greedy[r], remaining[r],
+                                        lengths0[r], max_len, eos=eos)
+        assert e[r] == len(toks)
+        assert bool(done[r]) == odone
+        # emit mask selects exactly the emitted prefix columns
+        np.testing.assert_array_equal(
+            np.nonzero(emit[r])[0], np.arange(len(toks)))
+        np.testing.assert_array_equal(
+            np.asarray(greedy[r])[emit[r]], toks)
+
+
+def _bf16_greedy_fn(seed, vocab=8, ctx=3):
+    """Deterministic next-token function from bf16-rounded logits with
+    the lowest-index argmax rule. bf16's coarse grid makes exact ties
+    common, which is precisely the regime the rule exists for."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+
+    def fn(prefix):
+        key = tuple(prefix[-ctx:])
+        r = np.random.default_rng(
+            [seed, len(prefix) % 5, *[t % vocab for t in key]])
+        logits = np.asarray(
+            jnp.asarray(r.standard_normal(vocab).round(1),
+                        jnp.bfloat16).astype(jnp.float32))
+        return int(np.argmax(logits))  # np.argmax: lowest index on ties
+
+    del rng
+    return fn
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_tree_accept_matches_greedy_oracle(data):
+    vocab = 8
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    context = data.draw(st.lists(st.integers(0, vocab - 1), min_size=1,
+                                 max_size=6), label="context")
+    n = data.draw(st.integers(1, 7), label="nodes")
+    parents = [data.draw(st.integers(-1, i - 1), label=f"parent{i}")
+               for i in range(n)]
+    tokens = data.draw(st.lists(st.integers(0, vocab - 1), min_size=n,
+                                max_size=n), label="tokens")
+    greedy_fn = _bf16_greedy_fn(seed, vocab=vocab)
+
+    tree = TokenTree(tokens=tuple(tokens), parents=tuple(parents))
+    greedy_root = greedy_fn(tuple(context))
+    greedy_nodes = [greedy_fn(tuple(context
+                                    + [tree.tokens[j]
+                                       for j in tree.path(i)]))
+                    for i in range(n)]
+    emitted = accept_tree(tree, greedy_root, greedy_nodes)
+
+    # Oracle: the sequential greedy roll-out. Every emitted token must
+    # be exactly what sequential greedy decoding would produce.
+    oracle = greedy_continuation(greedy_fn, context, len(emitted))
+    assert emitted == oracle
+    # Maximality: no tree path extends the acceptance deeper. A path of
+    # depth d is fully accepted iff its tokens equal oracle[:d]; the
+    # emission is that depth + 1 (bonus), so the best depth must be
+    # len(emitted) - 1.
+    best = max((len(tree.path(i)) for i in range(n)
+                if [tree.tokens[j] for j in tree.path(i)]
+                == greedy_continuation(greedy_fn, context,
+                                       len(tree.path(i)))), default=0)
+    assert len(emitted) == best + 1
+
+
+def test_accept_tree_chain_equals_chain_accept():
+    """On width-1 chains the tree rule IS the chain rule (no stops)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        k = int(rng.integers(1, 6))
+        greedy = rng.integers(0, 6, k + 1).tolist()
+        draft = rng.integers(0, 6, k).tolist()
+        tree = TokenTree.chain(draft)
+        emitted = accept_tree(tree, greedy[0], greedy[1:])
+        _, e, _ = chain_accept(
+            jnp.asarray([greedy], jnp.int32), jnp.asarray([draft], jnp.int32),
+            jnp.asarray([100], jnp.int32), jnp.asarray([1], jnp.int32),
+            max_len=1000, eos=None)
+        assert len(emitted) == int(np.asarray(e)[0])
+        assert emitted == greedy[: len(emitted)]
+
+
+def test_propose_ngram_prompt_lookup():
+    # suffix [7 8] occurred earlier; most recent continuation is proposed
+    hist = [1, 2, 7, 8, 5, 6, 7, 8, 9, 3, 7, 8]
+    np.testing.assert_array_equal(propose_ngram(hist, 3), [9, 3, 7])
+    # no earlier occurrence: repeat the last token
+    np.testing.assert_array_equal(propose_ngram([1, 2, 3], 2), [3, 3])
+    # empty history
+    np.testing.assert_array_equal(propose_ngram([], 2), [0, 0])
+    # continuation shorter than k: padded with the last history token
+    np.testing.assert_array_equal(propose_ngram([4, 5, 4], 3, max_n=1),
+                                  [5, 4, 4])
+
+
+# ---------------------------------------------------------------------------
+# Satellites: wear-aware admission, autotune rows keys, ITL accounting.
+# ---------------------------------------------------------------------------
+
+
+def test_admission_cost_wear_surcharge():
+    from repro.hw.schedule import AdmissionCost
+
+    base = AdmissionCost(token_pj=2.0, decode_token_pj=1.0)
+    worn = AdmissionCost(token_pj=2.0, decode_token_pj=1.0,
+                         wear_weight=10.0, endurance=lambda: 0.25)
+    zero = AdmissionCost(token_pj=2.0, decode_token_pj=1.0,
+                         wear_weight=10.0, endurance=lambda: 0.0)
+    s0 = base.request_score(8, 4)
+    assert s0 == 8 * 2.0 + 4 * 1.0
+    # default weight / zero endurance: bit-identical to the unweighted
+    assert AdmissionCost(token_pj=2.0, decode_token_pj=1.0,
+                         endurance=lambda: 0.9).request_score(8, 4) == s0
+    assert zero.request_score(8, 4) == s0
+    assert worn.request_score(8, 4) == pytest.approx(
+        s0 + 10.0 * 0.25 * (8 + 4) * 2.0)
+    # the surcharge deprioritizes token-hungry requests MORE as wear grows
+    assert (worn.request_score(64, 64) - base.request_score(64, 64)
+            > worn.request_score(2, 2) - base.request_score(2, 2))
+
+
+def test_autotune_rows_keys_and_nearest_fallback():
+    autotune.clear_memo()
+    try:
+        autotune._persisted = {"p16_h16_d64": 2, "p16_h16_d64_r20": 4,
+                               "p8_h4_d32": 8}
+        # exact rows-qualified hit
+        assert autotune.best_n_splits(16, 16, 64, rows=20) == 4
+        # rows-qualified miss falls back to the legacy rows-agnostic key
+        assert autotune.best_n_splits(16, 16, 64, rows=4) == 2
+        assert autotune.best_n_splits(16, 16, 64) == 2
+        # unknown shape borrows the nearest persisted one, not default 1
+        assert autotune.best_n_splits(8, 4, 32) == 8
+        assert autotune.best_n_splits(8, 4, 32, rows=999) == 8
+        # rows distance picks the closer rows-qualified entry
+        autotune._persisted["p16_h16_d64_r640"] = 1
+        autotune.clear_memo()
+        autotune._persisted = {"p16_h16_d64_r20": 4,
+                               "p16_h16_d64_r640": 1}
+        assert autotune.best_n_splits(16, 16, 64, rows=16) == 4
+        assert autotune.best_n_splits(16, 16, 64, rows=512) == 1
+    finally:
+        autotune.clear_memo()
+    # empty cache: heuristic default, memoized
+    assert autotune.best_n_splits(3, 5, 7, rows=11) >= 1
+
+
+def test_shape_key_roundtrip():
+    assert autotune.shape_key(16, 8, 64) == "p16_h8_d64"
+    assert autotune.shape_key(16, 8, 64, rows=20) == "p16_h8_d64_r20"
+    assert autotune._parse_key("p16_h8_d64") == (16, 8, 64, None)
+    assert autotune._parse_key("p16_h8_d64_r20") == (16, 8, 64, 20)
+    assert autotune._parse_key("bogus") is None
+
+
+def test_append_tokens_books_itl_per_emitted_token():
+    """One spec step emitting N tokens books N ITL observations (or
+    TTFT + N-1 on the first emission), so spec-on latency histograms
+    stay comparable with spec-off ones."""
+    cfg, params = _family("qwen3")
+    eng = Engine(params, cfg, slots=1, max_len=64)
+    req = Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=12)
+    req.submit_t = 100.0
+    itl = eng.metrics.get("serve_itl_s")
+    ttft = eng.metrics.get("serve_ttft_s")
+    eng._append_tokens(req, [3, 4, 5], now=101.0)
+    assert ttft.count == 1 and ttft.max == pytest.approx(1.0)
+    assert itl.count == 2 and itl.nonpos_count == 2  # same-step: gap 0
+    eng._append_tokens(req, [6, 7], now=103.0)
+    assert itl.count == 4
+    assert itl.sum == pytest.approx(2.0)  # 2s gap split over 2 tokens
+    assert req.generated == [3, 4, 5, 6, 7]
+    assert req.last_token_t == 103.0
