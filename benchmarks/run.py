@@ -57,6 +57,8 @@ SUMMARY_KEYS = (
     "serve/chunked_tok_per_s_ratio",
     "serve/bursty_chunked_ttft_p95_s",
     "serve/obs_overhead_x",
+    "serve/health_overhead_x",
+    "serve/wear_parity",
     "serve/spec_speedup_x",
     "serve/spec_accept_rate",
     "serve/spec_pj_per_accepted_ratio",
@@ -74,6 +76,8 @@ CHECK_BANDS = {
     # "lower" keys gate a COST ratio: the absolute value is a ceiling
     # (tracing must stay within 5% of the untraced arm's tok/s).
     "serve/obs_overhead_x": ("lower", 0.5, 1.05),
+    # Same contract for the streaming health monitor (DESIGN §13).
+    "serve/health_overhead_x": ("lower", 0.5, 1.05),
     "serve/fused_paged_speedup_x": ("higher", 0.25, 1.3),
     # The stall-kill ratio is structurally ~10x but its magnitude is the
     # big-wave/chunk-step wall ratio, which moves with the host — a wide

@@ -579,6 +579,68 @@ def run(report) -> None:
            "traced / untraced wall, interleaved best-of-3 drains on the "
            "bursty chunked arm (1.0 = tracing is free; gated <= 1.05)")
 
+    # -- health-monitor overhead (DESIGN §13): the same bursty chunked
+    # arm with a streaming HealthMonitor + the default SLO pair attached.
+    # The detectors ride the engine's own step hook, so the contract is
+    # the same as tracing: bit-identical tokens, wall gated <= 1.05x by
+    # benchmarks/run.py --check, measured with the same interleaved
+    # best-of-3 protocol (see the obs arm's comment on burst credits).
+    from repro.obs.health import HealthMonitor, default_serve_slos
+
+    bhealth = _bursty_drain(lambda: Engine(bparams, bcfg, slots=SLOTS,
+                                           max_len=BURSTY_MAX_LEN,
+                                           chunk_tokens=BURSTY_CHUNK,
+                                           health=HealthMonitor(),
+                                           slos=default_serve_slos()),
+                            breqs)
+    assert bhealth["tokens"] == bchunk["tokens"], \
+        "health monitoring changed the chunked token streams"
+    t_plain_h, t_health = [], []
+    for rep in (6000, 7000, 8000):
+        d_plain = _bursty_one(bchunk["_eng"], breqs, rep)
+        d_health = _bursty_one(bhealth["_eng"], breqs, rep + 500)
+        assert d_plain["tokens"] == bchunk["tokens"], \
+            "unmonitored re-drain diverged from the chunked token streams"
+        assert d_health["tokens"] == bchunk["tokens"], \
+            "health re-drain diverged from the chunked token streams"
+        t_plain_h.append(d_plain["wall_s"])
+        t_health.append(d_health["wall_s"])
+    health_overhead = min(t_health) / max(min(t_plain_h), 1e-9)
+    report("serve/health_overhead_x", health_overhead,
+           "health-monitored / plain wall, interleaved best-of-3 drains "
+           "on the bursty chunked arm (1.0 = free; gated <= 1.05)")
+
+    # -- wear-aware admission parity (DESIGN §13 satellite): cost-policy
+    # engines with the wear surcharge off (weight 0.0 must be
+    # bit-identical to no wear wiring at all — the default keeps scores
+    # untouched) and on (weight 4.0 re-prices admission but greedy
+    # per-request streams cannot change: tokens depend on the prompt,
+    # not arrival order).
+    bcost = _bursty_one(Engine(bparams, bcfg, slots=SLOTS,
+                               max_len=BURSTY_MAX_LEN,
+                               chunk_tokens=BURSTY_CHUNK, sched="cost"),
+                        breqs, 0)
+    bwear0 = _bursty_one(Engine(bparams, bcfg, slots=SLOTS,
+                                max_len=BURSTY_MAX_LEN,
+                                chunk_tokens=BURSTY_CHUNK, sched="cost",
+                                wear_weight=0.0,
+                                wear_endurance=lambda: 0.5),
+                         breqs, 0)
+    bwear = _bursty_one(Engine(bparams, bcfg, slots=SLOTS,
+                               max_len=BURSTY_MAX_LEN,
+                               chunk_tokens=BURSTY_CHUNK, sched="cost",
+                               wear_weight=4.0,
+                               wear_endurance=lambda: 0.5),
+                        breqs, 0)
+    assert bwear0["tokens"] == bcost["tokens"], \
+        "wear_weight=0.0 changed the cost-policy token streams"
+    assert bwear["tokens"] == bcost["tokens"], \
+        "wear surcharge changed a request's greedy tokens (it may only " \
+        "re-order admission)"
+    report("serve/wear_parity", 1.0,
+           "cost-policy token streams invariant under wear-aware "
+           "admission (weight 0 bit-identical; weight 4 per-uid parity)")
+
     # -- speculative decoding scenario (DESIGN §12): fused paged engine,
     # spec-off vs spec-on (ngram draft, K=SPEC_K) on decode-heavy
     # motif-tiled traffic. Contracts gated here and re-checked by
@@ -728,6 +790,8 @@ def run(report) -> None:
         "bursty_chunked": {k: v for k, v in bchunk.items()
                            if k not in ("tokens", "_eng")},
         "bursty_traced": {k: v for k, v in btrace.items()
+                          if k not in ("tokens", "_eng")},
+        "bursty_health": {k: v for k, v in bhealth.items()
                           if k not in ("tokens", "_eng")},
         "spec_off": {"tok_per_s": spec_off_tps,
                      "walls_s": s_walls["off"],

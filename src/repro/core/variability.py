@@ -63,6 +63,20 @@ def run_monte_carlo(
     return MonteCarloResult(sigmas=list(sigmas), mean=means, std=stds)
 
 
+def endurance_spread(n: int, sigma: float, key: Array | None = None,
+                     floor: float = 0.01) -> Array:
+    """Per-device endurance multipliers: ``ENDURANCE_WRITES`` scaled by
+    the paper's parametric device-to-device spread, floored so a tail
+    sample can't project a dead-on-arrival tile. Feeds the fleet
+    time-to-first-tile-death projection (`launch/hw_report.py
+    --fleet-health`): the worst tile dies at ``min(multipliers)`` of the
+    nominal write budget."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    ones = jnp.ones((int(n),), jnp.float32)
+    return jnp.maximum(perturb(ones, sigma, key), floor)
+
+
 def dot_product_error_metric(x: Array, w: Array, cfg: TFConfig):
     """Relative L2 error of noisy TimeFloats matmul vs. clean TimeFloats."""
     clean = timefloats.matmul_exact(x, w, cfg)

@@ -116,6 +116,22 @@ class Placement:
             out[lp.rule] = out.get(lp.rule, 0) + lp.tiles(self.geometry)
         return out
 
+    def tile_spans(self) -> Tuple[Tuple[str, int, int], ...]:
+        """Physical tile-id ranges per leaf, in leaf order: (key, start,
+        stop). Leaf ``i`` owns the contiguous id run ``[start, stop)`` with
+        ``stop - start == leaves[i].tiles(geometry)``, and the final
+        ``stop`` equals ``self.tiles`` — ids cover the inventory exactly
+        once (pinned by tests/test_hw.py). The per-tile wear books
+        (`hw.schedule.TileWearBook`) key on these ids, so "tile 0" always
+        means the same physical array for a given placement."""
+        spans: List[Tuple[str, int, int]] = []
+        start = 0
+        for lp in self.leaves:
+            n = lp.tiles(self.geometry)
+            spans.append((lp.key, start, start + n))
+            start += n
+        return tuple(spans)
+
 
 def _mapped_shape(shape: tuple, rule: str) -> Tuple[int, int, int]:
     """(rows, cols, copies-from-rule) of one leaf under its reshape rule.

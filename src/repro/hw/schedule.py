@@ -30,6 +30,7 @@ import dataclasses
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.core import timefloats
 from repro.hw import energy as hw_energy
@@ -158,6 +159,132 @@ def schedule_step(placement: Placement, events, *,
 
 
 # ---------------------------------------------------------------------------
+# Per-tile wear books (DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+
+class TileWearBook:
+    """Per-tile write/read accounting keyed by the mapper's physical tile
+    ids (`Placement.tile_spans()` — leaf ``i`` owns ids ``[start, stop)``).
+
+    Two vectors over the full tile inventory:
+
+    - ``writes`` (int64) — full-array program operations per tile. The
+      in-situ dW update rewrites every placed cell each optimizer step, so
+      training bumps every tile by exactly 1 per step; the scalar
+      ``HwMonitor.writes_per_tile`` stays pinned to ``writes.max()``
+      (exact under uniform traffic — the wear-leveling remap PR is what
+      will make the vector diverge from the scalar).
+    - ``reads`` (float64) — crossbar read *chunks* per tile. Serving books
+      one forward pass per executed token via the analytic per-token
+      census (`per_token_forward_cost` leaf logic), spread evenly over
+      each leaf's tiles; MoE expert stacks count only the routed top_k
+      copies when a ``cfg`` is given. Training reads (no per-leaf census
+      attribution survives the backward expansion) spread uniformly.
+
+    Conservation invariant (CI-pinned by tests/test_hw.py): under uniform
+    training traffic ``writes.sum() * cells_written_per_update ==
+    hw_cum_cell_writes * n_tiles`` exactly, in integers.
+    """
+
+    def __init__(self, placement: Placement, cfg: Optional[Any] = None):
+        self.placement = placement
+        self.spans = placement.tile_spans()
+        self.n_tiles = placement.tiles
+        self.writes = np.zeros(self.n_tiles, dtype=np.int64)
+        self.reads = np.zeros(self.n_tiles, dtype=np.float64)
+        # Read-chunks-for-ONE-token vector: per_token_forward_cost's
+        # per-leaf accounting, spread evenly over the leaf's physical
+        # tiles (duplication exists for read bandwidth, so duplicated
+        # copies genuinely share the read traffic).
+        top_k = num_experts = None
+        if cfg is not None and getattr(cfg, "moe", None) is not None:
+            top_k, num_experts = cfg.moe.top_k, cfg.moe.num_experts
+        geom = placement.geometry
+        self._token_read = np.zeros(self.n_tiles, dtype=np.float64)
+        for (key, start, stop), lp in zip(self.spans, placement.leaves):
+            copies = lp.copies
+            if lp.rule == "expert" and top_k is not None:
+                copies = max(copies // num_experts, 1) * top_k
+            chunks = hw_energy.matmul_chunks(
+                1, lp.rows, lp.cols, geom.rows) * copies
+            if stop > start:
+                self._token_read[start:stop] = chunks / (stop - start)
+
+    # -- write side (training) --------------------------------------------
+    def on_train_step(self, n: int = 1) -> None:
+        """One in-situ update programs every placed tile once."""
+        if self.n_tiles:
+            self.writes += int(n)
+
+    def resume_at(self, step: int) -> None:
+        """Fast-forward to an absolute step count (checkpoint restore):
+        every tile was programmed once per step before this process, so
+        the whole vector floors at ``step`` — elementwise max keeps any
+        wear already booked above it (project-then-step == step-then-step,
+        regression-pinned)."""
+        if self.n_tiles:
+            np.maximum(self.writes, int(step), out=self.writes)
+
+    # -- read side (serving + training) -----------------------------------
+    def add_token_reads(self, tokens: int) -> None:
+        """Book ``tokens`` forward passes through every placed leaf at the
+        analytic per-token census (serve attribution: prefill/decode)."""
+        if self.n_tiles and tokens:
+            self.reads += float(tokens) * self._token_read
+
+    def add_read_chunks(self, chunks: float) -> None:
+        """Book ``chunks`` read chunks spread uniformly (train census
+        reads — fwd+bwd, no per-leaf attribution)."""
+        if self.n_tiles and chunks:
+            self.reads += float(chunks) / self.n_tiles
+
+    # -- views ------------------------------------------------------------
+    @property
+    def writes_max(self) -> int:
+        return int(self.writes.max()) if self.n_tiles else 0
+
+    @property
+    def writes_sum(self) -> int:
+        return int(self.writes.sum()) if self.n_tiles else 0
+
+    @property
+    def reads_max(self) -> float:
+        return float(self.reads.max()) if self.n_tiles else 0.0
+
+    @property
+    def reads_sum(self) -> float:
+        return float(self.reads.sum()) if self.n_tiles else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "tiles_tracked": float(self.n_tiles),
+            "tile_writes_max": float(self.writes_max),
+            "tile_writes_sum": float(self.writes_sum),
+            "tile_reads_max": self.reads_max,
+            "tile_reads_sum": self.reads_sum,
+            "max_tile_endurance_frac": (self.writes_max
+                                        / hw_energy.ENDURANCE_WRITES),
+        }
+
+    def export_gauges(self, registry, prefix: str = "hw_tile") -> None:
+        """Labeled per-leaf gauges into an `obs.metrics.MetricsRegistry`:
+        ``{prefix}_writes_max{leaf=...}`` / ``{prefix}_read_chunks{leaf=...}``
+        plus unlabeled inventory totals."""
+        registry.gauge(f"{prefix}s_tracked").set(float(self.n_tiles))
+        registry.gauge(f"{prefix}_writes_max").set(float(self.writes_max))
+        registry.gauge(f"{prefix}_writes_sum").set(float(self.writes_sum))
+        registry.gauge(f"{prefix}_read_chunks_sum").set(self.reads_sum)
+        for key, start, stop in self.spans:
+            if stop <= start:
+                continue
+            registry.gauge(f"{prefix}_writes_max", leaf=key).set(
+                float(self.writes[start:stop].max()))
+            registry.gauge(f"{prefix}_read_chunks", leaf=key).set(
+                float(self.reads[start:stop].sum()))
+
+
+# ---------------------------------------------------------------------------
 # Trainer telemetry.
 # ---------------------------------------------------------------------------
 
@@ -175,9 +302,12 @@ class HwMonitor:
         self.placement = placement
         self.step_schedule = schedule_step(placement, events, train=True)
         self.steps = 0
-        # Per-tile write counter: the in-situ update rewrites every placed
-        # cell each step, so every tile takes exactly one full-array write
-        # per step (uniform aging — the twin has no wear-leveling to model).
+        # Per-tile wear book (DESIGN.md §13). The in-situ update rewrites
+        # every placed cell each step, so under the twin's uniform traffic
+        # the scalar fallback stays exactly the vector's max (one write
+        # per tile per step); the vector is what the wear-leveling remap
+        # will eventually skew.
+        self.wear = TileWearBook(placement)
         self.writes_per_tile = 0
 
     @classmethod
@@ -200,13 +330,23 @@ class HwMonitor:
         """Fast-forward the wear/energy books to an absolute step count —
         called by the training loop after a checkpoint restore, so the
         cumulative writes/endurance reflect every step the modeled arrays
-        were actually programmed, not just this process's."""
+        were actually programmed, not just this process's. Both sides of
+        the wear book advance: writes floor elementwise at ``step``, and
+        the skipped steps' census read chunks are booked uniformly, so
+        project-then-step equals step-then-step (regression-pinned by
+        tests/test_hw.py; reads agree to float rounding)."""
+        delta = max(int(step) - self.steps, 0)
         self.steps = max(self.steps, int(step))
-        self.writes_per_tile = max(self.writes_per_tile, int(step))
+        self.wear.resume_at(step)
+        if delta:
+            self.wear.add_read_chunks(self.step_schedule.read.chunks * delta)
+        self.writes_per_tile = self.wear.writes_max
 
     def on_step(self) -> Dict[str, float]:
         self.steps += 1
-        self.writes_per_tile += 1
+        self.wear.on_train_step()
+        self.wear.add_read_chunks(self.step_schedule.read.chunks)
+        self.writes_per_tile = self.wear.writes_max
         s = self.step_schedule
         return {
             "hw_step_energy_uj": s.energy_pj * 1e-6,
@@ -217,6 +357,10 @@ class HwMonitor:
             "hw_writes_per_tile": float(self.writes_per_tile),
             "hw_endurance_frac": (self.writes_per_tile
                                   / hw_energy.ENDURANCE_WRITES),
+            "hw_tile_writes_max": float(self.wear.writes_max),
+            "hw_tile_writes_sum": float(self.wear.writes_sum),
+            "hw_max_tile_endurance_frac": (self.wear.writes_max
+                                           / hw_energy.ENDURANCE_WRITES),
             "hw_tops_per_watt": s.read.hardware_tops_per_watt,
         }
 
@@ -233,7 +377,17 @@ class HwMonitor:
             "endurance_frac": (self.writes_per_tile
                                / hw_energy.ENDURANCE_WRITES),
             "step_latency_us_lower_bound": s.latency_ns * 1e-3,
+            "tile_writes_max": float(self.wear.writes_max),
+            "tile_writes_sum": float(self.wear.writes_sum),
+            "tile_reads_sum": self.wear.reads_sum,
+            "tiles_tracked": float(self.wear.n_tiles),
         }
+
+    def export_gauges(self, registry) -> None:
+        """Per-tile wear gauges into an `obs.metrics.MetricsRegistry`."""
+        self.wear.export_gauges(registry)
+        registry.gauge("hw_endurance_frac").set(
+            self.writes_per_tile / hw_energy.ENDURANCE_WRITES)
 
 
 # ---------------------------------------------------------------------------
@@ -270,8 +424,15 @@ class ServeEnergyModel:
       length (`prefill_pj` + `on_prefill`), fully attributed.
     """
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int, wear: Optional[TileWearBook] = None):
         self.slots = slots
+        # Optional per-tile wear book (DESIGN.md §13): when present, every
+        # booking method's ``tokens=`` count (PADDED/executed positions,
+        # like total_pj — not the attributed share) lands per-tile read
+        # chunks via the analytic per-token census.
+        self.wear = wear
+        self.prefill_read_tokens = 0
+        self.decode_read_tokens = 0
         self.decode_step_pj: Optional[float] = None   # full-batch decode
         self._prefill_pj: Dict[Any, float] = {}       # shape key -> pJ
         self.attributed_pj = 0.0
@@ -325,10 +486,21 @@ class ServeEnergyModel:
     def decode_pj_per_slot(self) -> float:
         return (self.decode_step_pj or 0.0) / self.slots
 
-    def on_prefill(self, pj: float) -> float:
+    def _book_reads(self, tokens: int, *, decode: bool) -> None:
+        if not tokens:
+            return
+        if decode:
+            self.decode_read_tokens += int(tokens)
+        else:
+            self.prefill_read_tokens += int(tokens)
+        if self.wear is not None:
+            self.wear.add_token_reads(int(tokens))
+
+    def on_prefill(self, pj: float, tokens: int = 0) -> float:
         self.attributed_pj += pj
         self.prefill_attributed_pj += pj
         self.total_pj += pj
+        self._book_reads(tokens, decode=False)
         return pj
 
     def on_prefix_hit(self, saved_pj: float, tokens: int) -> None:
@@ -340,7 +512,8 @@ class ServeEnergyModel:
         self.prefix_tokens_saved += int(tokens)
         self.prefix_saved_pj += saved_pj
 
-    def on_prefill_wave(self, pj_total: float, n_real: int) -> float:
+    def on_prefill_wave(self, pj_total: float, n_real: int,
+                        tokens: int = 0) -> float:
         """Book one padded batched prefill (`pj_total` covers all `slots`
         rows at the bucket length); returns the per-request row share
         (bucket padding included — see the class docstring). The census
@@ -351,9 +524,10 @@ class ServeEnergyModel:
         share = pj_total / max(self.slots, 1)
         self.attributed_pj += share * n_real
         self.prefill_attributed_pj += share * n_real
+        self._book_reads(tokens, decode=False)
         return share
 
-    def on_decode_step(self, active_slots: int) -> float:
+    def on_decode_step(self, active_slots: int, tokens: int = 0) -> float:
         """Book one full-batch decode; returns the per-active-slot share.
 
         The decode accumulators add ``share * active_slots`` in booking
@@ -367,10 +541,11 @@ class ServeEnergyModel:
         share = self.decode_pj_per_slot
         self.attributed_pj += share * active_slots
         self.decode_attributed_pj += share * active_slots
+        self._book_reads(tokens, decode=True)
         return share
 
-    def on_spec_step(self, active_slots: int, emitted: int, chain: int
-                     ) -> Tuple[float, float, float, float]:
+    def on_spec_step(self, active_slots: int, emitted: int, chain: int,
+                     tokens: int = 0) -> Tuple[float, float, float, float]:
         """Book one fused verify step of a speculative engine
         (DESIGN.md §12): the batched call runs ``chain`` (= K+1) positions
         for all ``slots`` rows, so the per-position cost is
@@ -398,9 +573,22 @@ class ServeEnergyModel:
         self.spec_rejected_pj += rej
         self.spec_accepted_tokens += int(emitted)
         self.spec_rejected_tokens += int(rejected)
+        self._book_reads(tokens, decode=True)
         return pos_share * chain, acc, rej, step_total
 
     def telemetry(self) -> Dict[str, float]:
+        out = self._telemetry_base()
+        if self.wear is not None:
+            out.update({
+                "tile_read_chunks_sum": self.wear.reads_sum,
+                "tile_read_chunks_max": self.wear.reads_max,
+                "tiles_tracked": float(self.wear.n_tiles),
+                "prefill_read_tokens": float(self.prefill_read_tokens),
+                "decode_read_tokens": float(self.decode_read_tokens),
+            })
+        return out
+
+    def _telemetry_base(self) -> Dict[str, float]:
         return {
             "attributed_pj": self.attributed_pj,
             "prefill_attributed_pj": self.prefill_attributed_pj,
@@ -507,13 +695,16 @@ class AdmissionCost:
             else 0.0
 
     @classmethod
-    def for_model(cls, params, cfg) -> "AdmissionCost":
+    def for_model(cls, params, cfg, *, wear_weight: float = 0.0,
+                  endurance: Optional[Callable[[], float]] = None
+                  ) -> "AdmissionCost":
         if getattr(cfg, "quant", None) != "timefloats":
-            return cls()
+            return cls(wear_weight=wear_weight, endurance=endurance)
         from repro.hw.mapper import map_params
 
         c = per_token_forward_cost(map_params(params, cfg), cfg)
-        return cls(token_pj=c.energy_pj, decode_token_pj=c.energy_pj)
+        return cls(token_pj=c.energy_pj, decode_token_pj=c.energy_pj,
+                   wear_weight=wear_weight, endurance=endurance)
 
     def prefill_pj(self, tokens: int) -> float:
         """Projected crossbar pJ of prefilling ``tokens`` positions (one

@@ -58,6 +58,7 @@ def report_for_arch(arch: str, geom=None) -> Dict[str, Any]:
         "cells_written_per_update": pl.cells_written_per_update,
         "token_fwd_pj": tok.energy_pj,
         "token_fwd_uj": tok.energy_pj * 1e-6,
+        "token_fwd_chunks": tok.chunks,
         "effective_tops_per_watt": tok.effective_tops_per_watt,
         "hardware_tops_per_watt": tok.hardware_tops_per_watt,
         "tiles_by_rule": pl.by_rule(),
@@ -108,6 +109,7 @@ def mlp_report(geom=None) -> Dict[str, Any]:
         "hardware_tops_per_watt": tops,
         "effective_tops_per_watt": step.read.effective_tops_per_watt,
         "token_fwd_pj": tok.energy_pj,
+        "token_fwd_chunks": tok.chunks,
         "step_energy_uj": step.energy_pj * 1e-6,
         "step_read_uj": step.read.energy_pj * 1e-6,
         "step_write_uj": step.write_energy_pj * 1e-6,
@@ -115,6 +117,70 @@ def mlp_report(geom=None) -> Dict[str, Any]:
         "step_latency_us_lower_bound": step.latency_ns * 1e-3,
         "endurance_steps": int(hw_energy.ENDURANCE_WRITES),
     }
+
+
+def fleet_health_for(row: Dict[str, Any], *, steps_per_hour: float,
+                     qps: float, sigma: float, seed: int) -> Dict[str, Any]:
+    """Time-to-first-tile-death projection for one config under a
+    sustained serve+finetune traffic mix (DESIGN.md §13, the ROADMAP
+    deliverable).
+
+    Writes: every optimizer step programs every placed tile once (the §6
+    uniform aging model), so the per-tile write rate is ``steps_per_hour``
+    regardless of config size. Device-to-device spread
+    (`core.variability.endurance_spread`) scales each tile's write budget;
+    the FIRST tile to die is the one with the minimum multiplier, so
+    ``ttfd_hours = ENDURANCE_WRITES * min(mult) / steps_per_hour``.
+
+    For shape-only 1T configs whose tile count exceeds the sample cap, the
+    sampled min is tightened with the Gaussian order-statistic envelope
+    ``1 - sigma * sqrt(2 ln n)`` — a deterministic lower bound on the
+    expected extreme of n normals, so the projection stays conservative
+    AND finite without materializing 10^7 samples.
+
+    Reads don't kill tiles (crossbar reads are non-destructive) but gauge
+    serve pressure: ``qps * token_fwd_chunks / tiles`` chunk reads per
+    tile per second is reported alongside.
+    """
+    import math
+
+    import zlib
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import variability
+    from repro.hw import energy as hw_energy
+
+    tiles = int(row["tiles"])
+    m = min(tiles, 1 << 15)
+    # fold_in on crc32(arch) — NOT Python's hash(), which is per-process
+    # salted and would break the pinned-seed reproducibility the bench
+    # gate relies on.
+    key = jax.random.fold_in(
+        jax.random.PRNGKey(seed),
+        zlib.crc32(row["arch"].encode()) & 0x7FFFFFFF)
+    mult = variability.endurance_spread(m, sigma, key)
+    worst = float(jnp.min(mult))
+    if tiles > m:
+        worst = min(worst, 1.0 - sigma * math.sqrt(2.0 * math.log(tiles)))
+    worst = max(worst, 0.01)  # endurance_spread's floor, re-applied
+    ttfd_hours = hw_energy.ENDURANCE_WRITES * worst / steps_per_hour
+    read_rate = (qps * float(row.get("token_fwd_chunks", 0)) / tiles
+                 if tiles else 0.0)
+    out = {
+        "arch": row["arch"],
+        "tiles": tiles,
+        "sigma": sigma,
+        "worst_endurance_mult": worst,
+        "write_rate_per_tile_hr": steps_per_hour,
+        "read_chunks_per_tile_s": read_rate,
+        "ttfd_hours": ttfd_hours,
+        "ttfd_years": ttfd_hours / (24 * 365),
+    }
+    assert math.isfinite(ttfd_hours) and ttfd_hours > 0, \
+        f"{row['arch']}: non-finite time-to-first-tile-death {ttfd_hours!r}"
+    return out
 
 
 def fleet_report(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
@@ -142,6 +208,18 @@ def main(argv=None) -> int:
                     help="read-bandwidth copies of every placement")
     ap.add_argument("--tile-cols", type=int, default=128)
     ap.add_argument("--tiles-per-macro", type=int, default=8)
+    ap.add_argument("--fleet-health", action="store_true",
+                    help="project time-to-first-tile-death per config "
+                         "under a sustained serve+finetune mix (§13)")
+    ap.add_argument("--fleet-sigma", type=float, default=0.08,
+                    help="device-to-device endurance spread sigma")
+    ap.add_argument("--fleet-steps-per-hour", type=float, default=180.0,
+                    help="sustained finetune optimizer steps per hour "
+                         "(writes per tile per hour)")
+    ap.add_argument("--fleet-qps", type=float, default=50.0,
+                    help="sustained serve tokens per second (read "
+                         "pressure only — reads are non-destructive)")
+    ap.add_argument("--fleet-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     from repro.configs import ARCHS
@@ -178,6 +256,26 @@ def main(argv=None) -> int:
           f"{fleet['macros']:,d} macros, mean util "
           f"{fleet['mean_utilization']:.1%}, "
           f"{fleet['mapped_params']:,d} mapped params")
+    health_rows = None
+    if args.fleet_health:
+        health_rows = [fleet_health_for(
+            r, steps_per_hour=args.fleet_steps_per_hour, qps=args.fleet_qps,
+            sigma=args.fleet_sigma, seed=args.fleet_seed) for r in rows]
+        hdr2 = (f"\n{'config':22s} {'tiles':>12s} {'worst mult':>10s} "
+                f"{'rd chunks/tile/s':>16s} {'TTFD hours':>14s} "
+                f"{'TTFD years':>10s}")
+        print(hdr2)
+        print("-" * (len(hdr2) - 1))
+        for h in health_rows:
+            print(f"{h['arch']:22s} {h['tiles']:>12,d} "
+                  f"{h['worst_endurance_mult']:>10.4f} "
+                  f"{h['read_chunks_per_tile_s']:>16,.1f} "
+                  f"{h['ttfd_hours']:>14,.0f} {h['ttfd_years']:>10,.1f}")
+        first = min(health_rows, key=lambda h: h["ttfd_hours"])
+        print(f"fleet health: first tile death projected in "
+              f"{first['ttfd_hours']:,.0f} h ({first['ttfd_years']:,.1f} y) "
+              f"on {first['arch']} at {args.fleet_steps_per_hour:.0f} "
+              f"writes/tile/hr, sigma={args.fleet_sigma}")
     if not args.smoke:
         for r in rows:
             if r.get("unmapped"):
@@ -185,8 +283,11 @@ def main(argv=None) -> int:
                 for key, reason in r["unmapped"]:
                     print(f"  {key}: {reason}")
     if args.json:
+        doc = {"rows": rows, "fleet": fleet}
+        if health_rows is not None:
+            doc["fleet_health"] = health_rows
         with open(args.json, "w") as f:
-            json.dump({"rows": rows, "fleet": fleet}, f, indent=1)
+            json.dump(doc, f, indent=1)
         print(f"wrote {args.json}")
     print("hw_report OK")
     return 0

@@ -72,6 +72,20 @@ def main(argv=None):
             f"{k}={v:.6g}" for k, v in sorted(hw.items())
             if isinstance(v, (int, float))))
 
+    health = meta.get("health")
+    if isinstance(health, dict):
+        alerts = health.get("alerts", [])
+        print(f"health: {len(alerts)} alerts over "
+              f"{len(health.get('series', {}))} series")
+        for a in alerts:
+            print(f"  ALERT {a.get('series')} {a.get('direction')} at "
+                  f"sample {a.get('sample')}: value {a.get('value'):.4g} "
+                  f"vs baseline {a.get('baseline'):.4g}")
+        for st in health.get("slos", []):
+            print(f"  SLO {st.get('name')}: burn rate "
+                  f"{st.get('burn_rate'):.2f}, "
+                  f"{'OK' if st.get('ok') else 'VIOLATED'}")
+
     if args.metrics:
         print(f"-- metrics ({args.metrics}) --")
         if args.metrics.endswith(".json"):
@@ -83,7 +97,7 @@ def main(argv=None):
                 sys.stdout.write(f.read())
 
     if args.validate:
-        from repro.obs.export import validate_trace
+        from repro.obs.export import validate_health, validate_trace
 
         names = {ev.get("name", "")
                  for ev in payload.get("traceEvents", [])}
@@ -97,11 +111,22 @@ def main(argv=None):
             require = None
         problems = (validate_trace(payload, require) if require
                     else validate_trace(payload))
+        if isinstance(health, dict):
+            # Health artifact (§13): alerts must reference tracked series;
+            # with a flat .json metrics snapshot the SLO budget math must
+            # re-derive exactly from the exported gauges.
+            mdict = None
+            if args.metrics and args.metrics.endswith(".json"):
+                with open(args.metrics) as f:
+                    mdict = json.load(f)
+            problems += validate_health(payload, metrics=mdict)
         for p in problems:
             print(f"INVALID: {p}", file=sys.stderr)
         if problems:
             return 1
-        print("trace valid: structure + energy folds check out")
+        checked = " + health/slo re-derivation" if isinstance(health, dict) \
+            else ""
+        print(f"trace valid: structure + energy folds{checked} check out")
     return 0
 
 

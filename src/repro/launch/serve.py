@@ -58,14 +58,34 @@ def main(argv=None):
     ap.add_argument("--trace-capacity", type=int, default=1 << 16,
                     help="tracer ring size; overflow voids the trace's "
                          "energy certification")
+    ap.add_argument("--health", action="store_true",
+                    help="streaming drift detectors + SLO burn report "
+                         "(DESIGN §13; fused engine)")
+    ap.add_argument("--slo-ttft-p95", type=float, default=5.0,
+                    help="p95 TTFT objective in seconds")
+    ap.add_argument("--slo-itl-p95", type=float, default=1.0,
+                    help="p95 ITL objective in seconds")
+    ap.add_argument("--inject-lag", default=None, metavar="STEP:SECONDS",
+                    help="sleep SECONDS before every engine step from step "
+                         "STEP on — a synthetic latency regression the "
+                         "drift detector must catch (the CI health smoke)")
+    ap.add_argument("--expect-alert", action="store_true",
+                    help="exit 1 unless at least one health alert fired")
+    ap.add_argument("--wear-weight", type=float, default=0.0,
+                    help="wear-aware admission (§10/§13): surcharge "
+                         "request scores by weight x endurance_frac "
+                         "(requires --sched cost, timefloats quant)")
+    ap.add_argument("--wear-prior-steps", type=int, default=0,
+                    help="pre-age the wear monitor by this many optimizer "
+                         "steps before serving (a fleet mid-life chip)")
     args = ap.parse_args(argv)
 
     import jax
 
     from repro.configs import get_config, reduced_for_smoke
     from repro.models import model as M
-    from repro.obs.export import (validate_trace, write_chrome_trace,
-                                  write_metrics)
+    from repro.obs.export import (validate_health, validate_trace,
+                                  write_chrome_trace, write_metrics)
     from repro.obs.trace import Tracer
     from repro.serve.engine import Engine
     from repro.serve.legacy import LegacyEngine
@@ -81,22 +101,52 @@ def main(argv=None):
 
     params = M.init(cfg, jax.random.PRNGKey(args.seed))
     if args.engine != "fused" and (args.paged or args.chunk_tokens
-                                   or args.sched != "fcfs" or args.spec):
-        print("--paged/--chunk-tokens/--sched/--spec require the fused "
-              "engine", file=sys.stderr)
+                                   or args.sched != "fcfs" or args.spec
+                                   or args.health or args.wear_weight):
+        print("--paged/--chunk-tokens/--sched/--spec/--health/--wear-weight"
+              " require the fused engine", file=sys.stderr)
         return 2
     if args.spec and args.temperature > 0:
         print("--spec requires greedy decoding (temperature 0)",
               file=sys.stderr)
         return 2
+    if args.wear_weight and (args.quant != "timefloats"
+                             or args.sched != "cost"):
+        print("--wear-weight needs the pJ-scored scheduler on the "
+              "timefloats twin (--sched cost --quant timefloats)",
+              file=sys.stderr)
+        return 2
     tracer = Tracer(capacity=args.trace_capacity) if args.trace_out else None
+    wear_endurance = None
+    wear_monitor = None
+    if args.wear_weight:
+        # A live endurance source (DESIGN §13): the per-tile wear monitor,
+        # optionally pre-aged — census-free (serving only needs the
+        # placement's write books, and an empty census costs zeros).
+        from repro.hw.mapper import map_params
+        from repro.hw.schedule import HwMonitor
+
+        wear_monitor = HwMonitor(map_params(params, cfg), events=[])
+        if args.wear_prior_steps:
+            wear_monitor.resume_at(args.wear_prior_steps)
+        wear_endurance = lambda: wear_monitor.summary()["endurance_frac"]
+    hm = None
+    slos = ()
+    if args.health:
+        from repro.obs.health import HealthMonitor, default_serve_slos
+
+        hm = HealthMonitor(tracer=tracer)
+        slos = default_serve_slos(args.slo_ttft_p95, args.slo_itl_p95)
     if args.engine == "fused":
         eng = Engine(params, cfg, slots=args.slots, max_len=args.max_len,
                      seed=args.seed, paged=args.paged,
                      page_size=args.page_size,
                      chunk_tokens=args.chunk_tokens or None,
                      sched=args.sched, tracer=tracer,
-                     spec=(SpecConfig(k=args.spec_k) if args.spec else None))
+                     spec=(SpecConfig(k=args.spec_k) if args.spec else None),
+                     wear_weight=args.wear_weight,
+                     wear_endurance=wear_endurance,
+                     health=hm, slos=slos)
     else:
         eng = LegacyEngine(params, cfg, slots=args.slots,
                            max_len=args.max_len, seed=args.seed,
@@ -121,7 +171,22 @@ def main(argv=None):
                            max_new_tokens=args.max_new,
                            temperature=args.temperature))
     t0 = time.time()
-    done = eng.run_until_drained()
+    if args.inject_lag:
+        # Manual drive with a synthetic latency step: sleeping BETWEEN
+        # engine steps inflates the inter-token latency (the ITL basis is
+        # the previous step's token timestamp), which is exactly the
+        # series the drift detector watches.
+        lag_step, lag_s = args.inject_lag.split(":")
+        lag_step, lag_s = int(lag_step), float(lag_s)
+        done, n_steps = [], 0
+        while (eng.active or eng._chunking or eng.queue) and n_steps < 10_000:
+            if n_steps >= lag_step:
+                time.sleep(lag_s)
+            done.extend(eng.step())
+            n_steps += 1
+        assert n_steps < 10_000, "inject-lag drive never drained"
+    else:
+        done = eng.run_until_drained()
     dt = time.time() - t0
     new_tokens = sum(len(f.tokens) for f in done)
     print(f"served {len(done)}/{args.requests} requests, {new_tokens} tokens "
@@ -180,18 +245,50 @@ def main(argv=None):
                   f"pJ/accepted-token "
                   f"({hw['spec_rejected_pj'] / 1e6:.2f} uJ on rejected "
                   f"positions)")
+    health_doc = None
+    if hm is not None:
+        from repro.obs.health import export_slo_gauges
+
+        rep = hm.report(slos=slos, metrics=eng.metrics)
+        export_slo_gauges(eng.metrics, rep.slos)  # before write_metrics
+        health_doc = rep.to_dict()
+        print(f"health: {len(rep.alerts)} alerts over "
+              f"{len(rep.series)} series "
+              f"({', '.join(sorted(rep.series))})")
+        for a in rep.alerts:
+            print(f"  ALERT {a.series} {a.direction} at sample {a.sample}: "
+                  f"value {a.value:.4g} vs baseline {a.baseline:.4g} "
+                  f"(z={a.z:.1f}, {a.kind} score {a.score:.1f})")
+        for st in rep.slos:
+            print(f"  SLO {st.name}: {st.objective}({st.metric}) "
+                  f"{st.observed:.4g} vs target {st.target:g} — "
+                  f"burn rate {st.burn_rate:.2f}, "
+                  f"budget {st.budget_remaining:+.2f}, "
+                  f"{'OK' if st.ok else 'VIOLATED'}")
+        if args.expect_alert and not rep.alerts:
+            print("expected a health alert; none fired", file=sys.stderr)
+            return 1
+    if wear_monitor is not None:
+        s = wear_monitor.summary()
+        print(f"wear admission: weight {args.wear_weight:g}, endurance "
+              f"frac {s['endurance_frac']:.3g} "
+              f"({int(s['writes_per_tile'])} writes/tile pre-aged)")
+        if args.metrics_out:
+            wear_monitor.export_gauges(eng.metrics)
     if args.metrics_out:
         write_metrics(args.metrics_out, eng.metrics)
         print(f"metrics written to {args.metrics_out}")
     if args.trace_out:
-        payload = write_chrome_trace(
-            args.trace_out, tracer,
-            metadata={"hw": hw, "engine": args.engine,
-                      "arch": args.arch})
+        meta = {"hw": hw, "engine": args.engine, "arch": args.arch}
+        if health_doc is not None:
+            meta["health"] = health_doc
+        payload = write_chrome_trace(args.trace_out, tracer, metadata=meta)
         require = (("engine.step", "prefill", "decode")
                    if args.engine == "legacy" else None)
         problems = (validate_trace(payload, require) if require
                     else validate_trace(payload))
+        if health_doc is not None:
+            problems += validate_health(payload)
         print(f"trace written to {args.trace_out} "
               f"({payload['metadata']['events']} events, "
               f"{payload['metadata']['dropped']} dropped)")

@@ -154,6 +154,59 @@ def validate_trace(payload: Dict,
     return problems
 
 
+def validate_health(payload: Dict,
+                    metrics: Optional[Dict] = None) -> List[str]:
+    """Health-artifact checks (DESIGN.md §13); returns problems
+    (empty = valid). Composable with `validate_trace` — the CI health
+    smoke runs both on the same payload.
+
+    - every ``health.alert`` instant event references a series that the
+      embedded ``metadata.health.series`` map actually tracked;
+    - every alert in the report names a tracked series too;
+    - with the flat metrics dict (``--metrics *.json``): for each
+      exported ``slo_burn_rate{slo=...}`` gauge, its companions
+      ``slo_bad_fraction``/``slo_allowed_fraction`` exist under the same
+      label and the budget math re-derives EXACTLY:
+      ``burn == bad / allowed``.
+    """
+    problems: List[str] = []
+    health = (payload.get("metadata") or {}).get("health")
+    if not isinstance(health, dict):
+        return ["metadata.health missing — not a health artifact"]
+    series = set((health.get("series") or {}).keys())
+    for ev in payload.get("traceEvents", []):
+        if ev.get("ph") == "i" and ev.get("name") == "health.alert":
+            s = ev.get("args", {}).get("series")
+            if s not in series:
+                problems.append(
+                    f"health.alert instant references unknown series {s!r}")
+    for a in health.get("alerts", []):
+        if a.get("series") not in series:
+            problems.append(
+                f"report alert references unknown series "
+                f"{a.get('series')!r}")
+    if metrics is not None:
+        prefix = "slo_burn_rate{"
+        for key, burn in metrics.items():
+            if not key.startswith(prefix):
+                continue
+            label = key[len("slo_burn_rate"):]
+            bad = metrics.get(f"slo_bad_fraction{label}")
+            allowed = metrics.get(f"slo_allowed_fraction{label}")
+            if bad is None or allowed is None:
+                problems.append(
+                    f"slo gauges incomplete for {label}: need "
+                    "slo_bad_fraction + slo_allowed_fraction")
+                continue
+            rederived = bad / allowed if allowed > 0 else 0.0
+            if rederived != burn:
+                problems.append(
+                    f"slo budget math not re-derivable for {label}: "
+                    f"bad/allowed = {rederived!r}, exported burn_rate = "
+                    f"{burn!r}")
+    return problems
+
+
 # ---------------------------------------------------------------------------
 # Prometheus text exposition.
 # ---------------------------------------------------------------------------

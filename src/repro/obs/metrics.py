@@ -13,7 +13,11 @@ enough for latency reporting. `percentile()` uses the same nearest-rank
 rule as `serve.request.percentile` and returns the rank sample's bucket
 UPPER bound, so for any sample ``v`` the estimate ``e`` satisfies
 ``v <= e < v * growth`` (the sorted-list-oracle property tests pin
-exactly this envelope).
+exactly this envelope). The boundaries are special-cased so the
+returned range brackets the data: ``percentile(0)`` is the lowest
+nonempty bucket's LOWER bound (an under-estimate of the min) and
+``percentile(100)`` the highest bucket's upper bound (an over-estimate
+of the max) — ``[p0, p100]`` always contains every sample.
 """
 from __future__ import annotations
 
@@ -112,9 +116,22 @@ class Histogram:
 
     def percentile(self, p: float) -> float:
         """Nearest-rank percentile, returned as the rank sample's bucket
-        upper bound (0.0 for the non-positive bucket; 0.0 on empty)."""
+        upper bound (0.0 for the non-positive bucket; 0.0 on empty).
+
+        Boundaries are bracketing, not rank-based: ``p <= 0`` returns the
+        lowest nonempty bucket's LOWER bound (``<= min``) and ``p >= 100``
+        the highest bucket's upper bound (``>= max``), so ``[p0, p100]``
+        always contains every sample."""
         if self.count == 0:
             return 0.0
+        if p <= 0:
+            if self.nonpos_count or not self.buckets:
+                return 0.0
+            return self.growth ** (min(self.buckets) - 1)
+        if p >= 100:
+            if not self.buckets:
+                return 0.0
+            return self.growth ** max(self.buckets)
         rank = min(self.count - 1, int(round(p / 100 * (self.count - 1))))
         if rank < self.nonpos_count:
             return 0.0

@@ -195,4 +195,6 @@ class Tracer:
 TID_SERVE = 0
 TID_TRAIN = 1
 TID_COMPILE = 2
-THREADS = {TID_SERVE: "serve", TID_TRAIN: "train", TID_COMPILE: "jit"}
+TID_HEALTH = 3
+THREADS = {TID_SERVE: "serve", TID_TRAIN: "train", TID_COMPILE: "jit",
+           TID_HEALTH: "health"}

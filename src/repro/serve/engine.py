@@ -211,7 +211,9 @@ class Engine(HwTelemetryMixin):
                  sched: str = "fcfs",
                  budget: Optional[StepBudget] = None,
                  spec: Optional[SpecConfig] = None,
-                 tracer=None, metrics: Optional[MetricsRegistry] = None):
+                 tracer=None, metrics: Optional[MetricsRegistry] = None,
+                 wear_weight: float = 0.0, wear_endurance=None,
+                 health=None, slos=None):
         self.cfg = cfg
         self.tracer = tracer or NOOP
         self.params = params
@@ -335,7 +337,9 @@ class Engine(HwTelemetryMixin):
                                and budget.prefill_pj is not None):
             from repro.hw.schedule import AdmissionCost
 
-            acost = AdmissionCost.for_model(params, cfg)
+            acost = AdmissionCost.for_model(
+                params, cfg, wear_weight=wear_weight,
+                endurance=wear_endurance)
         else:
             acost = None
         self.sched = Scheduler(sched, cost=acost, budget=budget,
@@ -365,7 +369,21 @@ class Engine(HwTelemetryMixin):
         self._draft_prefill: Dict[int, Callable] = {}
         self._chunk_wave_fns: Optional[Tuple[Callable, Callable]] = None
 
-        self._hw = make_serve_energy_model(cfg, slots, track_energy)
+        self._hw = make_serve_energy_model(cfg, slots, track_energy,
+                                           params=params)
+
+        # Health layer (DESIGN.md §13). ``health`` may also be attached
+        # AFTER construction (post-warmup, for deterministic steady-drain
+        # tests), so the delta trackers below init unconditionally.
+        self.health = health
+        self.slos = tuple(slos) if slos else ()
+        self._h_ttft_count = 0
+        self._h_ttft_sum = 0.0
+        self._h_itl_count = 0
+        self._h_itl_sum = 0.0
+        self._h_pj = 0.0
+        self._h_spec_proposed = 0
+        self._h_spec_accepted = 0
 
         # Metrics registry (always on; §11): pre-bound so hot paths pay a
         # method call, not a registry lookup. Histograms are log-bucketed
@@ -826,7 +844,8 @@ class Engine(HwTelemetryMixin):
             pj = self._hw.prefill_bucket_pj(
                 ("chunk", C, slots, mode), fn_raw, params, self.state,
                 *args)
-            share = self._hw.on_prefill_wave(pj, len(group))
+            share = self._hw.on_prefill_wave(pj, len(group),
+                                             tokens=slots * C)
             sp.set(total_pj=pj, attributed_pj=share * len(group))
             for _slot, req in group:
                 req.energy_pj += share
@@ -872,7 +891,8 @@ class Engine(HwTelemetryMixin):
             pj = self._hw.prefill_bucket_pj(
                 (sb, self.slots, mode), fn_raw, params, self.state,
                 *args)
-            share = self._hw.on_prefill_wave(pj, len(group))
+            share = self._hw.on_prefill_wave(pj, len(group),
+                                             tokens=self.slots * sb)
             sp.set(total_pj=pj, attributed_pj=share * len(group))
             for _, req, _, _ in group:
                 req.energy_pj += share
@@ -910,6 +930,7 @@ class Engine(HwTelemetryMixin):
     def _step_impl(self) -> List[Finished]:
         tr = self.tracer
         params = self.params
+        t_step0 = time.monotonic() if self.health is not None else 0.0
         had_active = bool(self.active)
         freed_slots: List[int] = []
         C = self.chunk_tokens
@@ -1041,13 +1062,15 @@ class Engine(HwTelemetryMixin):
                     emitted = sum(int(got_dec["emit"][s])
                                   for s in self.active)
                     share, acc, rej, step_pj = self._hw.on_spec_step(
-                        n_act, emitted, self.spec.k + 1)
+                        n_act, emitted, self.spec.k + 1,
+                        tokens=self.slots * (self.spec.k + 1))
                     dec_sp.set(attributed_pj=step_pj, accepted_pj=acc,
                                rejected_pj=rej)
                 else:
                     self._hw.observe_decode(step_raw, params, self.state)
                     n_act = len(self.active)
-                    share = self._hw.on_decode_step(n_act)
+                    share = self._hw.on_decode_step(n_act,
+                                                    tokens=self.slots)
                     dec_sp.set(attributed_pj=share * n_act)
                 for req in self.active.values():
                     req.energy_pj += share
@@ -1079,10 +1102,64 @@ class Engine(HwTelemetryMixin):
             self._teardown_slots(freed_slots)
         if self.paged:
             self._m_pool_in_use.set(float(self.pool.pages_in_use))
-        if tr.enabled and self._hw is not None:
-            tr.counter("hw.attributed_pj", self._hw.attributed_pj,
+        if tr.enabled:
+            # Counter lanes (§11/§13): queue depth + occupancy + wear ride
+            # the timeline as Perfetto "C" tracks next to the pJ lane.
+            tr.counter("serve.queue_depth", float(len(self.queue)),
                        tid=TID_SERVE)
+            if self.paged:
+                tr.counter("pool.occupancy", float(self.pool.pages_in_use),
+                           tid=TID_SERVE)
+            if self._hw is not None:
+                tr.counter("hw.attributed_pj", self._hw.attributed_pj,
+                           tid=TID_SERVE)
+                if self._hw.wear is not None:
+                    tr.counter("hw.tile_read_chunks_max",
+                               self._hw.wear.reads_max, tid=TID_SERVE)
+        if self.health is not None:
+            self._observe_health(t_step0)
         return finished
+
+    def _observe_health(self, t0: float) -> None:
+        """Feed the health monitor one step's deltas (DESIGN.md §13).
+
+        ITL/TTFT come from the registry histograms' (sum, count) deltas —
+        per-step means, not raw samples, so the hot path adds no lists.
+        pJ/token divides the step's attributed-pJ delta by its emitted
+        tokens (every emitted token books exactly one TTFT-or-ITL
+        observation, so the token delta is the histogram count delta)."""
+        h = self.health
+        h.observe("serve.step_wall_s", time.monotonic() - t0)
+        h.observe("serve.queue_depth", float(len(self.queue)))
+        d_ttft_n = self._m_ttft.count - self._h_ttft_count
+        d_ttft_s = self._m_ttft.sum - self._h_ttft_sum
+        self._h_ttft_count = self._m_ttft.count
+        self._h_ttft_sum = self._m_ttft.sum
+        if d_ttft_n:
+            h.observe("serve.ttft_s", d_ttft_s / d_ttft_n)
+        d_itl_n = self._m_itl.count - self._h_itl_count
+        d_itl_s = self._m_itl.sum - self._h_itl_sum
+        self._h_itl_count = self._m_itl.count
+        self._h_itl_sum = self._m_itl.sum
+        if d_itl_n:
+            h.observe("serve.itl_s", d_itl_s / d_itl_n)
+        if self.paged:
+            h.observe("serve.pool_occupancy",
+                      float(self.pool.pages_in_use))
+        if self._hw is not None:
+            d_pj = self._hw.attributed_pj - self._h_pj
+            self._h_pj = self._hw.attributed_pj
+            d_tok = d_ttft_n + d_itl_n
+            if d_tok:
+                h.observe("serve.pj_per_token", d_pj / d_tok)
+        if self.spec is not None:
+            d_prop = self._spec_proposed - self._h_spec_proposed
+            d_acc = self._spec_accepted - self._h_spec_accepted
+            self._h_spec_proposed = self._spec_proposed
+            self._h_spec_accepted = self._spec_accepted
+            if d_prop:
+                h.observe("serve.spec_accept", d_acc / d_prop,
+                          direction="down")
 
     def _credit_prefix_hits(self, group, sb: int, pj_exec: float) -> None:
         """Energy-credit rule (DESIGN §8): a prefix hit is charged the
@@ -1314,4 +1391,10 @@ class Engine(HwTelemetryMixin):
                 "spec_tokens_per_step": (self._new_tokens
                                          / max(self.decode_launches, 1)),
             })
+        # Declarative SLOs (§13): only engines CONFIGURED with slos grow
+        # these keys — default engines' stats stay byte-identical.
+        for spec in self.slos:
+            st = spec.evaluate(self.metrics)
+            out[f"slo_{spec.name}_burn_rate"] = st.burn_rate
+            out[f"slo_{spec.name}_ok"] = float(st.ok)
         return out

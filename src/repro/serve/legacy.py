@@ -41,7 +41,8 @@ class LegacyEngine(HwTelemetryMixin):
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_len: int = 512, eos_id: Optional[int] = None,
                  seed: int = 0, track_energy: bool = True,
-                 tracer=None, metrics: Optional[MetricsRegistry] = None):
+                 tracer=None, metrics: Optional[MetricsRegistry] = None,
+                 slos=None):
         self.tracer = tracer or NOOP
         self.cfg = cfg
         self.params = params
@@ -66,7 +67,9 @@ class LegacyEngine(HwTelemetryMixin):
                                     tracer=self.tracer)
         self._prefill1 = counting_jit(self._prefill1_raw, self._traces,
                                       "prefill", tracer=self.tracer)
-        self._hw = make_serve_energy_model(cfg, slots, track_energy)
+        self._hw = make_serve_energy_model(cfg, slots, track_energy,
+                                           params=params)
+        self.slos = tuple(slos) if slos else ()
         # The same core counters the fused engine reports (obs/metrics):
         # the legacy record in BENCH_serve.json carries real stats too.
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -110,7 +113,8 @@ class LegacyEngine(HwTelemetryMixin):
                               tid=TID_SERVE, uid=req.uid, length=s) as sp:
             if self._hw is not None:
                 pj = self._hw.on_prefill(self._hw.prefill_pj(
-                    self._prefill1_raw, self.params, one_cache, batch, s))
+                    self._prefill1_raw, self.params, one_cache, batch, s),
+                    tokens=s)
                 req.energy_pj += pj
                 sp.set(attributed_pj=pj)
             logits, one_cache = self._prefill1(self.params, one_cache,
@@ -162,7 +166,7 @@ class LegacyEngine(HwTelemetryMixin):
                 self._hw.observe_decode(self._decode_raw, self.params,
                                         self.cache, tokens)
                 n_act = len(self.active)
-                share = self._hw.on_decode_step(n_act)
+                share = self._hw.on_decode_step(n_act, tokens=self.slots)
                 dec_sp.set(attributed_pj=share * n_act)
                 for req in self.active.values():
                     req.energy_pj += share
@@ -209,7 +213,7 @@ class LegacyEngine(HwTelemetryMixin):
     def stats(self) -> Dict[str, float]:
         """The fused engine's core counter/latency keys, so benchmark
         records of the legacy arm are no longer empty (``"stats": {}``)."""
-        return {
+        out = {
             "steps": float(self.steps),
             "finished": float(self._finished_count),
             "new_tokens": float(self._new_tokens),
@@ -220,6 +224,11 @@ class LegacyEngine(HwTelemetryMixin):
             "prefill_compiles": float(self._traces.get("prefill", 0)),
             "decode_compiles": float(self._traces.get("decode", 0)),
         }
+        for spec in self.slos:
+            st = spec.evaluate(self.metrics)
+            out[f"slo_{spec.name}_burn_rate"] = st.burn_rate
+            out[f"slo_{spec.name}_ok"] = float(st.ok)
+        return out
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Finished]:
         out: List[Finished] = []

@@ -105,12 +105,20 @@ class HwTelemetryMixin:
         return self._hw.telemetry() if self._hw is not None else None
 
 
-def make_serve_energy_model(cfg, slots: int, track_energy: bool):
+def make_serve_energy_model(cfg, slots: int, track_energy: bool,
+                            params=None):
     """The §6 twin both engines attach the same way: only for timefloats
     quant, only when asked (the import is deferred so quant="none"
-    engines never touch the hw package)."""
+    engines never touch the hw package). With ``params`` the model also
+    carries a per-tile wear book (DESIGN.md §13) keyed by the mapper's
+    placement, so serve reads land per-tile read-chunk attribution."""
     if not (track_energy and cfg.quant == "timefloats"):
         return None
-    from repro.hw.schedule import ServeEnergyModel
+    from repro.hw.schedule import ServeEnergyModel, TileWearBook
 
-    return ServeEnergyModel(slots)
+    wear = None
+    if params is not None:
+        from repro.hw.mapper import map_params
+
+        wear = TileWearBook(map_params(params, cfg), cfg)
+    return ServeEnergyModel(slots, wear=wear)

@@ -63,6 +63,7 @@ def run_loop(
     hw_monitor: Optional[Any] = None,
     tracer=None,
     metrics_registry=None,
+    health: Optional[Any] = None,
 ) -> tuple[TrainState, LoopReport]:
     tr = tracer or NOOP
     m_step_s = m_steps = m_stragglers = m_loss = None
@@ -105,10 +106,26 @@ def run_loop(
         dt = time.monotonic() - t0
         losses.append(loss)
         if hw_monitor is not None:  # §6 twin: energy + write telemetry
+            prev_wpt = getattr(hw_monitor, "writes_per_tile", 0)
             metrics = dict(metrics)
             metrics.update(hw_monitor.on_step())
             if tr.enabled and "hw_step_energy_uj" in metrics:
                 sp.set(step_energy_uj=float(metrics["hw_step_energy_uj"]))
+            if tr.enabled and "hw_endurance_frac" in metrics:
+                # Endurance counter lane (§13): the Perfetto timeline gets
+                # a wear track next to the train.step spans.
+                tr.counter("hw.endurance_frac",
+                           float(metrics["hw_endurance_frac"]),
+                           tid=TID_TRAIN)
+            if health is not None and "hw_writes_per_tile" in metrics:
+                # Per-step write RATE, not the cumulative count — a
+                # cumulative series drifts upward forever and would
+                # always fire.
+                health.observe(
+                    "hw.tile_write_rate",
+                    float(metrics["hw_writes_per_tile"]) - float(prev_wpt))
+        if health is not None:
+            health.observe("train.step_s", dt)
         if tr.enabled:
             sp.set(loss=loss)
         if m_steps is not None:
@@ -146,6 +163,10 @@ def run_loop(
                      step=cfg.total_steps, reason="final"):
             mgr.save(cfg.total_steps, state)
             mgr.wait()
+    if (hw_monitor is not None and metrics_registry is not None
+            and hasattr(hw_monitor, "export_gauges")):
+        # Per-tile wear gauges (§13): labeled per-leaf write/read books.
+        hw_monitor.export_gauges(metrics_registry)
     return state, LoopReport(steps_run=cfg.total_steps - start,
                              final_step=int(state.step), losses=losses,
                              straggler_events=stragglers,

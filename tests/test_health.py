@@ -1,0 +1,248 @@
+"""Hardware-health observability (DESIGN.md §13): streaming drift
+detectors, declarative SLO burn accounting, the health-artifact
+validator, and the engine integration contracts (health on/off token
+bit-identity, steady drains staying quiet)."""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.models import model as M
+from repro.obs.export import chrome_payload, validate_health
+from repro.obs.health import (HealthMonitor, SeriesHealth, SloSpec,
+                              default_serve_slos, export_slo_gauges)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.serve.engine import Engine, Request
+
+
+def small_cfg(arch="qwen3-0.6b"):
+    cfg = reduced_for_smoke(get_config(arch))
+    return dataclasses.replace(cfg, quant="none", n_layers=2)
+
+
+# ---------------------------------------------------------------------------
+# Detector units.
+# ---------------------------------------------------------------------------
+
+
+def test_steady_series_never_alerts():
+    s = SeriesHealth("x")
+    for i in range(200):
+        assert s.observe(1.0 + 0.02 * ((i % 5) - 2)) is None
+    assert s.alert_count == 0
+
+
+def test_level_step_fires_within_a_few_samples():
+    s = SeriesHealth("itl")
+    fired_at = None
+    for i in range(120):
+        v = 1.0 + 0.02 * ((i % 5) - 2) if i < 100 else 3.0
+        a = s.observe(v)
+        if a is not None:
+            fired_at = i
+            assert a.series == "itl"
+            assert a.kind == "cusum"
+            assert a.direction == "up"
+            assert a.value == 3.0
+            break
+    assert fired_at is not None, "3x level step never fired"
+    # CUSUM needs >= ceil(h / (zcap - k)) = 3 anomalous samples, and the
+    # winsorized baseline must not absorb the step before then.
+    assert 102 <= fired_at <= 110
+
+
+def test_downward_drift_needs_direction_down():
+    up = SeriesHealth("accept_up", direction="up")
+    down = SeriesHealth("accept", direction="down")
+    fired = False
+    for i in range(120):
+        v = 0.8 + 0.01 * ((i % 3) - 1) if i < 100 else 0.2
+        assert up.observe(v) is None  # collapse is invisible to "up"
+        a = down.observe(v)
+        if a is not None:
+            fired = True
+            assert a.direction == "down"
+            break
+    assert fired, "accept-rate collapse never fired the down detector"
+
+
+def test_cold_start_spike_is_immune_but_real_step_still_fires():
+    """A warmup outlier (the compile stall) must neither alert nor poison
+    the variance: the median/MAD re-seed at warmup end keeps a later
+    genuine level step detectable."""
+    s = SeriesHealth("step_s")
+    s.observe(0.004)
+    assert s.observe(0.250) is None          # compile stall in warmup
+    fired_at = None
+    for i in range(2, 120):
+        v = 0.004 + 0.0001 * ((i % 4) - 1.5) if i < 60 else 0.055
+        a = s.observe(v)
+        if a is not None:
+            fired_at = i
+            break
+    assert fired_at is not None, "post-spike level step never fired"
+    assert fired_at <= 70
+    # Baseline was re-seeded robustly: the spike didn't drag the mean.
+    assert s.baseline.mean < 0.06
+
+
+def test_monitor_emits_instant_event_and_report():
+    tr = Tracer()
+    hm = HealthMonitor(tracer=tr, warmup=5)
+    for i in range(80):
+        hm.observe("lat", 1.0 if i < 60 else 5.0)
+    assert hm.alerts, "monitor never alerted on a 5x step"
+    payload = chrome_payload(tr)
+    inst = [e for e in payload["traceEvents"]
+            if e.get("ph") == "i" and e.get("name") == "health.alert"]
+    assert len(inst) >= 1
+    assert inst[0]["args"]["series"] == "lat"
+    rep = hm.report()
+    assert "lat" in rep.series
+    assert rep.series["lat"]["alerts"] == float(len(hm.alerts))
+    json.dumps(rep.to_dict())               # artifact-embeddable
+
+
+# ---------------------------------------------------------------------------
+# SLO burn accounting.
+# ---------------------------------------------------------------------------
+
+
+def test_slo_burn_rate_matches_hand_computed_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s")
+    values = [0.1] * 90 + [2.0] * 10       # 10% of samples beyond 1.0
+    for v in values:
+        h.observe(v)
+    st = SloSpec("lat_p95", "lat_s", "p95", 1.0).evaluate(reg)
+    # Bad fraction from the bucket counts: a bucket is bad iff its upper
+    # bound growth**i exceeds the target.
+    good = h.nonpos_count + sum(
+        n for i, n in h.buckets.items() if h.growth ** i <= 1.0)
+    want_bad = (h.count - good) / h.count
+    assert st.bad_fraction == want_bad
+    assert st.allowed_fraction == 1.0 - 0.95
+    assert st.burn_rate == st.bad_fraction / st.allowed_fraction
+    assert st.budget_remaining == 1.0 - st.burn_rate
+    assert not st.ok                        # 10% bad vs 5% allowed
+
+
+def test_slo_ok_when_within_budget_and_empty_metric_untouched():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s")
+    for _ in range(100):
+        h.observe(0.1)
+    st = SloSpec("lat_p95", "lat_s", "p95", 1.0).evaluate(reg)
+    assert st.ok and st.burn_rate == 0.0
+    empty = SloSpec("none_p95", "nope", "p95", 1.0).evaluate(reg)
+    assert empty.ok and empty.burn_rate == 0.0 and empty.observed == 0.0
+
+
+def test_export_slo_gauges_rederivable():
+    reg = MetricsRegistry()
+    h = reg.histogram("serve_itl_s")
+    for v in [0.01] * 95 + [3.0] * 5:
+        h.observe(v)
+    statuses = [s.evaluate(reg) for s in default_serve_slos(itl_p95=1.0)]
+    export_slo_gauges(reg, statuses)
+    snap = reg.to_dict()
+    for st in statuses:
+        lbl = "{slo=%s}" % st.name
+        assert snap[f"slo_burn_rate{lbl}"] == st.burn_rate
+        bad = snap[f"slo_bad_fraction{lbl}"]
+        allowed = snap[f"slo_allowed_fraction{lbl}"]
+        assert (bad / allowed if allowed > 0 else 0.0) == st.burn_rate
+
+
+# ---------------------------------------------------------------------------
+# Artifact validation.
+# ---------------------------------------------------------------------------
+
+
+def _health_payload():
+    tr = Tracer()
+    hm = HealthMonitor(tracer=tr, warmup=5)
+    for i in range(60):
+        hm.observe("serve.itl_s", 0.01 if i < 40 else 0.5)
+    assert hm.alerts
+    reg = MetricsRegistry()
+    h = reg.histogram("serve_itl_s")
+    for v in [0.01] * 95 + [3.0] * 5:
+        h.observe(v)
+    rep = hm.report(slos=default_serve_slos(itl_p95=1.0), metrics=reg)
+    export_slo_gauges(reg, rep.slos)
+    payload = chrome_payload(tr, metadata={"health": rep.to_dict()})
+    return payload, reg.to_dict()
+
+
+def test_validate_health_accepts_real_artifact():
+    payload, metrics = _health_payload()
+    assert validate_health(payload, metrics=metrics) == []
+
+
+def test_validate_health_rejects_unknown_series_and_tampered_burn():
+    payload, metrics = _health_payload()
+    bad = json.loads(json.dumps(payload))
+    bad["metadata"]["health"]["alerts"][0]["series"] = "ghost.series"
+    assert any("ghost.series" in p for p in validate_health(bad))
+
+    tampered = dict(metrics)
+    for k in tampered:
+        if k.startswith("slo_burn_rate{"):
+            tampered[k] = tampered[k] + 0.125
+    probs = validate_health(payload, metrics=tampered)
+    assert any("burn" in p for p in probs)
+
+    assert validate_health({"metadata": {}}) \
+        == ["metadata.health missing — not a health artifact"]
+
+
+# ---------------------------------------------------------------------------
+# Engine integration.
+# ---------------------------------------------------------------------------
+
+
+def _drain(eng, cfg, n=4, max_new=6):
+    rng = np.random.default_rng(7)
+    for i in range(n):
+        eng.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, 5 + i).astype(np.int32),
+            max_new_tokens=max_new))
+    done = eng.run_until_drained()
+    return {f.uid: [int(t) for t in f.tokens] for f in done}
+
+
+def test_engine_health_on_tokens_bit_identical():
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    plain = _drain(Engine(params, cfg, slots=2, max_len=64), cfg)
+    hm = HealthMonitor()
+    monitored = _drain(
+        Engine(params, cfg, slots=2, max_len=64, health=hm,
+               slos=default_serve_slos()), cfg)
+    assert monitored == plain
+    # The monitor actually saw the drain (step wall + queue at minimum).
+    assert hm.series["serve.step_wall_s"].n > 0
+    assert hm.series["serve.queue_depth"].n > 0
+
+
+def test_engine_steady_drain_stays_quiet_and_stats_gain_slo_keys():
+    cfg = small_cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    hm = HealthMonitor()
+    eng = Engine(params, cfg, slots=2, max_len=64, health=hm,
+                 slos=default_serve_slos(ttft_p95=60.0, itl_p95=60.0))
+    _drain(eng, cfg)
+    assert hm.alerts == [], \
+        f"steady drain alerted: {[a.series for a in hm.alerts]}"
+    st = eng.stats()
+    assert st["slo_ttft_p95_burn_rate"] == 0.0
+    assert st["slo_ttft_p95_ok"] == 1.0
+    assert st["slo_itl_p95_ok"] == 1.0
+    # SLO keys are opt-in: a plain engine's stats() is unchanged.
+    assert "slo_ttft_p95_ok" not in Engine(params, cfg, slots=2,
+                                           max_len=64).stats()

@@ -146,9 +146,21 @@ def _check_envelope(values, growth=Histogram.DEFAULT_GROWTH):
         est = h.percentile(p)
         if oracle <= 0:
             assert est == 0.0
+        elif p == 0:
+            # p0 brackets from BELOW (lowest bucket's lower bound): an
+            # under-estimate within one bucket width of the true min (ulp
+            # slack: growth**(i-1) * growth may differ from growth**i in
+            # the last bit for extreme i).
+            assert est < oracle <= est * growth * (1 + 1e-9), \
+                f"p0: oracle {oracle} not in ({est}, {est * growth}]"
         else:
             assert oracle <= est < oracle * growth, \
                 f"p{p}: oracle {oracle} not in [{est / growth}, {est})"
+    # The bracketing contract: [p0, p100] contains every sample.
+    if h.count and min(values) > 0:
+        assert h.percentile(0) <= min(values)
+    if h.count:
+        assert h.percentile(100) >= max(values)
 
 
 def test_histogram_percentile_envelope_deterministic():

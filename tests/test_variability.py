@@ -1,0 +1,66 @@
+"""Process-variability Monte Carlo (paper Sec. III-D) under jit: both
+noise paths, pinned-seed reproducibility, and the endurance-spread
+sampler the fleet time-to-first-tile-death projection builds on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.timefloats import TFConfig
+from repro.core.variability import (dot_product_error_metric,
+                                    endurance_spread, perturb,
+                                    run_monte_carlo)
+
+
+@pytest.fixture(scope="module")
+def metric():
+    key = jax.random.PRNGKey(3)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (4, 8), jnp.float32)
+    w = jax.random.normal(kw, (8, 4), jnp.float32)
+    return dot_product_error_metric(x, w, TFConfig())
+
+
+@pytest.mark.parametrize("path", ["exp", "mant"])
+def test_monte_carlo_runs_jitted_both_paths(metric, path):
+    res = run_monte_carlo(metric, [0.0, 0.05], path=path, trials=3)
+    assert res.sigmas == [0.0, 0.05]
+    assert len(res.mean) == len(res.std) == 2
+    assert all(np.isfinite(res.mean)) and all(np.isfinite(res.std))
+    # sigma=0 is the clean computation: zero relative error, exactly.
+    assert res.mean[0] == 0.0
+    # Injected variability must actually perturb the product.
+    assert res.mean[1] > 0.0
+
+
+def test_monte_carlo_pinned_seed_reproducible(metric):
+    key = jax.random.PRNGKey(11)
+    a = run_monte_carlo(metric, [0.02, 0.1], path="exp", trials=3, key=key)
+    b = run_monte_carlo(metric, [0.02, 0.1], path="exp", trials=3, key=key)
+    assert a.mean == b.mean and a.std == b.std
+    c = run_monte_carlo(metric, [0.02, 0.1], path="exp", trials=3,
+                        key=jax.random.PRNGKey(12))
+    assert c.mean != a.mean  # a different seed draws different noise
+
+
+def test_exponent_path_dominates_mantissa_path(metric):
+    """The paper's headline: exponent-path variability is a power-of-two
+    output error, so at equal sigma it must hurt more."""
+    sig = [0.1]
+    e = run_monte_carlo(metric, sig, path="exp", trials=5)
+    m = run_monte_carlo(metric, sig, path="mant", trials=5)
+    assert e.mean[0] > m.mean[0]
+
+
+def test_endurance_spread_deterministic_floored_and_centered():
+    key = jax.random.PRNGKey(0)
+    a = endurance_spread(1024, 0.08, key)
+    b = endurance_spread(1024, 0.08, key)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (1024,)
+    assert float(a.min()) >= 0.01          # floor: no dead-on-arrival tile
+    assert abs(float(a.mean()) - 1.0) < 0.02
+    # A pathological sigma clips at the floor instead of going negative.
+    wide = endurance_spread(4096, 5.0, key)
+    assert float(wide.min()) == pytest.approx(0.01)
+    assert perturb(jnp.ones((8,)), 0.0, key).tolist() == [1.0] * 8
